@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: flash prefill + split-KV decode partials vs the
+naive jnp references (CPU interpret mode — correctness-path timing only;
+on TPU the same call sites compile the real kernels)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import (decode_attention_reference,
+                               flash_prefill_reference)
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()       # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready() if isinstance(out, (tuple, list)) \
+        else out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (b, s, h, kv, d) in [(1, 256, 8, 8, 64), (2, 512, 8, 2, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        us_kernel = _time(lambda q, k, v: ops.flash_attention(
+            q, k, v, block_q=128, block_k=128), q, k, v)
+        ref = jax.jit(flash_prefill_reference)
+        us_ref = _time(lambda q, k, v: ref(q, k, v), q, k, v)
+        rows.append({"name": f"flash_prefill_b{b}_s{s}_h{h}kv{kv}",
+                     "us_kernel_interp": us_kernel, "us_ref": us_ref})
+    for (b, h, kv, d, l) in [(4, 8, 8, 64, 1024), (8, 8, 2, 64, 2048)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, h, d))
+        k = jax.random.normal(ks[1], (b, l, kv, d))
+        v = jax.random.normal(ks[2], (b, l, kv, d))
+        valid = jnp.ones((b, l), bool)
+        us_kernel = _time(lambda q, k, v, m: ops.decode_attention(
+            q, k, v, m, block_k=256), q, k, v, valid)
+        ref = jax.jit(decode_attention_reference)
+        us_ref = _time(lambda q, k, v, m: ref(q, k, v, m), q, k, v, valid)
+        rows.append({"name": f"split_kv_decode_b{b}_l{l}_h{h}kv{kv}",
+                     "us_kernel_interp": us_kernel, "us_ref": us_ref})
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        print("bench_attention:name,us_per_call_interp,us_per_call_ref")
+        for r in rows:
+            print(f"kernels,{r['name']},{r['us_kernel_interp']:.0f},"
+                  f"{r['us_ref']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

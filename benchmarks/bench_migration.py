@@ -1,0 +1,71 @@
+"""Eq. 4 vs Eq. 11: layer-level vs attention-level migration latency across
+the assigned architectures (+ the measured payload of a real executable
+migration on the reduced models)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro import configs
+from repro.core.analytical import TPU_V5E, attention_migration_time, \
+    layer_migration_time
+from repro.core.layer_migration import PartitionedExecutor
+from repro.models import transformer as T
+
+
+def run():
+    """Paper scenario (Eq. 4 vs Eq. 11): move ONE request's load.
+
+    Layer-level: 2 layers' weights + that request's per-layer KV share.
+    Attention-level: half the KV heads of that single request.
+    Short requests (1k ctx): weights dominate -> T_attn << T_layer (paper's
+    claim).  Long requests (32k ctx): the KV payload grows linearly and the
+    trade-off narrows — which is exactly why Algorithm 1 prices both.
+    """
+    rows = []
+    for name in configs.names(assigned_only=True):
+        cfg = configs.get(name)
+        for ctx in (1024, 32768):
+            t_layer = layer_migration_time(cfg, 2, ctx, TPU_V5E)
+            if cfg.uses_kv_cache:
+                t_attn = attention_migration_time(
+                    cfg, max(cfg.n_kv_heads // 2, 1), ctx, TPU_V5E)
+                ratio = t_layer / max(t_attn, 1e-12)
+            else:
+                t_attn, ratio = float("nan"), float("nan")   # ssm: no KV
+            rows.append({"arch": name, "ctx": ctx,
+                         "t_layer_ms": t_layer * 1e3,
+                         "t_attn_ms": t_attn * 1e3, "ratio": ratio})
+    return rows
+
+
+def run_live(arch="gemma-7b"):
+    """Measure an actual layer migration on the reduced model (payload
+    bytes + host wall time of the executor swap)."""
+    cfg = configs.get(arch).smoke()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    ex = PartitionedExecutor(cfg, params, ["p0"] * cfg.n_layers, hw=TPU_V5E)
+    t0 = time.perf_counter()
+    rec = ex.migrate(0, cfg.n_layers // 2, "p1")
+    wall = time.perf_counter() - t0
+    return {"arch": cfg.name, "payload_mb": rec.payload_bytes / 1e6,
+            "est_ici_ms": rec.est_time_s * 1e3, "host_swap_us": wall * 1e6}
+
+
+def main(csv=True):
+    rows = run()
+    live = run_live()
+    if csv:
+        print("bench_migration:arch,ctx,t_layer_ms,t_attn_ms,"
+              "layer_over_attn")
+        for r in rows:
+            print(f"eq4-11,{r['arch']},{r['ctx']},{r['t_layer_ms']:.3f},"
+                  f"{r['t_attn_ms']:.3f},{r['ratio']:.1f}")
+        print(f"eq4-live,{live['arch']},{live['payload_mb']:.2f}MB,"
+              f"{live['est_ici_ms']:.3f}ms,{live['host_swap_us']:.0f}us")
+    return rows, live
+
+
+if __name__ == "__main__":
+    main()

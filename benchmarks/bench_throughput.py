@@ -1,0 +1,78 @@
+"""Figures 8–11: throughput / total time / latency vs RPS for BanaServe,
+DistServe-like and vLLM-like systems, on Alpaca-like (short) and
+LongBench-like (long) workloads, for LLaMA-13B and OPT-13B.
+
+Discrete-event simulation with §4.3 analytical step costs (CPU container:
+relative orderings are the claim, not absolute tokens/s — see
+EXPERIMENTS.md §Benchmarks)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro import configs
+from repro.serving.cluster import ClusterSim, SimConfig
+from repro.serving.workload import WorkloadConfig
+
+SYSTEMS = ("vllm", "distserve", "banaserve")
+
+
+def run(models=("llama-13b", "opt-13b"),
+        workloads=(("alpaca", (5, 20, 60), 150, 512),
+                   ("longbench", (1, 2, 4), 50, 128)),
+        seeds=(0, 1)) -> List[dict]:
+    rows = []
+    for model_name in models:
+        model = configs.get(model_name)
+        for kind, rps_list, n_req, max_new in workloads:
+            for rps in rps_list:
+                per_sys = {}
+                for system in SYSTEMS:
+                    thpts, ttfts, tpots, totals = [], [], [], []
+                    for seed in seeds:
+                        w = WorkloadConfig(kind=kind, rps=rps,
+                                           n_requests=n_req, seed=seed,
+                                           max_new_tokens=max_new)
+                        t0 = time.perf_counter()
+                        s = ClusterSim(SimConfig.preset(model, system),
+                                       w).run()
+                        thpts.append(s["throughput_tok_s"])
+                        ttfts.append(s["mean_ttft_s"])
+                        tpots.append(s["mean_tpot_s"])
+                        totals.append(s["total_time_s"])
+                    per_sys[system] = {
+                        "throughput": sum(thpts) / len(thpts),
+                        "ttft": sum(ttfts) / len(ttfts),
+                        "tpot": sum(tpots) / len(tpots),
+                        "total": sum(totals) / len(totals),
+                    }
+                for system in SYSTEMS:
+                    r = per_sys[system]
+                    rows.append({
+                        "model": model_name, "workload": kind, "rps": rps,
+                        "system": system, **r,
+                        "speedup_vs_vllm":
+                            r["throughput"] / per_sys["vllm"]["throughput"],
+                        "speedup_vs_distserve":
+                            r["throughput"]
+                            / per_sys["distserve"]["throughput"],
+                    })
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        print("bench_throughput:model,workload,rps,system,"
+              "throughput_tok_s,ttft_s,tpot_s,total_s,x_vllm,x_distserve")
+        for r in rows:
+            print(f"fig8-11,{r['model']},{r['workload']},{r['rps']},"
+                  f"{r['system']},{r['throughput']:.1f},{r['ttft']:.4f},"
+                  f"{r['tpot']:.5f},{r['total']:.1f},"
+                  f"{r['speedup_vs_vllm']:.2f},"
+                  f"{r['speedup_vs_distserve']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Roofline report: reads experiments/dryrun/*.json (produced by
+``repro.launch.dryrun``) and emits the §Roofline table — three terms per
+(arch × shape × mesh), dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio,
+and a one-line "what would move the dominant term" note.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+    PYTHONPATH=src python -m benchmarks.roofline_report --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ADVICE = {
+    ("compute", "train"): "more chips / higher MFU kernels; MoE: tighter "
+                          "capacity factor",
+    ("compute", "prefill"): "flash-kernel MFU; shard seq (context parallel) "
+                            "to add chips",
+    ("compute", "decode"): "batch more requests per step (weights amortize)",
+    ("memory", "train"): "more remat / activation sharding; ZeRO already on",
+    ("memory", "prefill"): "stream KV store writes layer-wise (overlap)",
+    ("memory", "decode"): "int8/fp8 KV cache; GQA head sharding; paged "
+                          "eviction",
+    ("collective", "train"): "overlap grad reduce-scatter with backward; "
+                             "bigger microbatches",
+    ("collective", "prefill"): "re-layout to cut all-gathers between "
+                               "sharded ops",
+    ("collective", "decode"): "replicate small weights; combine partial "
+                              "softmax stats (split-KV) instead of "
+                              "all-gathering KV",
+}
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def load(mesh=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("ok") and (mesh is None or r["mesh"] == mesh):
+            recs.append(r)
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    if not recs:
+        print("no dry-run records found — run repro.launch.dryrun first")
+        return
+    sep = "|" if args.markdown else ","
+    hdr = sep.join(["arch", "shape", "t_compute_ms", "t_memory_ms",
+                    "t_collective_ms", "bottleneck", "useful_flop_ratio",
+                    "resident_GiB", "arena_GiB", "fits16G", "advice"])
+    if args.markdown:
+        print("|" + hdr + "|")
+        print("|" + "|".join(["---"] * 11) + "|")
+    else:
+        print(hdr)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        ro = r["roofline"]
+        advice = ADVICE.get((ro["bottleneck"], kind_of(r["shape"])), "")
+        row = sep.join([
+            r["arch"], r["shape"],
+            f"{ro['t_compute_s'] * 1e3:.2f}",
+            f"{ro['t_memory_s'] * 1e3:.2f}",
+            f"{ro['t_collective_s'] * 1e3:.2f}",
+            ro["bottleneck"],
+            f"{ro['useful_flop_ratio']:.3f}",
+            f"{r.get('resident_bytes_per_chip', 0) / 2**30:.2f}",
+            f"{(r['bytes_per_chip'] - r.get('resident_bytes_per_chip', 0)) / 2**30:.2f}",
+            str(r["fits_16g"]),
+            advice,
+        ])
+        print(("|" + row + "|") if args.markdown else row)
+
+
+if __name__ == "__main__":
+    main()

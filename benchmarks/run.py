@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Each module prints ``<figure>,<name>,...`` CSV rows; the roofline/dry-run
+tables live in experiments/dryrun (produced by repro.launch.dryrun) and are
+summarized by benchmarks/roofline_report.py.
+"""
+import argparse
+import sys
+import time
+
+from . import (bench_attention, bench_migration, bench_pipeline,
+               bench_scheduler, bench_throughput, bench_utilization)
+
+ALL = {
+    "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
+    "migration": bench_migration,     # Eq. 4 / Eq. 11
+    "scheduler": bench_scheduler,     # Fig. 2a
+    "utilization": bench_utilization, # Fig. 2b
+    "attention": bench_attention,     # kernels
+    "throughput": bench_throughput,   # Fig. 8-11
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(ALL))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(ALL)
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===")
+        ALL[name].main()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

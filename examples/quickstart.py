@@ -1,0 +1,74 @@
+"""Quickstart: the BanaServe stack in one minute, on CPU.
+
+1. Build a tiny dense model.
+2. Train it for 30 steps (loss goes down).
+3. Serve two requests through the disaggregated path: prefill engine ->
+   Global KV Cache Store -> decode engine; the second request reuses the
+   first one's prefix KV (incremental prefill).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kvstore import GlobalKVStore
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.serving.engine import DecodeEngine, EngineConfig, PrefillEngine
+from repro.serving.request import Request
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step
+
+
+def main():
+    cfg = ModelConfig(name="tiny", family=Family.DENSE, n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=256)
+    key = jax.random.PRNGKey(0)
+    params = T.init(cfg, key)
+    print(f"model: {cfg.name}, {cfg.param_count():,} params")
+
+    # -- 2. train ---------------------------------------------------------
+    step = jax.jit(make_train_step(
+        cfg, O.AdamWConfig(lr=1e-3, warmup_steps=3, total_steps=30)))
+    ostate = O.init_state(params)
+    data = iter(SyntheticTokens(DataConfig(vocab_size=256, seq_len=32,
+                                           global_batch=8)))
+    for i in range(30):
+        batch = {"tokens": jnp.asarray(next(data)["tokens"])}
+        params, ostate, m = step(params, ostate, batch)
+        if i % 10 == 0 or i == 29:
+            print(f"  train step {i:2d}  loss {float(m['loss']):.3f}")
+
+    # -- 3. serve ----------------------------------------------------------
+    store = GlobalKVStore(block_size=8)
+    ecfg = EngineConfig(max_len=128, max_batch=4, block_size=8)
+    pe = PrefillEngine(cfg, params, ecfg, store)
+    de = DecodeEngine(cfg, params, ecfg)
+    rng = np.random.default_rng(0)
+    shared_prefix = rng.integers(0, 256, 24, dtype=np.int32)
+    for rid in range(2):
+        prompt = np.concatenate(
+            [shared_prefix, rng.integers(0, 256, 8, dtype=np.int32)])
+        req = Request(rid=rid, arrival=0.0, prompt=prompt, max_new_tokens=8)
+        state, logits = pe.run(req)
+        de.insert(req, state, int(jnp.argmax(logits)))
+        while de.active:
+            de.step()
+        print(f"  request {rid}: cached_prefix={req.cached_tokens} tokens, "
+              f"generated {req.generated}")
+    print(f"global KV store: {len(store)} blocks, "
+          f"hit rate {store.stats.hit_rate:.2f}")
+    assert store.stats.hit_rate > 0, "second request should hit the store"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

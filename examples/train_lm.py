@@ -1,0 +1,65 @@
+"""Train a reduced xLSTM on the synthetic LM task with checkpointing —
+exercises the full training substrate (data pipeline, AdamW + schedule,
+microbatched gradient accumulation, checkpoint save/restore).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+import argparse
+import pathlib
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import transformer as T
+from repro.training import checkpoint as C
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--arch", default="xlstm-350m")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).smoke()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    print(f"training {cfg.name}: {cfg.param_count():,} params")
+    ocfg = O.AdamWConfig(lr=2e-3, warmup_steps=args.steps // 10,
+                         total_steps=args.steps)
+    ostate = O.init_state(params)
+    step = jax.jit(make_train_step(cfg, ocfg, num_microbatches=2))
+    data = iter(SyntheticTokens(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=0)))
+
+    t0 = time.time()
+    first = last = None
+    for i in range(1, args.steps + 1):
+        batch = {"tokens": jnp.asarray(next(data)["tokens"])}
+        params, ostate, m = step(params, ostate, batch)
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if i % 20 == 0 or i == 1:
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({(time.time() - t0) / i * 1e3:.0f} ms/step)")
+
+    with tempfile.TemporaryDirectory() as d:
+        C.save(d, params, step=args.steps, meta={"arch": cfg.name})
+        restored, st = C.restore(d, params)
+        print(f"checkpoint round-trip at step {st}: OK")
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

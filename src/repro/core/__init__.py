@@ -1,0 +1,15 @@
+"""BanaServe core: the paper's contribution as composable JAX modules.
+
+- ``kvstore``            Global KV Cache Store (§4.2)
+- ``pipeline``           layer-wise overlapped transmission model (Eq. 12–17)
+- ``attention_offload``  attention-level migration / split-KV softmax (Eq. 6–10)
+- ``layer_migration``    layer-level weight+state migration (Eq. 3–5)
+- ``migration``          Algorithm 1 — adaptive module migration
+- ``scheduling``         Algorithm 2 — load-aware request scheduling
+- ``analytical``         §4.3 performance model (Eq. 18–31)
+"""
+from . import (analytical, attention_offload, kvstore, layer_migration,
+               migration, pipeline, scheduling)
+
+__all__ = ["analytical", "attention_offload", "kvstore", "layer_migration",
+           "migration", "pipeline", "scheduling"]

@@ -1,0 +1,179 @@
+"""§4.3 analytical performance model for PD disaggregation.
+
+Implements Eq. 18–31 plus the hardware profiles used to turn architecture
+configs into per-stage compute/memory/latency estimates.  This model drives
+(a) the discrete-event cluster simulator's step costs, (b) Algorithm 1's
+benefit/cost evaluation, and (c) the roofline report's MODEL_FLOPS terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    peak_flops: float            # FLOP/s (bf16)
+    hbm_bw: float                # bytes/s
+    hbm_bytes: int
+    net_bw: float                # inter-device bytes/s (NVLink/ICI)
+    host_bw: float               # device<->host bytes/s (PCIe/DMA)
+
+    @property
+    def ridge_intensity(self) -> float:
+        return self.peak_flops / self.hbm_bw
+
+
+# TPU v5e per the task hardware constants; A100 for paper-setting sanity.
+TPU_V5E = HardwareProfile("tpu_v5e", 197e12, 819e9, 16 << 30, 50e9, 25e9)
+A100_80G = HardwareProfile("a100_80g", 312e12, 2039e9, 80 << 30, 300e9, 25e9)
+
+
+# ---------------------------------------------------------------------------
+# Stage cost models
+# ---------------------------------------------------------------------------
+
+def prefill_flops(cfg: ModelConfig, seq_len: int, batch: int = 1) -> float:
+    """~2·N_active FLOPs/token for matmuls + attention quadratic term."""
+    n = cfg.active_param_count()
+    flops = 2.0 * n * seq_len * batch
+    # attention score/value FLOPs: 2 * 2 * S^2 * H * Dh per layer (causal /2)
+    kv_len = cfg.kv_cache_len(seq_len)
+    n_attn = sum(1 for b in cfg.blocks() if b.value in ("attention", "local_attn"))
+    flops += batch * n_attn * 2 * 2 * seq_len * min(seq_len, kv_len) \
+        * cfg.n_heads * cfg.head_dim * 0.5
+    return flops
+
+
+def decode_flops_per_token(cfg: ModelConfig, context: int, batch: int = 1) -> float:
+    n = cfg.active_param_count()
+    flops = 2.0 * n * batch
+    kv_len = cfg.kv_cache_len(context)
+    n_attn = sum(1 for b in cfg.blocks() if b.value in ("attention", "local_attn"))
+    flops += batch * n_attn * 2 * 2 * kv_len * cfg.n_heads * cfg.head_dim
+    return flops
+
+
+def decode_bytes_per_token(cfg: ModelConfig, context: int, batch: int = 1,
+                           dtype_bytes: int = 2) -> float:
+    """Decode is memory-bound: weights read once per step + KV read."""
+    weight_bytes = cfg.active_param_count() * dtype_bytes
+    kv = cfg.kv_bytes_per_token(dtype_bytes) * cfg.kv_cache_len(context) * batch
+    return weight_bytes + kv
+
+
+def prefill_time(cfg: ModelConfig, seq_len: int, hw: HardwareProfile,
+                 batch: int = 1, n_chips: int = 1, efficiency: float = 0.5
+                 ) -> float:
+    """T_p of Eq. 20 (compute-bound stage)."""
+    return prefill_flops(cfg, seq_len, batch) / (
+        hw.peak_flops * n_chips * efficiency)
+
+
+def decode_time_per_token(cfg: ModelConfig, context: int, hw: HardwareProfile,
+                          batch: int = 1, n_chips: int = 1,
+                          efficiency: float = 0.8) -> float:
+    """T_d + T_m of Eq. 22 (memory-bound stage): max of roofline terms."""
+    t_comp = decode_flops_per_token(cfg, context, batch) / (
+        hw.peak_flops * n_chips)
+    t_mem = decode_bytes_per_token(cfg, context, batch) / (
+        hw.hbm_bw * n_chips * efficiency)
+    return max(t_comp, t_mem)
+
+
+def kv_transfer_time(cfg: ModelConfig, n_tokens: int, hw: HardwareProfile,
+                     dtype_bytes: int = 2) -> float:
+    """T_x of Eq. 21: move a request's KV prefill→decode over the fabric."""
+    return cfg.kv_bytes_per_token(dtype_bytes) * n_tokens / hw.net_bw
+
+
+# ---------------------------------------------------------------------------
+# Eq. 20/22/30: latency + throughput
+# ---------------------------------------------------------------------------
+
+def ttft(t_prefill: float, t_kv_transfer: float, t_queue: float) -> float:
+    return t_prefill + t_kv_transfer + t_queue            # Eq. 20/21
+
+
+def tpot(t_decode: float, t_cache: float = 0.0, t_stall: float = 0.0) -> float:
+    return t_decode + t_cache + t_stall                    # Eq. 22
+
+
+def throughput(n_requests: int, l_out: float, t_ttft: float,
+               t_tpot: float) -> float:
+    return n_requests * l_out / (t_ttft + l_out * t_tpot)  # Eq. 30
+
+
+# ---------------------------------------------------------------------------
+# Eq. 23–27: per-instance footprints and utilization
+# ---------------------------------------------------------------------------
+
+def memory_footprint(cfg: ModelConfig, n_layers_local: int, kv_tokens: int,
+                     dtype_bytes: int = 2, base_bytes: int = 1 << 30) -> float:
+    """Eq. 23/25: M0 + n·M_l + K."""
+    m_layer = cfg.param_count() / max(cfg.n_layers, 1) * dtype_bytes
+    kv = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens \
+        * n_layers_local / max(cfg.n_layers, 1)
+    return base_bytes + n_layers_local * m_layer + kv
+
+
+def compute_demand(cfg: ModelConfig, n_layers_local: int, batch: int,
+                   tokens: int) -> float:
+    """Eq. 24/26: n·C_l·B·L (FLOPs)."""
+    c_layer = 2.0 * cfg.active_param_count() / max(cfg.n_layers, 1)
+    return n_layers_local * c_layer * batch * tokens
+
+
+def utilization(comp_flops_per_s: float, mem_bytes: float,
+                hw: HardwareProfile, n_chips: int = 1) -> float:
+    """Eq. 32: U = C/C_max + M/M_max ∈ [0, 2]."""
+    u_c = min(comp_flops_per_s / (hw.peak_flops * n_chips), 1.0)
+    u_m = min(mem_bytes / (hw.hbm_bytes * n_chips), 1.0)
+    return u_c + u_m
+
+
+# ---------------------------------------------------------------------------
+# Eq. 28: migration cost;  Eq. 4/11 latency models
+# ---------------------------------------------------------------------------
+
+def layer_migration_time(cfg: ModelConfig, n_layers: int, kv_tokens: int,
+                         hw: HardwareProfile, dtype_bytes: int = 2,
+                         t_sync: float = 2e-3) -> float:
+    """Eq. 3/4: (S_w + S_kv)/B_net + T_sync."""
+    s_w = cfg.param_count() / max(cfg.n_layers, 1) * n_layers * dtype_bytes
+    s_kv = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens \
+        * n_layers / max(cfg.n_layers, 1)
+    return (s_w + s_kv) / hw.net_bw + t_sync
+
+
+def attention_migration_time(cfg: ModelConfig, n_heads: int, kv_tokens: int,
+                             hw: HardwareProfile, dtype_bytes: int = 2
+                             ) -> float:
+    """Eq. 11: S_kv/B_net — only the migrated heads' KV moves, no weights."""
+    frac = n_heads / max(cfg.n_kv_heads, 1)
+    s_kv = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens * frac
+    return s_kv / hw.net_bw
+
+
+def migration_cost(n_modules: int, t_transfer: float, t_sync: float = 2e-3,
+                   t_realloc: float = 1e-3) -> float:
+    return n_modules * (t_transfer + t_sync + t_realloc)   # Eq. 28
+
+
+# ---------------------------------------------------------------------------
+# Eq. 18/31: the weighted objective
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveWeights:
+    alpha: float = 1.0      # utilization
+    beta: float = 1.0       # latency (s)
+    gamma: float = 1e-3     # throughput (tok/s)
+
+
+def objective(u_avg: float, t_avg_latency: float, thpt: float,
+              w: ObjectiveWeights = ObjectiveWeights()) -> float:
+    return w.alpha * u_avg - w.beta * t_avg_latency + w.gamma * thpt

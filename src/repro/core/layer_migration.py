@@ -1,0 +1,163 @@
+"""Layer-level migration (§4.1, Fig. 3) — executable form.
+
+A model is partitioned layer-wise across *instances* (mesh slices / devices;
+logical executors on this CPU container).  Migration moves a contiguous span
+of layers — weights ``W_l`` **and** serving state ``KV_l`` — to another
+instance and updates the routing table; execution resumes with identical
+semantics (Eq. 5), which the tests assert bit-for-bit against the monolithic
+stack.
+
+Costs are charged with the Eq. 4 model (weights dominate: S_w >> S_kv).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import layers as L
+from ..models import transformer as T
+from ..models.config import BlockKind, ModelConfig
+from .analytical import HardwareProfile, layer_migration_time
+
+
+# ---------------------------------------------------------------------------
+# Grouped params/cache <-> flat per-layer lists
+# ---------------------------------------------------------------------------
+
+def unstack_layers(cfg: ModelConfig, params: Dict[str, Any]
+                   ) -> List[Tuple[BlockKind, Dict[str, Any]]]:
+    """Grouped/stacked params -> ordered per-layer list (kind, params)."""
+    pat, n_rep, rem = T._group_shapes(cfg)
+    out: List[Tuple[BlockKind, Dict[str, Any]]] = []
+    for r in range(n_rep):
+        for g, kind in enumerate(pat):
+            lp = jax.tree.map(lambda a: a[r], params["groups"][g])
+            out.append((kind, lp))
+    for i in range(rem):
+        out.append((pat[i], params["rem"][i]))
+    return out
+
+
+def unstack_cache(cfg: ModelConfig, cache: Dict[str, Any]
+                  ) -> List[Dict[str, Any]]:
+    pat, n_rep, rem = T._group_shapes(cfg)
+    out = []
+    for r in range(n_rep):
+        for g in range(len(pat)):
+            out.append(jax.tree.map(lambda a: a[r], cache["groups"][g]))
+    for i in range(rem):
+        out.append(cache["rem"][i])
+    return out
+
+
+def layer_state_bytes(state: Dict[str, Any]) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(state))
+
+
+def layer_param_bytes(p: Dict[str, Any]) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# Partitioned executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MigrationRecord:
+    span: Tuple[int, int]
+    src: str
+    dst: str
+    payload_bytes: int
+    est_time_s: float
+
+
+class PartitionedExecutor:
+    """Runs a model whose layers live on named instances, layer-sequentially,
+    with activation hand-off at instance boundaries (pipeline order).
+
+    ``assignment[i]`` names the instance owning layer i.  On real hardware
+    each instance is a mesh slice and hand-off is a device_put; here the
+    instances are logical and the hand-off cost is charged analytically.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Dict[str, Any],
+                 assignment: Sequence[str],
+                 hw: Optional[HardwareProfile] = None):
+        assert len(assignment) == cfg.n_layers
+        self.cfg = cfg
+        self.embed = params["embed"]
+        self.out_norm = params["out_norm"]
+        self.unembed = params.get("unembed")
+        self.layers = unstack_layers(cfg, params)
+        self.assignment = list(assignment)
+        self.hw = hw
+        self.migrations: List[MigrationRecord] = []
+
+    # -- execution -------------------------------------------------------
+    def forward(self, tokens: jax.Array,
+                states: Optional[List[Dict[str, Any]]] = None,
+                mode: str = "train",
+                frames: Optional[jax.Array] = None,
+                lengths: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Optional[List[Dict[str, Any]]],
+                           Dict[str, float]]:
+        """Returns (logits, new_states, per-instance FLOP shares)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        if lengths is not None:
+            positions = lengths[:, None] + \
+                jnp.arange(s, dtype=jnp.int32)[None, :]
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+        x = self.embed[tokens].astype(self.embed.dtype)
+        if cfg.family.value == "hybrid":
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        new_states: List[Dict[str, Any]] = []
+        shares: Dict[str, float] = {}
+        per_layer_flops = 2.0 * cfg.active_param_count() / max(cfg.n_layers, 1) \
+            * b * s
+        for i, (kind, lp) in enumerate(self.layers):
+            st = states[i] if states is not None else None
+            x, ns, _ = T._apply_block(
+                cfg, kind, lp, x, positions=positions,
+                state=st if st != {} else st, mode=mode, frames=frames,
+                moe_impl="sorted", moe_cf=None)
+            new_states.append(ns if ns is not None else {})
+            inst = self.assignment[i]
+            shares[inst] = shares.get(inst, 0.0) + per_layer_flops
+        x = L.rms_norm(x, self.out_norm, cfg.rms_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", x, self.embed)
+        else:
+            logits = jnp.einsum("...d,dv->...v", x, self.unembed)
+        return logits, (new_states if states is not None else None), shares
+
+    # -- migration -------------------------------------------------------
+    def migrate(self, start: int, end: int, dst: str,
+                states: Optional[List[Dict[str, Any]]] = None
+                ) -> MigrationRecord:
+        """Move layers [start, end) (+ their serving state) to ``dst``."""
+        src = self.assignment[start]
+        payload = sum(layer_param_bytes(self.layers[i][1])
+                      for i in range(start, end))
+        kv_tokens = 0
+        if states is not None:
+            payload += sum(layer_state_bytes(states[i])
+                           for i in range(start, end))
+        est = 0.0
+        if self.hw is not None:
+            est = layer_migration_time(self.cfg, end - start, kv_tokens,
+                                       self.hw)
+            est = max(est, payload / self.hw.net_bw + 2e-3)
+        for i in range(start, end):
+            self.assignment[i] = dst
+        rec = MigrationRecord((start, end), src, dst, payload, est)
+        self.migrations.append(rec)
+        return rec
+
+    def layers_on(self, inst: str) -> List[int]:
+        return [i for i, a in enumerate(self.assignment) if a == inst]

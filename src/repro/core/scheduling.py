@@ -1,0 +1,111 @@
+"""Algorithm 2 — Load-aware Request Scheduling (§4.4.2) and the prefix-cache-
+aware baseline router it replaces (Fig. 2a).
+
+With the Global KV Cache Store, every prefill instance sees the same prefix
+cache, so the router ranks instances purely by (load, queue length):
+O(|P| log |P| + |Q|) per cycle (Eq. 38).
+
+``PrefixAwareRouter`` reproduces the baseline pathology: it weighs cache hit
+rate into the dispatch decision, which concentrates hot prefixes on few
+instances (the positive-feedback skew of Fig. 2a) — benchmarked in
+benchmarks/bench_scheduler.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class InstanceLoad:
+    name: str
+    load: float                # U_p = C/C_max + M/M_max  (Eq. 37)
+    queue_len: int
+    # baseline-router signal only:
+    cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
+        default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestInfo:
+    rid: int
+    prompt_len: int
+    est_load: float            # EstimateLoad(req)
+    prefix_key: Optional[bytes] = None   # leading block hash (for baseline)
+
+
+class Router(Protocol):
+    def dispatch(self, reqs: Sequence[RequestInfo],
+                 instances: List[InstanceLoad]) -> Dict[int, str]: ...
+
+
+class LoadAwareRouter:
+    """Algorithm 2: least-loaded first; past δ_L, lowest queue length."""
+
+    def __init__(self, load_threshold: float = 1.6):
+        self.delta_l = load_threshold
+
+    def dispatch(self, reqs: Sequence[RequestInfo],
+                 instances: List[InstanceLoad]) -> Dict[int, str]:
+        plan: Dict[int, str] = {}
+        # Step 2: sort by (load, queue)
+        cands = sorted(instances, key=lambda p: (p.load, p.queue_len))
+        for req in reqs:                      # Step 3: dispatch loop
+            cands.sort(key=lambda p: (p.load, p.queue_len))
+            target = cands[0]
+            if target.load >= self.delta_l:
+                target = min(cands, key=lambda p: p.queue_len)
+            plan[req.rid] = target.name
+            target.load += req.est_load
+            target.queue_len += 1
+        return plan
+
+
+class PrefixAwareRouter:
+    """Baseline (Fig. 2a): score = hit_bonus·cached_fraction − load.
+
+    Replicates the positive-feedback dynamic: instances holding a popular
+    prefix win its future requests, growing their cache share further."""
+
+    def __init__(self, hit_bonus: float = 2.0):
+        self.hit_bonus = hit_bonus
+
+    def dispatch(self, reqs: Sequence[RequestInfo],
+                 instances: List[InstanceLoad]) -> Dict[int, str]:
+        plan: Dict[int, str] = {}
+        for req in reqs:
+            def score(p: InstanceLoad) -> float:
+                hit = 0.0
+                if req.prefix_key is not None and \
+                        req.prefix_key in p.cached_prefix_tokens:
+                    hit = p.cached_prefix_tokens[req.prefix_key] / max(
+                        req.prompt_len, 1)
+                return self.hit_bonus * hit - p.load
+            target = max(instances, key=score)
+            plan[req.rid] = target.name
+            target.load += req.est_load
+            target.queue_len += 1
+            if req.prefix_key is not None:       # cache grows where routed
+                target.cached_prefix_tokens[req.prefix_key] = req.prompt_len
+        return plan
+
+
+class RoundRobinRouter:
+    def __init__(self):
+        self._i = 0
+
+    def dispatch(self, reqs, instances):
+        plan = {}
+        for req in reqs:
+            target = instances[self._i % len(instances)]
+            self._i += 1
+            plan[req.rid] = target.name
+            target.load += req.est_load
+            target.queue_len += 1
+        return plan
+
+
+def load_skew(instances: Sequence[InstanceLoad]) -> float:
+    """max−min utilization gap — the imbalance metric of Fig. 2a."""
+    loads = [p.load for p in instances]
+    return max(loads) - min(loads)

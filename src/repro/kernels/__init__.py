@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+- ``flash_prefill``    blocked causal/sliding-window GQA flash attention
+- ``split_kv_decode``  decode attention emitting per-block partial softmax
+                       stats — the attention-level-migration primitive
+- ``ops``              jit'd public wrappers (padding, interpret fallback)
+- ``ref``              pure-jnp oracles the tests sweep against
+"""
+from . import ops, ref

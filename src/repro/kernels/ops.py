@@ -1,0 +1,95 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, the CPU-interpret fallback (this
+container validates kernels with interpret=True; on TPU the same call sites
+compile the real kernels), and the partial-combine epilogue for decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.attention_offload import combine_partials
+from .flash_prefill import flash_prefill
+from .split_kv_decode import split_kv_decode_partials
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: Optional[int] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Causal (sliding-window) GQA flash attention.
+
+    q: (B, S, H, D); k, v: (B, S, KV, D).  Returns (B, S, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    pow2 = 1 << max((s - 1).bit_length(), 3)
+    bq = min(block_q, pow2)
+    qp = _pad_to(q, 1, bq)
+    tgt = qp.shape[1]
+    bk = min(block_k, tgt)
+    kp = _pad_to(_pad_to(k, 1, tgt), 1, bk)   # padded keys are causal-masked
+    vp = _pad_to(_pad_to(v, 1, tgt), 1, bk)
+    out = flash_prefill(qp, kp, vp, window=window, block_q=bq,
+                        block_k=bk, interpret=interpret)
+    return out[:, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, *,
+                     block_k: int = 512,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Single-token decode attention over a (ring or linear) KV cache.
+
+    q: (B, H, D); k, v: (B, L, KV, D); valid: (B, L) bool.
+    Kernel emits per-block partials; the exact softmax is reconstructed via
+    combine_partials (Eq. 8–10)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bk = min(block_k, k.shape[1])
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    validp = _pad_to(valid, 1, bk, value=False)
+    o, l, m = split_kv_decode_partials(q, kp, vp, validp, block_k=bk,
+                                       interpret=interpret)
+    n_blk = o.shape[1]
+    out = combine_partials([o[:, j] for j in range(n_blk)],
+                           [l[:, j] for j in range(n_blk)],
+                           [m[:, j] for j in range(n_blk)])
+    return out.astype(q.dtype)
+
+
+def decode_partials(q: jax.Array, k: jax.Array, v: jax.Array,
+                    valid: jax.Array, *, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """Raw partials — what attention-level migration ships across devices."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bk = min(block_k, k.shape[1])
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    validp = _pad_to(valid, 1, bk, value=False)
+    return split_kv_decode_partials(q, kp, vp, validp, block_k=bk,
+                                    interpret=interpret)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests sweep against (shapes, dtypes,
+windows, GQA ratios).  They deliberately use the plainest possible jnp
+formulation — O(S·L) materialized scores — so correctness is obvious.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            window: Optional[int] = None,
+                            scale: Optional[float] = None) -> jax.Array:
+    """Causal (optionally sliding-window) GQA attention.
+
+    q: (B, S, H, D); k, v: (B, L, KV, D) with positions 0..L-1 and the
+    queries occupying positions L-S..L-1 (prefill: S == L).
+    Returns (B, S, H, D) in q's dtype.
+    """
+    b, s, h, d = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos_q = jnp.arange(l - s, l)[:, None]
+    pos_k = jnp.arange(l)[None, :]
+    mask = pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    o = jnp.einsum("bkgsl,blkd->bskgd", probs, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_partials_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                              valid: jax.Array, n_blocks: int, *,
+                              scale: Optional[float] = None
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-KV-block partial softmax stats (the Eq. 6–10 primitive).
+
+    q: (B, H, D); k, v: (B, L, KV, D); valid: (B, L) bool.
+    L must divide into n_blocks.  Returns
+    o: (B, J, H, D) f32, l: (B, J, H) f32, m: (B, J, H) f32.
+    """
+    b, h, d = q.shape
+    l_tot, kv = k.shape[1], k.shape[2]
+    bk = l_tot // n_blocks
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    os_, ls_, ms_ = [], [], []
+    for j in range(n_blocks):
+        kj = k[:, j * bk:(j + 1) * bk]
+        vj = v[:, j * bk:(j + 1) * bk]
+        mj = valid[:, j * bk:(j + 1) * bk]
+        s = jnp.einsum("bkgd,blkd->bkgl", qg.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        s = jnp.where(mj[:, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+        lsum = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgl,blkd->bkgd", p, vj.astype(jnp.float32))
+        os_.append(o.reshape(b, h, d))
+        ls_.append(lsum.reshape(b, h))
+        ms_.append(m.reshape(b, h))
+    return (jnp.stack(os_, axis=1), jnp.stack(ls_, axis=1),
+            jnp.stack(ms_, axis=1))
+
+
+def decode_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                               valid: jax.Array, *,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Exact decode attention (single softmax over the whole cache)."""
+    b, h, d = q.shape
+    kv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

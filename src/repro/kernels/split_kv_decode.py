@@ -1,0 +1,102 @@
+"""Split-KV decode attention Pallas TPU kernel.
+
+The kernelized form of the paper's attention-level migration primitive
+(Eq. 6–10 / Fig. 4): each grid step computes attention of the single decode
+query against ONE KV block and emits the partial softmax statistics
+(o, l, m).  The exact global softmax is reconstructed by
+``core.attention_offload.combine_partials`` — locally across the block axis
+(flash-decoding) or across devices (attention migration / context
+parallelism), where only the tiny (o, l, m) triple crosses the interconnect.
+
+Grid: (B, n_kv_blocks).  Per-step VMEM: q (H, D) + k/v (bk, KV, D) + outputs
+(H, D)+(H,)+(H,) — with bk = 512, KV = 8, D = 128: ~1.1 MB.  The KV block
+axis is embarrassingly parallel (partials are order-independent), so every
+dimension is "parallel" — the combine owns the reduction.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, l_ref, m_ref, *,
+                   scale: float, kv_heads: int, group: int):
+    q = q_ref[0].astype(jnp.float32)                     # (H, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    valid = valid_ref[0]                                 # (bk,)
+    h, d = q.shape
+    bk = k.shape[0]
+    qg = q.reshape(kv_heads, group, d)
+    # scores: (KV, G, bk)
+    s = jax.lax.dot_general(
+        qg, k.transpose(1, 2, 0),                        # (KV,G,D)x(KV,D,bk)
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                              # (KV, G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)                              # (KV, G)
+    o = jax.lax.dot_general(
+        p, v.transpose(1, 0, 2),                         # (KV,G,bk)x(KV,bk,D)
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (KV, G, D)
+    o_ref[0, 0] = o.reshape(h, d)
+    l_ref[0, 0] = l.reshape(h)
+    # mark fully-invalid blocks with -inf-ish m so the combine ignores them
+    m_ref[0, 0] = m.reshape(h)
+
+
+def split_kv_decode_partials(q: jax.Array, k: jax.Array, v: jax.Array,
+                             valid: jax.Array, *,
+                             block_k: int = 512,
+                             scale: Optional[float] = None,
+                             interpret: bool = False
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q: (B, H, D); k, v: (B, L, KV, D); valid: (B, L) bool.
+    L must be a multiple of block_k (ops wrapper pads with valid=False).
+    Returns partials o (B, J, H, D) f32, l (B, J, H) f32, m (B, J, H) f32."""
+    b, h, d = q.shape
+    l_tot, kv = k.shape[1], k.shape[2]
+    bk = min(block_k, l_tot)
+    assert l_tot % bk == 0, (l_tot, bk)
+    n_blk = l_tot // bk
+    group = h // kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_decode_kernel, scale=scale, kv_heads=kv,
+                               group=group)
+    grid = (b, n_blk)
+    o, l, m = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, j: (b_, 0, 0)),
+            pl.BlockSpec((1, bk, kv, d), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, bk, kv, d), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, bk), lambda b_, j: (b_, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, 1, h), lambda b_, j: (b_, j, 0)),
+            pl.BlockSpec((1, 1, h), lambda b_, j: (b_, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_blk, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_blk, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_blk, h), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q, k, v, valid)
+    return o, l, m

@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination against the production meshes, with 512 placeholder host
+devices (the two lines above MUST precede any jax import — jax locks the
+device count on first init; do NOT set this flag globally).
+
+Per combination this records:
+  * compiled.memory_analysis()  — per-chip bytes (does it fit 16 GB v5e?)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the compiled HLO (hlo_analysis)
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and a
+summary table on stdout.  EXPERIMENTS.md §Dry-run / §Roofline are built
+from these files.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all 40 × 2
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single      # 16x16 only
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import layers as L
+from ..models.config import ModelConfig
+from . import hlo_analysis as H
+from . import specs as S
+from . import steps
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def analytical_bytes_per_chip(cfg: ModelConfig, shape: S.ShapeSpec,
+                              n_chips: int, mesh) -> float:
+    """Per-chip HBM traffic for one step, from the workload model.
+
+    The HLO-walker byte count is unusable on the CPU backend (bf16 matmul
+    operands are converted to f32 and the converts get hoisted over whole
+    loop-carried caches — artifacts a TPU compile does not have), so the
+    memory roofline term uses the §4.3 analytical traffic model:
+      decode:  resident weight shard + KV shard read once per step
+      prefill: weight shard (re-read per q-block tile) + KV write + 2x
+               activations per layer
+      train:   3x prefill compute traffic + optimizer state update
+    """
+    model_axis = mesh.shape["model"]
+    w_bytes = cfg.active_param_count() * 2
+    w_chip = w_bytes / (n_chips if cfg.fsdp_weights else model_axis)
+    if cfg.replicate_small():
+        w_chip = w_bytes
+    kv_len = cfg.kv_cache_len(shape.seq_len)
+    kv_total = cfg.kv_bytes_per_token() * kv_len * shape.global_batch
+    kv_chip = kv_total / n_chips
+    if shape.kind == "decode":
+        return w_chip + kv_chip
+    toks_chip = shape.global_batch * shape.seq_len / max(
+        n_chips / model_axis, 1)
+    act_chip = toks_chip * cfg.d_model * 2 * 4 * cfg.n_layers / model_axis
+    if shape.kind == "prefill":
+        return w_chip + 2 * kv_chip + act_chip
+    # train: fwd + 2x bwd activation traffic + Adam state (14 B/param)
+    opt_chip = cfg.param_count() * 14 / (n_chips if cfg.fsdp_weights
+                                         else model_axis)
+    return 3 * (w_chip + act_chip) + opt_chip
+
+
+def model_flops(cfg: ModelConfig, shape: S.ShapeSpec) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (N = active)."""
+    n = cfg.active_param_count()
+    d_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * d_tokens
+
+
+def _loop_trips(cfg: ModelConfig, shape: S.ShapeSpec) -> tuple:
+    pat_len = len(cfg.block_pattern)
+    n_rep = cfg.n_layers // pat_len
+    if shape.kind in ("train", "prefill") and \
+            shape.seq_len > L.ATTN_BLOCK_THRESHOLD:
+        nq = math.ceil(shape.seq_len / L.ATTN_BLOCK_Q)
+        return (n_rep, nq)
+    if shape.kind != "decode" and cfg.uses_recurrent_state:
+        return (n_rep, shape.seq_len)
+    return (n_rep,)
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            out_dir: str = OUT_DIR, verbose: bool = True) -> dict:
+    cfg0 = configs.get(arch)
+    shape = S.SHAPES[shape_name]
+    cfg = S.arch_for_shape(cfg0, shape)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "n_chips": int(n_chips), "variant": cfg.name, "ok": False}
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate = steps.build(cfg0, shape, mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        trips = _loop_trips(cfg, shape)
+        coll = H.parse_collectives(hlo, trips)
+        # cost_analysis() counts while bodies once (verified); use the
+        # loop-weighted HLO-walker dot FLOPs (exact) and the analytical
+        # traffic model for bytes (walker bytes carry CPU-backend convert
+        # artifacts — see analytical_bytes_per_chip docstring)
+        flops = coll.dot_flops
+        byts = analytical_bytes_per_chip(cfg, shape, int(n_chips), mesh)
+        rec.update({
+            "ok": True,
+            "compile_s": time.time() - t0,
+            "flops": flops,
+            "bytes_accessed": byts,
+            "hlo_walker_bytes": coll.hlo_bytes,
+            "cost_analysis_flops_raw": float(cost.get("flops", 0.0)),
+            "cost_analysis_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+            "collective_bytes": coll.total_bytes,
+            "collective_detail": coll.bytes_by_kind,
+            "collective_counts": coll.count_by_kind,
+            "loop_trips": list(trips),
+            "model_flops": model_flops(cfg, shape),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                "temp_arena_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_temp_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            },
+        })
+        # Memory accounting (calibrated — see EXPERIMENTS.md §Dry-run):
+        #  * resident = args + outputs − alias: params/KV/opt state under the
+        #    chosen shardings.  Exact and backend-independent.
+        #  * temp arena: CPU-backend transient bound.  INFLATED vs TPU: the
+        #    CPU backend converts bf16 matmul operands to f32 and hoists
+        #    those converts over whole loop-carried caches (observed in the
+        #    HLO dumps); TPU's native-bf16 MXU path has no such buffers.
+        # fits_16g is judged on resident + the arena capped at the
+        # pre-hoisting estimate is NOT attempted — both numbers reported.
+        mrec = rec["memory"]
+        resident = (mrec["argument_bytes"] + mrec["output_bytes"]
+                    - mrec["alias_bytes"])
+        per_chip = resident + mrec["temp_arena_bytes"]
+        rec["resident_bytes_per_chip"] = resident
+        rec["bytes_per_chip"] = per_chip
+        rec["fits_16g"] = bool(resident < 16e9)
+        rec["fits_16g_with_cpu_arena"] = bool(per_chip < 16e9)
+        roof = H.Roofline(arch, shape_name, mesh_kind, int(n_chips),
+                          flops, byts, coll.total_bytes,
+                          rec["model_flops"], per_chip)
+        rec["roofline"] = roof.as_dict()
+        if verbose:
+            print(f"  OK   {arch:24}{shape_name:13}{mesh_kind:7}"
+                  f" compile={rec['compile_s']:6.1f}s"
+                  f" perchip={per_chip/2**30:7.2f}GiB"
+                  f" fits={rec['fits_16g']}"
+                  f" bottleneck={roof.bottleneck}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        rec["compile_s"] = time.time() - t0
+        if verbose:
+            print(f"  FAIL {arch:24}{shape_name:13}{mesh_kind:7} {rec['error'][:120]}")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one architecture (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help="one shape (default: all four)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else configs.names(assigned_only=True)
+    shapes = [args.shape] if args.shape else list(S.SHAPES)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        print(f"=== mesh {mesh_kind} "
+              f"({'2x16x16' if mesh_kind == 'multi' else '16x16'}) ===")
+        for arch in archs:
+            for shape in shapes:
+                rec = run_one(arch, shape, mesh_kind, args.out)
+                n_fail += 0 if rec["ok"] else 1
+    print(f"done; failures: {n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

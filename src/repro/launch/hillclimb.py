@@ -1,0 +1,195 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: lower+compile a (arch x shape) pair under a named
+variant and record the same roofline metrics as the dry-run baseline, into
+experiments/perf/<arch>__<shape>__<variant>.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch llama3-405b --shape decode_32k --variant kv_int8
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from ..models.config import ModelConfig
+from . import hlo_analysis as H
+from . import specs as S
+from . import steps
+from .dryrun import _loop_trips, analytical_bytes_per_chip, model_flops
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "perf")
+
+VARIANTS = {
+    "baseline": {},
+    "kv_int8": {"kv_quant": True},
+    "logits_sharded": {"shard_logits": True},
+    "kv_int8+logits_sharded": {"kv_quant": True, "shard_logits": True},
+    "w_int8": {"weight_quant": True},
+    "w_int8+kv_int8": {"weight_quant": True, "kv_quant": True},
+    "w_int8+kv_int8+logits_sharded": {"weight_quant": True,
+                                      "kv_quant": True,
+                                      "shard_logits": True},
+    "moe_dense": {"moe_impl": "dense"},
+    "moe_local_sorted": {"moe_impl": "local_sorted"},
+    "moe_local+w_int8": {"moe_impl": "local_sorted", "weight_quant": True},
+    "pipeline": {"pipeline": True},
+    "pipeline+kv_int8": {"pipeline": True, "kv_quant": True},
+    "pipeline+kv_int8+w_int8": {"pipeline": True, "kv_quant": True,
+                                "weight_quant": True},
+    "moe_sorted_cf1": {"moe_cf": 1.0},
+    "moe_sorted_cf2": {"moe_cf": 2.0},
+    "moe_nodrop": {"moe_cf": None},
+}
+
+
+def _build_pipeline(cfg0, shape, mesh, knobs):
+    """Pipeline-parallel decode lowering (§Perf pair-1 iter 4)."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from ..models.quant import quantize_weights
+    from .pipeline_decode import (build_pipeline_decode, pad_stacked_cache,
+                                  pad_stacked_params)
+    from .sharding import ShardingPolicy, tree_shardings
+    assert shape.kind == "decode"
+    cfg = S.arch_for_shape(cfg0, shape)
+    if knobs.get("kv_quant"):
+        cfg = cfg.with_kv_quant()
+    fn, per_stage, n_pad = build_pipeline_decode(cfg, mesh,
+                                                 shape.global_batch)
+    params = S.param_shapes(cfg, jnp.bfloat16)
+    params = jax.eval_shape(lambda p: pad_stacked_params(cfg, p, n_pad),
+                            params)
+    if knobs.get("weight_quant"):
+        params = jax.eval_shape(quantize_weights, params)
+    cache = S.cache_shapes(cfg, shape.global_batch, shape.seq_len,
+                           jnp.bfloat16)
+    cache = jax.eval_shape(lambda c: pad_stacked_cache(c, n_pad), cache)
+    # stage ("data") sharding on the layer-stack dim, TP ("model") within
+    pol = ShardingPolicy(mesh, dataclasses.replace(cfg, fsdp_weights=False))
+    p_sh = tree_shardings(pol, params, "param")
+
+    def restage(path, ns):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if names[0] != "groups":
+            return ns
+        spec = list(ns.spec) + [None] * (len(ns.spec) == 0)
+        spec = list(ns.spec)
+        if not spec:
+            spec = [None]
+        spec[0] = "data"
+        return NamedSharding(mesh, P(*spec))
+    p_sh = jax.tree_util.tree_map_with_path(restage, p_sh)
+    c_sh = tree_shardings(pol, cache, "cache")
+
+    def restage_cache(path, ns):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if names[0] != "groups":
+            return ns
+        spec = list(ns.spec)
+        if not spec:
+            spec = [None]
+        spec[0] = "data"
+        if len(spec) > 1:
+            spec[1] = None          # full batch per stage
+        return NamedSharding(mesh, P(*spec))
+    c_sh = jax.tree_util.tree_map_with_path(restage_cache, c_sh)
+    tok_sh = NamedSharding(mesh, P())
+    rep = NamedSharding(mesh, P())
+    args = (params, jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                         jnp.int32), cache)
+    return fn, args, (p_sh, tok_sh, c_sh), (rep, c_sh), (2,), cfg
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                mesh_kind: str = "single", out_dir: str = OUT_DIR) -> dict:
+    cfg0 = configs.get(arch)
+    shape = S.SHAPES[shape_name]
+    knobs = VARIANTS[variant]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(mesh.devices.size)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": mesh_kind, "ok": False}
+    t0 = time.time()
+    try:
+        if knobs.get("pipeline"):
+            fn, args, in_sh, out_sh, donate, cfg = _build_pipeline(
+                cfg0, shape, mesh, knobs)
+        else:
+            fn, args, in_sh, out_sh, donate = steps.build(cfg0, shape, mesh,
+                                                          **knobs)
+            cfg = S.arch_for_shape(cfg0, shape)
+            if knobs.get("kv_quant"):
+                cfg = cfg.with_kv_quant()
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+        mem = compiled.memory_analysis()
+        coll = H.parse_collectives(compiled.as_text(),
+                                   _loop_trips(cfg, shape))
+        byts = analytical_bytes_per_chip(cfg, shape, n_chips, mesh)
+        if knobs.get("weight_quant"):
+            # int8 weights: resident + read traffic of weights halve
+            model_axis = mesh.shape["model"]
+            w_chip = cfg.active_param_count() * 2 / (
+                n_chips if cfg.fsdp_weights else model_axis)
+            byts -= 0.5 * w_chip
+        if knobs.get("kv_quant") and shape.kind != "train":
+            # int8 cache: KV reads halve (scales are ~1% of payload)
+            kv_len = cfg.kv_cache_len(shape.seq_len)
+            kv_total = cfg.kv_bytes_per_token() * kv_len * shape.global_batch
+            byts -= 0.5 * kv_total / n_chips
+        resident = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes)
+        roof = H.Roofline(arch, shape_name, mesh_kind, n_chips,
+                          coll.dot_flops, byts, coll.total_bytes,
+                          model_flops(cfg, shape), resident)
+        rec.update({
+            "ok": True, "compile_s": time.time() - t0,
+            "resident_bytes_per_chip": resident,
+            "temp_arena_bytes": mem.temp_size_in_bytes,
+            "collective_detail": coll.bytes_by_kind,
+            "roofline": roof.as_dict(),
+        })
+        ro = rec["roofline"]
+        print(f"{arch} {shape_name} [{variant:24}] "
+              f"comp={ro['t_compute_s']*1e3:7.3f}ms "
+              f"mem={ro['t_memory_s']*1e3:7.3f}ms "
+              f"coll={ro['t_collective_s']*1e3:7.3f}ms "
+              f"resident={resident/2**30:6.2f}GiB "
+              f"bottleneck={ro['bottleneck']}")
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-1500:]
+        print(f"{arch} {shape_name} [{variant}] FAIL {rec['error'][:100]}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(
+            out_dir, f"{arch}__{shape_name}__{variant}.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(VARIANTS))
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rec = run_variant(args.arch, args.shape, args.variant, args.mesh)
+    return 0 if rec["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,193 @@
+"""Sharding rules: pytree path + shape -> PartitionSpec.
+
+Policy (DESIGN.md §5):
+* batch            -> ("pod","data")                      [all shapes]
+* attention heads / FFN hidden / vocab -> "model"
+* GQA KV heads     -> "model" only when divisible, else replicated
+  (standard GQA TP practice: KV replicates when TP > n_kv_heads)
+* weights of >=100B models additionally shard their non-head dim over
+  "data" (ZeRO-3 / FSDP style) so per-chip bytes fit 16 GB v5e HBM
+* KV cache         -> batch over ("pod","data"), sequence over "model"
+  (decode attention over a model-sharded sequence IS the paper's split-KV
+  partial-softmax combine, executed by XLA's sharded softmax collectives)
+* long_500k (batch=1) -> KV sequence over ("pod","data","model"):
+  full context parallelism
+* tiny models (<1.5 GB bf16) replicate weights entirely: collective-free
+  decode
+
+Every rule falls back to replication when a dimension is not divisible by
+the axis size — correctness first, the roofline report shows the cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import BlockKind, ModelConfig
+from .mesh import data_axes
+
+REPLICATE_BYTES = int(1.5e9)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    """Use ``axis`` only when ``dim`` divides evenly."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 \
+        else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    cfg: ModelConfig
+    seq_shard: bool = False        # long_500k: context parallelism
+
+    @property
+    def dp(self):
+        return data_axes(self.mesh)
+
+    @property
+    def fsdp(self):
+        """Extra weight-sharding axis for huge models."""
+        return self.dp if self.cfg.fsdp_weights else None
+
+    @property
+    def replicate_all(self) -> bool:
+        return self.cfg.replicate_small()
+
+    # -- parameters -----------------------------------------------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        m = self.mesh
+        if self.replicate_all:
+            return P()
+        parts = path.split("/")
+        name = parts[-1]
+        if name == "s":                  # int8 scale scalar: replicate
+            return P()
+        if name == "q":                  # int8 payload: parent weight's rule
+            name = parts[-2]
+        stacked = path.startswith("groups")     # leading repeat dim
+        pre = (None,) if stacked else ()
+
+        def spec(*axes):
+            return P(*(pre + axes))
+
+        cfg = self.cfg
+        base = shape[1:] if stacked else shape
+        if name == "embed" or name == "unembed":
+            # (V, d) / (d, V)
+            big, small = (0, 1) if name == "embed" else (1, 0)
+            out = [None, None]
+            out[big] = _maybe(m, "model", shape[big])
+            out[small] = _maybe(m, self.fsdp, shape[small])
+            return P(*out)
+        if name in ("wq",):                      # (d, H, hd)
+            return spec(_maybe(m, self.fsdp, base[0]),
+                        _maybe(m, "model", base[1]), None)
+        if name in ("wk", "wv"):                 # (d, KV, hd)
+            return spec(_maybe(m, self.fsdp, base[0]),
+                        _maybe(m, "model", base[1]), None)
+        if name == "wo":                         # (H, hd, d)
+            return spec(_maybe(m, "model", base[0]), None,
+                        _maybe(m, self.fsdp, base[2]))
+        if name in ("w_gate", "w_up"):
+            if len(base) == 3:                   # MoE (E, d, f)
+                return spec(None, _maybe(m, self.fsdp, base[1]),
+                            _maybe(m, "model", base[2]))
+            return spec(_maybe(m, self.fsdp, base[0]),
+                        _maybe(m, "model", base[1]))
+        if name == "w_down":
+            if len(base) == 3:                   # MoE (E, f, d)
+                return spec(None, _maybe(m, "model", base[1]),
+                            _maybe(m, self.fsdp, base[2]))
+            return spec(_maybe(m, "model", base[0]),
+                        _maybe(m, self.fsdp, base[1]))
+        if name == "router":                     # (d, E)
+            return spec(_maybe(m, self.fsdp, base[0]), None)
+        if name in ("w_x", "w_y", "w_a", "w_i", "w_out", "w_o"):
+            return spec(_maybe(m, self.fsdp, base[0]),
+                        _maybe(m, "model", base[1]))
+        if name in ("w_gates", "r_gates", "w_if"):
+            return spec(_maybe(m, self.fsdp, base[0]),
+                        _maybe(m, "model", base[1]))
+        if name == "conv_w":                     # (W, d)
+            return spec(None, _maybe(m, "model", base[1]))
+        if name == "a_param":                    # (d,)
+            return spec(_maybe(m, "model", base[0]))
+        # norms, biases, everything else: replicate
+        return P(*((None,) * len(shape)))
+
+    # -- serving state ----------------------------------------------------
+    def cache_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        m = self.mesh
+        name = path.split("/")[-1]
+        stacked = "groups" in path
+        pre = (None,) if stacked else ()
+        base = shape[1:] if stacked else shape
+
+        def spec(*axes):
+            return P(*(pre + axes))
+
+        batch_ax = None if self.seq_shard else \
+            _maybe(m, self.dp, base[0] if base else 1)
+        seq_axes = ("pod", "data", "model") if self.seq_shard else ("model",)
+        seq_axes = tuple(a for a in seq_axes if a in m.axis_names)
+        if name == "lengths":
+            return P(_maybe(m, self.dp, shape[0])
+                     if not self.seq_shard else None)
+        if name in ("k", "v"):                  # (B, L, KV, D)
+            return spec(batch_ax, _maybe(m, seq_axes, base[1]), None, None)
+        if name == "pos":                        # (B, L)
+            return spec(batch_ax, _maybe(m, seq_axes, base[1]))
+        if name in ("k_scale", "v_scale"):       # (B, L, KV)
+            return spec(batch_ax, _maybe(m, seq_axes, base[1]), None)
+        if name == "h" and len(base) == 2:       # rglru (B, d)
+            return spec(batch_ax, _maybe(m, "model", base[1]))
+        if name == "conv":                       # (B, W-1, d)
+            return spec(batch_ax, None, _maybe(m, "model", base[2]))
+        if name in ("C", "n", "m", "c"):         # xlstm states
+            return spec(batch_ax, *((None,) * (len(base) - 1)))
+        if name == "h":                          # slstm h (B, d)
+            return spec(batch_ax, *((None,) * (len(base) - 1)))
+        return spec(*((None,) * len(base)))
+
+    # -- batches ----------------------------------------------------------
+    def tokens_spec(self, batch: int) -> P:
+        return P(_maybe(self.mesh, self.dp, batch), None)
+
+    def frames_spec(self, batch: int) -> P:
+        return P(_maybe(self.mesh, self.dp, batch), None, None)
+
+
+def tree_shardings(policy: ShardingPolicy, tree, kind: str):
+    """Map a params ('param') or cache ('cache') pytree to NamedShardings."""
+    fn = policy.param_spec if kind == "param" else policy.cache_spec
+
+    def one(path, leaf):
+        spec = fn(_path_str(path), leaf.shape)
+        return NamedSharding(policy.mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def opt_state_shardings(policy: ShardingPolicy, param_shardings,
+                        opt_state_shape):
+    """mu/nu mirror the param shardings; counters replicate."""
+    rep = NamedSharding(policy.mesh, P())
+    return {"mu": param_shardings, "nu": param_shardings, "step": rep}

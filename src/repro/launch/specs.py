@@ -1,0 +1,90 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shapes (assignment):
+    train_4k       seq_len=4,096    global_batch=256   (training)
+    prefill_32k    seq_len=32,768   global_batch=32    (inference-prefill)
+    decode_32k     seq_len=32,768   global_batch=128   (inference-decode)
+    long_500k      seq_len=524,288  global_batch=1     (long-context-decode)
+
+Decode shapes lower ``serve_step`` — ONE new token with a KV cache of
+seq_len — not ``train_step``.  ``long_500k`` requires sub-quadratic
+attention: hybrid/ssm archs run natively; pure-attention archs run their
+sliding-window variant (window 8192, DESIGN.md §4) — a beyond-paper
+extension so the combination still exercises the serving stack.
+
+No device allocation happens here: everything is jax.ShapeDtypeStruct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+
+LONG_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def arch_for_shape(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: dense/moe/vlm/audio archs
+    switch to their sliding-window variant; hybrid/ssm run natively."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return cfg.with_sliding_window(LONG_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the full parameter pytree (no allocation)."""
+    return jax.eval_shape(
+        lambda: T.init(cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, dtype=dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["batch"] = {"tokens": _sds((b, s + 1), jnp.int32)}
+        if cfg.cross_attention:
+            out["batch"]["frames"] = _sds((b, cfg.n_frames, cfg.d_model),
+                                          dtype)
+        return out
+    if shape.kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["cache"] = cache_shapes(cfg, b, s, dtype)
+    else:  # decode: one new token against a seq_len-deep cache
+        out["tokens"] = _sds((b, 1), jnp.int32)
+        out["cache"] = cache_shapes(cfg, b, s, dtype)
+    if cfg.cross_attention:
+        out["frames"] = _sds((b, cfg.n_frames, cfg.d_model), dtype)
+    return out

@@ -1,0 +1,141 @@
+"""The pjit-able step functions the dry-run (and real drivers) lower.
+
+``build(cfg, shape, mesh)`` returns (fn, example_args, in_shardings,
+out_shardings) ready for ``jax.jit(fn, ...).lower(*args)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..training import optimizer as O
+from ..training.train_step import make_train_step
+from . import specs as S
+from .sharding import ShardingPolicy, tree_shardings
+
+# MoE capacity factor for production lowering (token-dropping, bounded
+# buffers); tests use None (no-drop exact mode).
+MOE_CF = 1.25
+# Gradient-accumulation microbatches for the train_4k lowering: bounds
+# activation memory at global_batch=256, seq=4096.
+TRAIN_MICROBATCHES = 8
+
+
+def build(cfg: ModelConfig, shape: S.ShapeSpec, mesh,
+          dtype=jnp.bfloat16,
+          *,
+          kv_quant: bool = False,
+          weight_quant: bool = False,
+          moe_impl: str = "sorted",
+          moe_cf=MOE_CF,
+          shard_logits: bool = False,
+          ) -> Tuple[Any, tuple, Any, Any, tuple]:
+    """Knobs beyond the baseline (used by the §Perf hillclimb):
+    kv_quant      int8 KV cache with per-(token, head) scales
+    moe_impl      "sorted" (active-FLOPs dispatch) | "dense" (all experts)
+    moe_cf        MoE capacity factor (None = no-drop)
+    shard_logits  leave serve-step logits vocab-sharded (skip the gather)
+    """
+    cfg = S.arch_for_shape(cfg, shape)
+    if kv_quant:
+        cfg = cfg.with_kv_quant()
+    if weight_quant and shape.kind == "train":
+        raise ValueError("int8 weights are a serving-only optimization")
+    if shape.kind == "train" and not cfg.replicate_small():
+        # training always shards weights/grads/optimizer 2D (ZeRO-3 style):
+        # the f32 Adam state is 4x the bf16 weights, model-axis-only
+        # sharding would blow HBM on every >=8B model
+        cfg = dataclasses.replace(cfg, fsdp_weights=True)
+    policy = ShardingPolicy(mesh, cfg,
+                            seq_shard=(shape.name == "long_500k"))
+    ins = S.input_specs(cfg, shape, dtype)
+    params = S.param_shapes(cfg, dtype)
+    param_hook = None
+    if weight_quant:
+        import dataclasses as _dc
+
+        from ..models.quant import is_quantized, quantize_weights
+        params = jax.eval_shape(quantize_weights, params)
+        # per-layer weight gather must happen on the int8 payload (half the
+        # FSDP all-gather bytes): constrain each q to its no-FSDP spec
+        # inside the scan body, before dequantization
+        nofsdp = ShardingPolicy(
+            mesh, _dc.replace(cfg, fsdp_weights=False),
+            seq_shard=policy.seq_shard)
+
+        def param_hook(layer_p):
+            def one(path, leaf):
+                names = "/".join(str(getattr(k, "key",
+                                             getattr(k, "idx", k)))
+                                 for k in path)
+                if names.endswith("/q"):
+                    spec = nofsdp.param_spec(names, leaf.shape)
+                    return jax.lax.with_sharding_constraint(leaf, spec)
+                return leaf
+            return jax.tree_util.tree_map_with_path(one, layer_p)
+    p_shard = tree_shardings(policy, params, "param")
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = O.AdamWConfig()
+        opt_state = jax.eval_shape(O.init_state, params)
+        o_shard = {"mu": p_shard, "nu": p_shard, "step": rep}
+        d_ok = (cfg.d_model % mesh.shape["model"] == 0
+                and not cfg.replicate_small())
+        act_spec = P(policy.dp, None, "model") if d_ok else \
+            P(policy.dp, None, None)
+        step = make_train_step(cfg, opt_cfg, moe_impl=moe_impl,
+                               moe_cf=moe_cf, remat=True,
+                               num_microbatches=TRAIN_MICROBATCHES,
+                               act_spec=act_spec)
+        tok_sh = NamedSharding(mesh, policy.tokens_spec(shape.global_batch))
+        b_shard: Dict[str, Any] = {"tokens": tok_sh}
+        if cfg.cross_attention:
+            b_shard["frames"] = NamedSharding(
+                mesh, policy.frames_spec(shape.global_batch))
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, rep)
+        args = (params, opt_state, ins["batch"])
+        return step, args, in_sh, out_sh, (0, 1)     # donate params+opt
+
+    cache = ins["cache"]
+    c_shard = tree_shardings(policy, cache, "cache")
+    tok_sh = NamedSharding(mesh, policy.tokens_spec(shape.global_batch))
+    logits_sh = rep
+
+    if shape.kind == "prefill":
+        def fn(params, tokens, cache, frames=None):
+            logits, new_cache, _ = T.apply(
+                cfg, params, tokens, cache=cache, frames=frames,
+                mode="prefill", moe_impl=moe_impl, moe_cf=moe_cf,
+                moe_mesh=mesh, fresh_prefill=True, logits_slice="last",
+                param_hook=param_hook)
+            return logits, new_cache
+    else:
+        def fn(params, tokens, cache, frames=None):
+            logits, new_cache, _ = T.apply(
+                cfg, params, tokens, cache=cache, frames=frames,
+                mode="decode", moe_impl=moe_impl, moe_cf=moe_cf,
+                moe_mesh=mesh, logits_slice="last", param_hook=param_hook)
+            return logits, new_cache
+
+    if shard_logits:
+        logits_sh = NamedSharding(
+            mesh, P(None, "model" if cfg.vocab_size
+                    % mesh.shape["model"] == 0 else None))
+    args = [params, ins["tokens"], cache]
+    in_sh = [p_shard, tok_sh, c_shard]
+    if cfg.cross_attention:
+        args.append(ins["frames"])
+        in_sh.append(NamedSharding(mesh,
+                                   policy.frames_spec(shape.global_batch)))
+    out_sh = (logits_sh, c_shard)
+    return fn, tuple(args), tuple(in_sh), out_sh, (2,)   # donate cache

@@ -1,0 +1,124 @@
+"""Per-request cache state manipulation.
+
+These are the primitives the disaggregated runtime is built from:
+
+* ``extract_request_state`` — pull one batch row's full serving state
+  (KV cache slices, ring buffers, recurrent states) out of a batched cache.
+  This is the payload of the prefill→decode **KV transfer** and of
+  attention-level migration.
+* ``insert_request_state`` — write such a state into a (different) batched
+  cache at a free slot.  Prefill instance → Global KV Store → decode
+  instance round-trips are exact.
+* ``slice_prefix_kv`` / ``merge_prefix_kv`` — token-range slices of the
+  attention KV used by the Global KV Cache Store's block granularity.
+
+All functions are pure pytree surgery and jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import BlockKind, ModelConfig
+
+Cache = Dict[str, Any]
+RequestState = Dict[str, Any]
+
+
+def extract_request_state(cache: Cache, row: int) -> RequestState:
+    """State of batch row ``row``: groups keep their leading repeat dim."""
+    return {
+        "length": cache["lengths"][row],
+        "groups": jax.tree.map(lambda a: a[:, row], cache["groups"]),
+        "rem": jax.tree.map(lambda a: a[row], cache["rem"]),
+    }
+
+
+def insert_request_state(cache: Cache, row, st: RequestState) -> Cache:
+    return {
+        "lengths": cache["lengths"].at[row].set(st["length"]),
+        "groups": jax.tree.map(lambda c, s: c.at[:, row].set(s),
+                               cache["groups"], st["groups"]),
+        "rem": jax.tree.map(lambda c, s: c.at[row].set(s),
+                            cache["rem"], st["rem"]),
+    }
+
+
+def blank_request_state(cache: Cache) -> RequestState:
+    """An empty request state matching the cache's structure (for eviction)."""
+    z = extract_request_state(cache, 0)
+
+    def reset(a):
+        if a.dtype == jnp.int32:
+            return jnp.full_like(a, -1) if a.ndim >= 1 else jnp.zeros_like(a)
+        return jnp.zeros_like(a)
+    st = jax.tree.map(reset, z)
+    st["length"] = jnp.zeros((), jnp.int32)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Prefix KV slices (Global KV Cache Store payloads)
+# ---------------------------------------------------------------------------
+
+def prefix_cacheable(cfg: ModelConfig) -> bool:
+    """The global prefix store holds attention KV; it applies only when the
+    stack's attention caches are linear (non-ring) — i.e. pure global
+    attention.  Recurrent/windowed archs fall back to recompute (noted in
+    DESIGN.md §Arch-applicability)."""
+    return (cfg.uses_kv_cache
+            and cfg.sliding_window is None
+            and all(b == BlockKind.ATTENTION for b in cfg.blocks()))
+
+
+def slice_prefix_kv(st: RequestState, start: int, end: int) -> RequestState:
+    """Token range [start, end) of every attention KV in a request state.
+
+    Only meaningful for prefix-cacheable configs (linear caches where slot i
+    holds token i)."""
+    def cut(path_leaf):
+        return path_leaf
+
+    def cut_group(g):
+        out = {}
+        for k, a in g.items():
+            if k in ("k", "v"):
+                out[k] = a[..., start:end, :, :]
+            elif k == "pos":
+                out[k] = a[..., start:end]
+            else:  # cross KV etc: keep whole
+                out[k] = a
+        return out
+    return {
+        "length": jnp.asarray(end - start, jnp.int32),
+        "groups": tuple(cut_group(g) for g in st["groups"]),
+        "rem": tuple(cut_group(g) for g in st["rem"]),
+    }
+
+
+def merge_prefix_kv(dst: RequestState, src: RequestState,
+                    offset: int) -> RequestState:
+    """Write ``src``'s token range into ``dst`` starting at ``offset``."""
+    n = None
+
+    def put_group(d, s):
+        out = dict(d)
+        for k in ("k", "v"):
+            out[k] = d[k].at[..., offset:offset + s[k].shape[-3], :, :].set(s[k])
+        out["pos"] = d["pos"].at[..., offset:offset + s["pos"].shape[-1]].set(
+            s["pos"])
+        return out
+    return {
+        "length": jnp.asarray(offset, jnp.int32) + src["length"],
+        "groups": tuple(put_group(d, s)
+                        for d, s in zip(dst["groups"], src["groups"])),
+        "rem": tuple(put_group(d, s)
+                     for d, s in zip(dst["rem"], src["rem"])),
+    }
+
+
+def state_num_bytes(st: RequestState) -> int:
+    """Total bytes of a request state (migration cost accounting)."""
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(st))

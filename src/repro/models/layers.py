@@ -1,0 +1,676 @@
+"""Neural-net blocks for every assigned architecture family.
+
+Pure-functional JAX: ``init_*`` builds parameter pytrees (plain dicts),
+``*_apply`` consumes them.  Every block has a uniform interface::
+
+    y, new_state = block_apply(kind, cfg, params, x, positions=..., state=..., mode=...)
+
+``state`` is the per-layer serving state (KV cache slice or recurrent state),
+``mode`` is one of ``train`` / ``prefill`` / ``decode``.
+
+Conventions
+-----------
+* Shapes: activations (B, S, d); attention heads (B, S, H, Dh).
+* GQA: queries have H heads, keys/values have KV heads (H % KV == 0).
+* KV caches store **post-RoPE** keys; windowed layers use ring buffers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import Activation, BlockKind, ModelConfig
+
+Params = Dict[str, Any]
+State = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Small pieces
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq          # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)              # (B,S,1,half)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 quantization of K/V.
+
+    x: (B, S, KV, D) -> (int8 values, f32 scales (B, S, KV))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (global + sliding-window, GQA, optional cross-attention)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, dtype, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], (d, h, hd), dtype),
+        "wk": _dense(ks[1], (d, kv, hd), dtype),
+        "wv": _dense(ks[2], (d, kv, hd), dtype),
+        "wo": _dense(ks[3], (h, hd, d), dtype, scale=1.0 / math.sqrt(h * hd)),
+    }
+    return p
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,S,H,D), k: (B,L,KV,D) -> scores (B, KV, H//KV, S, L)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, h // kvh, d)
+    return jnp.einsum("bsgqd,blgd->bgqsl", q, k)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,KV,G,S,L), v: (B,L,KV,D) -> (B,S,H,D)."""
+    b, kvh, g, s, _ = probs.shape
+    o = jnp.einsum("bgqsl,blgd->bsgqd", probs, v)
+    return o.reshape(b, s, kvh * g, v.shape[-1])
+
+
+def masked_attention(q, k, v, mask, scale, soft_cap=None,
+                     k_scale=None, v_scale=None):
+    """mask: broadcastable to (B, KV, G, S, L); True = attend.
+
+    k_scale/v_scale: optional (B, L, KV) dequantization scales for int8
+    caches — folded into scores/probs so the int8 K/V are never
+    materialized in bf16 (the dequant fuses into the matmuls)."""
+    kc = k.astype(q.dtype) if k.dtype == jnp.int8 else k
+    scores = _gqa_scores(q, kc) * scale
+    if k_scale is not None:
+        scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    if soft_cap is not None:
+        scores = jnp.tanh(scores / soft_cap) * soft_cap
+    scores = jnp.where(mask, scores.astype(jnp.float32), -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    if v_scale is not None:
+        probs = probs * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    vc = v.astype(q.dtype) if v.dtype == jnp.int8 else v
+    return _gqa_out(probs.astype(vc.dtype), vc)
+
+
+def causal_mask(positions_q: jax.Array, positions_k: jax.Array,
+                window: Optional[int] = None) -> jax.Array:
+    """(B,S),(B,L) -> (B,1,1,S,L) causal (+ sliding window) mask."""
+    pq = positions_q[:, None, None, :, None]
+    pk = positions_k[:, None, None, None, :]
+    m = (pk <= pq) & (pk >= 0)
+    if window is not None:
+        m &= pk > pq - window
+    return m
+
+
+# Sequences longer than this use the q-block streaming path (memory O(bq*L)
+# instead of O(S*L)); 1024^2 scores are cheap enough to one-shot.
+ATTN_BLOCK_THRESHOLD = 1024
+ATTN_BLOCK_Q = 512
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array,
+           pos_q: jax.Array, pos_k: jax.Array, *,
+           window: Optional[int], scale: float,
+           soft_cap: Optional[float] = None,
+           k_scale=None, v_scale=None) -> jax.Array:
+    """Positional-masked GQA attention, memory-bounded.
+
+    q: (B,S,H,D); k, v: (B,L,KV,D); pos_q: (B,S); pos_k: (B,L) (-1 = hole).
+    Attends where 0 <= pos_k <= pos_q (& window).  For S >
+    ATTN_BLOCK_THRESHOLD, runs a remat'd lax.scan over q blocks so peak
+    memory is O(bq*L) -- the XLA-native flash-attention analogue of
+    kernels/flash_prefill (which is the TPU-kernel form of this schedule).
+    """
+    b, s, h, d = q.shape
+
+    def one_shot(qb, pqb):
+        mask = causal_mask(pqb, pos_k, window)
+        return masked_attention(qb, k, v, mask, scale, soft_cap,
+                                k_scale=k_scale, v_scale=v_scale)
+
+    if s <= ATTN_BLOCK_THRESHOLD:
+        return one_shot(q, pos_q)
+    bq = ATTN_BLOCK_Q
+    pad = (-s) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_q = jnp.pad(pos_q, ((0, 0), (0, pad)), constant_values=-1)
+    n_blk = q.shape[1] // bq
+    qs = q.reshape(b, n_blk, bq, h, d).transpose(1, 0, 2, 3, 4)
+    ps = pos_q.reshape(b, n_blk, bq).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        qb, pqb = xs
+        return carry, one_shot(qb, pqb)
+
+    _, outs = jax.lax.scan(body, 0, (qs, ps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_blk * bq, h, d)
+    return out[:, :s]
+
+
+def _decode_head_offload(cfg, q, cache_k, cache_v, positions, slot_pos,
+                         window, scale, n_off):
+    """Fig. 4: split the KV cache on the head axis; hot branch keeps
+    KV[:kv-n_off], cold branch computes KV[kv-n_off:]; exact recombination
+    happens per q-head group with only (o, l, m) exchanged."""
+    from ..core.attention_offload import combine_partials, partial_attention
+    b, s, h, d = q.shape
+    kv = cache_k.shape[2]
+    g = h // kv
+    cut = kv - n_off
+    # validity mask from positions (decode: S == 1)
+    pq = positions[:, 0][:, None]
+    mask = (slot_pos >= 0) & (slot_pos <= pq)
+    if window is not None:
+        mask &= slot_pos > pq - window
+    q1 = q[:, 0].reshape(b, kv, g, d)[:, :cut].reshape(b, cut * g, d)
+    q2 = q[:, 0].reshape(b, kv, g, d)[:, cut:].reshape(b, n_off * g, d)
+
+    def branch(qb, kb, vb):
+        # expand GQA: repeat each kv head's K/V for its q-head group
+        kr = jnp.repeat(kb, g, axis=2)
+        vr = jnp.repeat(vb, g, axis=2)
+        return partial_attention(qb, kr, vr, mask, scale)
+
+    o1, l1, m1 = branch(q1, cache_k[:, :, :cut], cache_v[:, :, :cut])
+    o2, l2, m2 = branch(q2, cache_k[:, :, cut:], cache_v[:, :, cut:])
+    # disjoint head partitions: each branch IS its own exact softmax
+    out1 = combine_partials([o1], [l1], [m1])
+    out2 = combine_partials([o2], [l2], [m2])
+    o = jnp.concatenate([out1, out2], axis=1).astype(q.dtype)
+    return o[:, None].reshape(b, 1, h, d)
+
+
+def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                    positions: jax.Array,
+                    state: Optional[State],
+                    mode: str,
+                    window: Optional[int],
+                    frames: Optional[jax.Array] = None,
+                    cross_p: Optional[Params] = None,
+                    cross_state: Optional[State] = None,
+                    prefix_aware: bool = False,
+                    fresh_prefill: bool = False,
+                    head_offload: int = 0,
+                    ) -> Tuple[jax.Array, Optional[State], Optional[State]]:
+    """Self attention (+ optional cross attention handled by caller).
+
+    state (when not None): {"k": (B,L,KV,D), "v": (B,L,KV,D)} ring/linear cache.
+    ``prefix_aware``: during prefill, additionally attend over the cache's
+    existing prefix (incremental prefill on a Global-KV-Store hit).
+    ``head_offload``: Fig. 4 execution — the last ``head_offload`` KV heads'
+    attention is computed as a SEPARATE partial (the "cold device" branch)
+    and recombined exactly via the partial-softmax statistics; only
+    (o, l, m) cross the boundary.  Decode mode, unquantized caches.
+    Returns (y, new_state, new_cross_state).
+    """
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_state = None
+    if state is None:
+        # train / stateless prefill: full in-context attention
+        o = attend(q, k, v, positions, positions, window=window, scale=scale,
+                   soft_cap=cfg.logit_soft_cap)
+    else:
+        cache_k, cache_v, slot_pos = state["k"], state["v"], state["pos"]
+        quant = "k_scale" in state
+        cache_len = cache_k.shape[1]
+        b_idx = jnp.arange(b)[:, None]
+        if quant:
+            assert not prefix_aware, "int8 cache + prefix store not combined"
+            k_q, k_s = quantize_kv(k)
+            v_q, v_s = quantize_kv(v)
+        if mode == "prefill":
+            if prefix_aware:
+                # attend over [existing cache prefix ; in-context keys]
+                keys = jnp.concatenate([cache_k, k], axis=1)
+                vals = jnp.concatenate([cache_v, v], axis=1)
+                key_pos = jnp.concatenate([slot_pos, positions], axis=1)
+                o = attend(q, keys, vals, positions, key_pos, window=window,
+                           scale=scale, soft_cap=cfg.logit_soft_cap)
+            else:
+                o = attend(q, k, v, positions, positions, window=window,
+                           scale=scale, soft_cap=cfg.logit_soft_cap)
+            # write the (windowed) tail of the sequence into the cache;
+            # tail-slice statically so ring-buffer writes never collide
+            k_w, v_w, pos_w = k, v, positions
+            ks_w, vs_w = (k_s, v_s) if quant else (None, None)
+            if quant:
+                k_w, v_w = k_q, v_q
+            if s > cache_len:
+                k_w = k_w[:, s - cache_len:]
+                v_w = v_w[:, s - cache_len:]
+                pos_w = positions[:, s - cache_len:]
+                if quant:
+                    ks_w = ks_w[:, s - cache_len:]
+                    vs_w = vs_w[:, s - cache_len:]
+            if fresh_prefill:
+                # positions start at 0: the cache IS the (padded) key tensor.
+                # A pad keeps SPMD on the efficient all-to-all reshard path;
+                # the general scatter below forces involuntary full
+                # rematerialization when the cache is sequence-sharded.
+                pad = cache_len - k_w.shape[1]
+                cache_k = jnp.pad(k_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                cache_v = jnp.pad(v_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                slot_pos = jnp.pad(pos_w, ((0, 0), (0, pad)),
+                                   constant_values=-1)
+                if quant:
+                    k_sc = jnp.pad(ks_w, ((0, 0), (0, pad), (0, 0)))
+                    v_sc = jnp.pad(vs_w, ((0, 0), (0, pad), (0, 0)))
+            else:
+                write_pos = pos_w % cache_len
+                cache_k = cache_k.at[b_idx, write_pos].set(k_w)
+                cache_v = cache_v.at[b_idx, write_pos].set(v_w)
+                slot_pos = slot_pos.at[b_idx, write_pos].set(pos_w)
+                if quant:
+                    k_sc = state["k_scale"].at[b_idx, write_pos].set(ks_w)
+                    v_sc = state["v_scale"].at[b_idx, write_pos].set(vs_w)
+        else:  # decode: S == 1
+            write_pos = positions % cache_len
+            if quant:
+                cache_k = cache_k.at[b_idx, write_pos].set(k_q)
+                cache_v = cache_v.at[b_idx, write_pos].set(v_q)
+                k_sc = state["k_scale"].at[b_idx, write_pos].set(k_s)
+                v_sc = state["v_scale"].at[b_idx, write_pos].set(v_s)
+            else:
+                cache_k = cache_k.at[b_idx, write_pos].set(k)
+                cache_v = cache_v.at[b_idx, write_pos].set(v)
+            slot_pos = slot_pos.at[b_idx, write_pos].set(positions)
+            if head_offload > 0 and not quant:
+                o = _decode_head_offload(cfg, q, cache_k, cache_v,
+                                         positions, slot_pos, window,
+                                         scale, head_offload)
+            else:
+                o = attend(q, cache_k, cache_v, positions, slot_pos,
+                           window=window, scale=scale,
+                           soft_cap=cfg.logit_soft_cap,
+                           k_scale=k_sc if quant else None,
+                           v_scale=v_sc if quant else None)
+        new_state = {"k": cache_k, "v": cache_v, "pos": slot_pos}
+        if quant:
+            new_state["k_scale"] = k_sc
+            new_state["v_scale"] = v_sc
+
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    new_cross_state = None
+    if cross_p is not None:
+        assert frames is not None or cross_state is not None
+        if cross_state is not None and "k" in cross_state and mode == "decode":
+            ck, cv = cross_state["k"], cross_state["v"]
+        else:
+            ck = jnp.einsum("bfd,dhk->bfhk", frames, cross_p["wk"])
+            cv = jnp.einsum("bfd,dhk->bfhk", frames, cross_p["wv"])
+        cq = jnp.einsum("bsd,dhk->bshk", x, cross_p["wq"])
+        cmask = jnp.ones((1, 1, 1, 1, ck.shape[1]), bool)
+        co = masked_attention(cq, ck, cv, cmask, scale)
+        y = y + jnp.einsum("bshk,hkd->bsd", co, cross_p["wo"])
+        new_cross_state = {"k": ck, "v": cv}
+    return y, new_state, new_cross_state
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU) and MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense(ks[0], (d, f), dtype),
+        "w_up": _dense(ks[1], (d, f), dtype),
+        "w_down": _dense(ks[2], (f, d), dtype),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    act = jax.nn.gelu(g) if cfg.activation == Activation.GEGLU else jax.nn.silu(g)
+    return jnp.einsum("bsf,fd->bsd", act * u, p["w_down"])
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense(ks[0], (d, e), jnp.float32),
+        "w_gate": _dense(ks[1], (e, d, f), dtype),
+        "w_up": _dense(ks[2], (e, d, f), dtype),
+        "w_down": _dense(ks[3], (e, f, d), dtype),
+    }
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+              impl: str = "sorted",
+              capacity_factor: Optional[float] = None,
+              mesh=None,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE.  Returns (y, router_load) where router_load is the
+    per-expert token fraction (feeds Algorithm 1's utilization signal).
+
+    impl="dense":        compute all experts, weight-combine (naive baseline).
+    impl="sorted":       TPU-native sorted dispatch into static per-expert
+                         capacity buffers + batched expert einsum (active
+                         FLOPs only, ~capacity_factor overhead).
+    impl="local_sorted": sorted dispatch wrapped in shard_map over the data
+                         axes — the argsort/scatter run PER SHARD (no global
+                         sort collectives; GSPMD keeps the expert einsums
+                         model-sharded via auto axes).  The production
+                         setting for long prefills.
+
+    capacity_factor=None means *no-drop* (per-expert capacity = T, exact);
+    a float (e.g. 1.25) bounds the buffer at T*k/E*cf with token dropping —
+    the production/dry-run setting.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if impl == "local_sorted":
+        if mesh is None:
+            mesh = jax.sharding.get_abstract_mesh()
+        dp = tuple(a for a in ("pod", "data")
+                   if a in getattr(mesh, "axis_names", ()))
+        if not dp:
+            impl = "sorted"
+        else:
+            from jax.sharding import PartitionSpec as _P
+            auto = frozenset(mesh.axis_names) - set(dp)
+
+            def local(xb, pb):
+                y, load = moe_apply(cfg, pb, xb, impl="sorted",
+                                    capacity_factor=capacity_factor)
+                n = 1
+                for a in dp:
+                    n *= mesh.shape[a]
+                return y, jax.lax.psum(load, dp) / n
+
+            return jax.shard_map(
+                local, mesh=mesh,
+                in_specs=(_P(dp, None, None), _P()),
+                out_specs=(_P(dp, None, None), _P()),
+                check_vma=False,
+                axis_names=set(dp))(x, p)
+    xt = x.reshape(b * s, d)
+    t = b * s
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                     # (T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    router_load = jnp.mean(jax.nn.one_hot(idx, e), axis=(0, 1))  # (E,)
+
+    def expert_ffn(xe, wg, wu, wd):
+        g = jnp.einsum("...cd,...df->...cf", xe, wg)
+        u = jnp.einsum("...cd,...df->...cf", xe, wu)
+        act = jax.nn.gelu(g) if cfg.activation == Activation.GEGLU \
+            else jax.nn.silu(g)
+        return jnp.einsum("...cf,...fd->...cd", act * u, wd)
+
+    if impl == "dense":
+        h = expert_ffn(xt[None].repeat(e, 0), p["w_gate"], p["w_up"],
+                       p["w_down"])                               # (E,T,d)
+        w = jnp.zeros((t, e), x.dtype).at[
+            jnp.arange(t)[:, None], idx].set(gate_vals.astype(x.dtype))
+        y = jnp.einsum("etd,te->td", h, w)
+        return y.reshape(b, s, d), router_load
+
+    # ---- sorted dispatch with static capacity ----
+    if capacity_factor is None:
+        cap = t                      # no token can be dropped (<=1 slot/expert)
+    else:
+        cap = int(math.ceil(t * k / e * capacity_factor))
+    cap = max(cap, 1)
+    eid = idx.reshape(-1)                                         # (T*k,)
+    gates = gate_vals.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(eid)                                      # stable
+    eid_s = eid[order]
+    tok_s = (order // k)
+    # rank of each row within its expert
+    ones = jnp.ones_like(eid_s)
+    csum = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(eid_s, jnp.arange(e))            # (E,)
+    rank = csum - seg_start[eid_s]
+    keep = rank < cap
+    dest = eid_s * cap + jnp.where(keep, rank, 0)
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], xt[tok_s], 0))
+    h = expert_ffn(buf.reshape(e, cap, d), p["w_gate"], p["w_up"],
+                   p["w_down"]).reshape(e * cap, d)
+    out_rows = jnp.where(keep[:, None], h[dest], 0)               # (T*k, d)
+    y = jnp.zeros((t, d), x.dtype).at[tok_s].add(
+        out_rows * gates[order][:, None].astype(x.dtype))
+    return y.reshape(b, s, d), router_load
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+def init_rglru(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    # Griffin: inner dim ~= d (we use exactly d for simplicity)
+    return {
+        "w_x": _dense(ks[0], (d, d), dtype),          # input branch
+        "w_y": _dense(ks[1], (d, d), dtype),          # gate branch (GeLU)
+        "conv_w": _dense(ks[2], (cfg.rglru_conv_width, d), dtype, scale=0.1),
+        "w_a": _dense(ks[3], (d, d), dtype),          # recurrence gate
+        "w_i": _dense(ks[4], (d, d), dtype),          # input gate
+        "a_param": (jnp.ones((d,), jnp.float32) * 2.0).astype(jnp.float32),
+        "w_out": _dense(ks[5], (d, d), dtype),
+    }
+
+
+def _rglru_scan(a: jax.Array, bx: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + bx_t  over time axis 1.  a,bx: (B,S,d)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    a_all, b_all = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return a_all * h0[:, None, :] + b_all
+
+
+def rglru_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                state: Optional[State], mode: str,
+                ) -> Tuple[jax.Array, Optional[State]]:
+    """state: {"h": (B,d), "conv": (B,W-1,d)}."""
+    b, s, d = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"]))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    # temporal conv (causal, width W)
+    w = cfg.rglru_conv_width
+    if state is not None:
+        hist = state["conv"]                          # (B, W-1, d)
+        u_pad = jnp.concatenate([hist, u], axis=1)
+        new_conv = u_pad[:, -(w - 1):, :] if w > 1 else hist
+    else:
+        u_pad = jnp.concatenate([jnp.zeros((b, w - 1, d), u.dtype), u], axis=1)
+        new_conv = None
+    conv = sum(u_pad[:, i:i + s, :] * p["conv_w"][i] for i in range(w))
+
+    # RG-LRU recurrence
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_a"]).astype(jnp.float32))
+    i_g = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_i"]).astype(jnp.float32))
+    log_a = -8.0 * r * jax.nn.softplus(p["a_param"])   # c=8 per Griffin
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    bx = beta * (i_g * conv.astype(jnp.float32))
+    h0 = state["h"].astype(jnp.float32) if state is not None \
+        else jnp.zeros((b, d), jnp.float32)
+    h = _rglru_scan(a, bx, h0)                        # (B,S,d)
+    y = (h.astype(x.dtype) * gate)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1, :].astype(state["h"].dtype),
+                     "conv": new_conv}
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg: ModelConfig, key, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense(ks[0], (d, inner), dtype),
+        "wq": _dense(ks[1], (inner, h, hd), dtype),
+        "wk": _dense(ks[2], (inner, h, hd), dtype),
+        "wv": _dense(ks[3], (inner, h, hd), dtype),
+        "w_if": _dense(ks[4], (inner, 2 * h), dtype),   # input+forget gate
+        "w_o": _dense(ks[5], (inner, inner), dtype),    # output gate
+        "w_down": _dense(ks[6], (inner, d), dtype),
+    }
+
+
+def mlstm_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                state: Optional[State], mode: str,
+                ) -> Tuple[jax.Array, Optional[State]]:
+    """Matrix-memory LSTM with exponential gating and stabilizer state.
+
+    state: {"C": (B,H,D,D), "n": (B,H,D), "m": (B,H)}.
+    C_t = f C_{t-1} + i v k^T;  n_t = f n_{t-1} + i k;  y = C q / max(|n.q|,1)
+    with log-space stabilization m_t = max(log f + m_{t-1}, log i).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    u = jnp.einsum("bsd,di->bsi", x, p["w_up"])
+    q = jnp.einsum("bsi,ihk->bshk", u, p["wq"]) / math.sqrt(hd)
+    k = jnp.einsum("bsi,ihk->bshk", u, p["wk"]) / math.sqrt(hd)
+    v = jnp.einsum("bsi,ihk->bshk", u, p["wv"])
+    gates = jnp.einsum("bsi,ig->bsg", u, p["w_if"]).astype(jnp.float32)
+    log_i = gates[..., :h]                          # (B,S,H) pre-exp input gate
+    log_f = jax.nn.log_sigmoid(gates[..., h:])      # (B,S,H)
+    ogate = jax.nn.sigmoid(jnp.einsum("bsi,ij->bsj", u, p["w_o"]))
+
+    if state is None:
+        C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = (state["C"].astype(jnp.float32),
+                      state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp                     # (B,H,D) x3, (B,H) x2
+        m_new = jnp.maximum(lf + m, li)
+        f_eff = jnp.exp(lf + m - m_new)              # (B,H)
+        i_eff = jnp.exp(li - m_new)
+        C = f_eff[..., None, None] * C + \
+            i_eff[..., None, None] * (vt[..., :, None] * kt[..., None, :])
+        n = f_eff[..., None] * n + i_eff[..., None] * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new))
+        yt = jnp.einsum("bhvk,bhk->bhv", C, qt) / denom[..., None]
+        return (C, n, m_new), yt
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          log_i.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h * hd).astype(x.dtype)
+    y = jnp.einsum("bsi,id->bsd", y * ogate.astype(x.dtype), p["w_down"])
+    new_state = None
+    if state is not None:
+        new_state = {"C": C.astype(state["C"].dtype),
+                     "n": n.astype(state["n"].dtype),
+                     "m": m.astype(state["m"].dtype)}
+    return y, new_state
+
+
+def init_slstm(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": _dense(ks[0], (d, 4 * d), dtype),    # z, i, f, o pre-acts
+        "r_gates": _dense(ks[1], (d, 4 * d), dtype, scale=0.1),  # recurrent mix
+        "w_out": _dense(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                state: Optional[State], mode: str,
+                ) -> Tuple[jax.Array, Optional[State]]:
+    """Scalar-memory LSTM with exponential gating + hidden recurrent mixing.
+
+    state: {"c": (B,d), "n": (B,d), "m": (B,d), "h": (B,d)}.
+    """
+    b, s, d = x.shape
+    pre_x = jnp.einsum("bsd,dg->bsg", x, p["w_gates"]).astype(jnp.float32)
+    if state is None:
+        c0 = n0 = h0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), -1e30, jnp.float32)
+    else:
+        c0, n0, m0, h0 = (state[k].astype(jnp.float32)
+                          for k in ("c", "n", "m", "h"))
+
+    r_w = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        pre = pre_t + jnp.einsum("bd,dg->bg", h, r_w)
+        z, li, lf_raw, o = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        lf = jax.nn.log_sigmoid(lf_raw)
+        m_new = jnp.maximum(lf + m, li)
+        f_eff = jnp.exp(lf + m - m_new)
+        i_eff = jnp.exp(li - m_new)
+        c = f_eff * c + i_eff * z
+        n = f_eff * n + i_eff
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    (c, n, m, h), ys = jax.lax.scan(step, (c0, n0, m0, h0),
+                                    pre_x.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    new_state = None
+    if state is not None:
+        new_state = {"c": c.astype(state["c"].dtype),
+                     "n": n.astype(state["n"].dtype),
+                     "m": m.astype(state["m"].dtype),
+                     "h": h.astype(state["h"].dtype)}
+    return y, new_state

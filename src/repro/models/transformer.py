@@ -1,0 +1,366 @@
+"""Transformer stacks: init / train / prefill / decode for every family.
+
+The layer stack is grouped by the config's ``block_pattern``: layers are
+reshaped into (n_repeats, pattern_len) and executed with ``lax.scan`` over
+repeats (keeps HLO size bounded at 126 layers), with any remainder layers
+(n_layers % pattern_len) applied unrolled at the end.
+
+Public API
+----------
+    params                 = init(cfg, key, dtype)
+    cache                  = init_cache(cfg, batch, max_len, dtype)
+    logits, cache, aux     = apply(cfg, params, tokens, cache=..., mode=...)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import quant as Q
+from .config import BlockKind, ModelConfig
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+_ATTN_KINDS = (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: BlockKind, key, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in _ATTN_KINDS:
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+        if cfg.cross_attention:
+            p["cross"] = L.init_attention(cfg, ks[3], dtype)
+            p["cross_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.d_ff > 0:
+            p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+            p["ffn"] = (L.init_moe(cfg, ks[1], dtype) if cfg.n_experts > 0
+                        else L.init_mlp(cfg, ks[1], dtype))
+    elif kind == BlockKind.RGLRU:
+        p["rec"] = L.init_rglru(cfg, ks[0], dtype)
+        if cfg.d_ff > 0:
+            p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+            p["ffn"] = L.init_mlp(cfg, ks[1], dtype)
+    elif kind == BlockKind.MLSTM:
+        p["rec"] = L.init_mlstm(cfg, ks[0], dtype)
+    elif kind == BlockKind.SLSTM:
+        p["rec"] = L.init_slstm(cfg, ks[0], dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _group_shapes(cfg: ModelConfig):
+    """(pattern, n_repeats, n_remainder)."""
+    pat = cfg.block_pattern
+    n_rep = cfg.n_layers // len(pat)
+    rem = cfg.n_layers % len(pat)
+    return pat, n_rep, rem
+
+
+def init(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Params:
+    pat, n_rep, rem = _group_shapes(cfg)
+    k_emb, k_layers, k_rem = jax.random.split(key, 3)
+    params: Params = {
+        "embed": L._dense(k_emb, (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "out_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._dense(k_rem, (cfg.d_model, cfg.vocab_size),
+                                     dtype, scale=0.02)
+    # stacked params per pattern position: vmap init over repeats
+    groups = []
+    for g, kind in enumerate(pat):
+        keys = jax.random.split(jax.random.fold_in(k_layers, g), max(n_rep, 1))
+        stacked = jax.vmap(lambda k: _init_block(cfg, kind, k, dtype))(keys)
+        groups.append(stacked)
+    params["groups"] = tuple(groups)
+    params["rem"] = tuple(
+        _init_block(cfg, pat[i], jax.random.fold_in(k_rem, i), dtype)
+        for i in range(rem))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _block_state(cfg: ModelConfig, kind: BlockKind, batch: int,
+                 max_len: int, dtype) -> Dict[str, jax.Array]:
+    if kind in _ATTN_KINDS:
+        window = cfg.local_window if kind == BlockKind.LOCAL_ATTENTION \
+            else cfg.sliding_window
+        clen = min(max_len, window) if window else max_len
+        kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+        st = {
+            "k": jnp.zeros((batch, clen, cfg.n_kv_heads, cfg.head_dim),
+                           kv_dtype),
+            "v": jnp.zeros((batch, clen, cfg.n_kv_heads, cfg.head_dim),
+                           kv_dtype),
+            "pos": jnp.full((batch, clen), -1, jnp.int32),
+        }
+        if cfg.kv_quant:
+            st["k_scale"] = jnp.zeros((batch, clen, cfg.n_kv_heads),
+                                      jnp.float32)
+            st["v_scale"] = jnp.zeros((batch, clen, cfg.n_kv_heads),
+                                      jnp.float32)
+        if cfg.cross_attention:
+            st["cross"] = {
+                "k": jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+            }
+        return st
+    if kind == BlockKind.RGLRU:
+        return {"h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1,
+                                   cfg.d_model), dtype)}
+    if kind == BlockKind.MLSTM:
+        h, hd = cfg.n_heads, cfg.head_dim
+        return {"C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, h, hd), jnp.float32),
+                "m": jnp.full((batch, h), -1e30, jnp.float32)}
+    if kind == BlockKind.SLSTM:
+        d = cfg.d_model
+        return {"c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.zeros((batch, d), jnp.float32),
+                "m": jnp.full((batch, d), -1e30, jnp.float32),
+                "h": jnp.zeros((batch, d), jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> Cache:
+    pat, n_rep, rem = _group_shapes(cfg)
+    groups = []
+    for kind in pat:
+        st = _block_state(cfg, kind, batch, max_len, dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape).copy(), st)
+        groups.append(stacked)
+    return {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "groups": tuple(groups),
+        "rem": tuple(_block_state(cfg, pat[i], batch, max_len, dtype)
+                     for i in range(rem)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Params, x: jax.Array,
+                 *, positions, state, mode, frames, moe_impl: str,
+                 moe_cf=None, moe_mesh=None, prefix_aware: bool = False,
+                 fresh_prefill: bool = False, head_offload: int = 0,
+                 ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_state, router_load)."""
+    p = Q.dequant_tree(p, x.dtype)      # no-op unless weights are int8
+    router_load = jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)
+    h = L.rms_norm(x, p["norm1"], cfg.rms_eps)
+    if kind in _ATTN_KINDS:
+        window = cfg.local_window if kind == BlockKind.LOCAL_ATTENTION \
+            else cfg.sliding_window
+        self_state = None
+        cross_state = None
+        if state is not None:
+            keys = ("k", "v", "pos") + (("k_scale", "v_scale")
+                                        if cfg.kv_quant else ())
+            self_state = {k: state[k] for k in keys}
+            cross_state = state.get("cross")
+        y, new_self, new_cross = L.attention_apply(
+            cfg, p["attn"], h, positions=positions, state=self_state,
+            mode=mode, window=window, frames=frames,
+            cross_p=p.get("cross"), cross_state=cross_state,
+            prefix_aware=prefix_aware, fresh_prefill=fresh_prefill,
+            head_offload=head_offload)
+        x = x + y
+        new_state = None
+        if state is not None:
+            new_state = dict(new_self)
+            if cfg.cross_attention:
+                new_state["cross"] = new_cross if new_cross is not None \
+                    else cross_state
+        if cfg.d_ff > 0:
+            h2 = L.rms_norm(x, p["norm2"], cfg.rms_eps)
+            if cfg.n_experts > 0:
+                y2, router_load = L.moe_apply(cfg, p["ffn"], h2, impl=moe_impl,
+                                              capacity_factor=moe_cf,
+                                              mesh=moe_mesh)
+            else:
+                y2 = L.mlp_apply(cfg, p["ffn"], h2)
+            x = x + y2
+        return x, new_state, router_load
+    if kind == BlockKind.RGLRU:
+        y, new_state = L.rglru_apply(cfg, p["rec"], h, state=state, mode=mode)
+        x = x + y
+        if cfg.d_ff > 0:
+            h2 = L.rms_norm(x, p["norm2"], cfg.rms_eps)
+            x = x + L.mlp_apply(cfg, p["ffn"], h2)
+        return x, new_state, router_load
+    if kind == BlockKind.MLSTM:
+        y, new_state = L.mlstm_apply(cfg, p["rec"], h, state=state, mode=mode)
+        return x + y, new_state, router_load
+    if kind == BlockKind.SLSTM:
+        y, new_state = L.slstm_apply(cfg, p["rec"], h, state=state, mode=mode)
+        return x + y, new_state, router_load
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+          cache: Optional[Cache] = None,
+          frames: Optional[jax.Array] = None,
+          mode: str = "train",
+          moe_impl: str = "sorted",
+          moe_cf=None,
+          moe_mesh=None,
+          prefix_aware: bool = False,
+          fresh_prefill: bool = False,
+          head_offload: int = 0,
+          remat: bool = False,
+          act_spec=None,
+          param_hook=None,
+          logits_slice: str = "all",
+          ) -> Tuple[jax.Array, Optional[Cache], Dict[str, jax.Array]]:
+    """Run the stack.
+
+    tokens: (B, S) int32.  mode: train | prefill | decode.
+    logits_slice: "all" -> (B,S,V); "last" -> (B,V) (serving fast path).
+    """
+    pat, n_rep, rem = _group_shapes(cfg)
+    b, s = tokens.shape
+    if cache is not None:
+        lengths = cache["lengths"]
+        positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                     (b, s))
+    compute_dtype = params["out_norm"].dtype    # norms are never quantized
+    embed = Q.dequant(params["embed"], compute_dtype)
+    x = embed[tokens].astype(embed.dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.family.value in (
+        "hybrid",) else x  # gemma-style embedding scaling for recurrentgemma
+
+    loads = []
+
+    def body(carry, xs):
+        x = carry
+        if act_spec is not None:
+            # shard the residual stream (remat-saved) over the model axis:
+            # cuts per-chip checkpoint memory by the model-axis size
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        layer_params, states = xs
+        if param_hook is not None:
+            layer_params = tuple(param_hook(lp) for lp in layer_params)
+        new_states = []
+        load_acc = jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)
+        for g, kind in enumerate(pat):
+            st = states[g] if states is not None else None
+            x, ns, rl = _apply_block(
+                cfg, kind, layer_params[g], x, positions=positions,
+                state=st, mode=mode, frames=frames, moe_impl=moe_impl,
+                moe_cf=moe_cf, moe_mesh=moe_mesh, prefix_aware=prefix_aware,
+                fresh_prefill=fresh_prefill, head_offload=head_offload)
+            new_states.append(ns if ns is not None else {})
+            load_acc = load_acc + rl
+        if act_spec is not None:
+            # pin the scan carry too: what remat saves per layer is the
+            # carry, so this is the constraint that actually shrinks the
+            # per-chip checkpoint footprint
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        return x, (tuple(new_states), load_acc)
+
+    group_params = params["groups"]
+    if cache is not None:
+        xs = (group_params, cache["groups"])
+    else:
+        xs = (group_params, None)
+
+    if n_rep > 0:
+        if cache is not None:
+            x, (new_group_states, load_scan) = jax.lax.scan(
+                body, x, (group_params, cache["groups"]))
+        else:
+            def body_nostate(carry, lp):
+                y, (ns, la) = body(carry, (lp, None))
+                return y, la
+            if remat:
+                body_nostate = jax.checkpoint(body_nostate)
+            x, load_scan = jax.lax.scan(body_nostate, x, group_params)
+            new_group_states = None
+        loads.append(jnp.sum(load_scan, axis=0))
+    else:
+        new_group_states = cache["groups"] if cache is not None else None
+
+    # remainder layers, unrolled
+    new_rem_states = []
+    for i in range(rem):
+        st = cache["rem"][i] if cache is not None else None
+        if param_hook is not None:
+            params = dict(params)
+            params["rem"] = tuple(param_hook(rp) for rp in params["rem"])
+        x, ns, rl = _apply_block(
+            cfg, pat[i], params["rem"][i], x, positions=positions,
+            state=st, mode=mode, frames=frames, moe_impl=moe_impl,
+            moe_cf=moe_cf, moe_mesh=moe_mesh, prefix_aware=prefix_aware,
+            fresh_prefill=fresh_prefill, head_offload=head_offload)
+        new_rem_states.append(ns if ns is not None else {})
+        loads.append(rl)
+
+    x = L.rms_norm(x, params["out_norm"], cfg.rms_eps)
+    if logits_slice == "last":
+        x = x[:, -1, :]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x,
+                            Q.dequant(params["embed"], compute_dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x,
+                            Q.dequant(params["unembed"], compute_dtype))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "lengths": cache["lengths"] + s,
+            "groups": new_group_states,
+            "rem": tuple(new_rem_states),
+        }
+    aux = {"router_load": sum(loads) / max(cfg.n_layers, 1)}
+    return logits, new_cache, aux
+
+
+# Convenience entry points --------------------------------------------------
+
+def forward_train(cfg, params, tokens, frames=None, moe_impl="sorted",
+                  moe_cf=None, remat=False, act_spec=None):
+    logits, _, aux = apply(cfg, params, tokens, frames=frames, mode="train",
+                           moe_impl=moe_impl, moe_cf=moe_cf, remat=remat,
+                           act_spec=act_spec)
+    return logits, aux
+
+
+def prefill(cfg, params, tokens, cache, frames=None, moe_impl="sorted",
+            prefix_aware=False):
+    return apply(cfg, params, tokens, cache=cache, frames=frames,
+                 mode="prefill", moe_impl=moe_impl, logits_slice="last",
+                 prefix_aware=prefix_aware)
+
+
+def decode_step(cfg, params, token, cache, frames=None, moe_impl="sorted"):
+    """token: (B, 1)."""
+    return apply(cfg, params, token, cache=cache, frames=frames,
+                 mode="decode", moe_impl=moe_impl, logits_slice="last")

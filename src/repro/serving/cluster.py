@@ -1,0 +1,635 @@
+"""Discrete-event cluster simulator for disaggregated LLM serving.
+
+Reproduces the paper's system-level comparisons (Figures 8–11) on this
+CPU-only container: per-step costs come from the §4.3 analytical model
+(core.analytical) instead of GPU wall clocks, so results are *relative*
+orderings across systems, not absolute tokens/s.
+
+Three system models share one event loop:
+
+* ``colocated``  (vLLM-like): every instance serves prefill AND decode;
+  prefill jobs preempt decode iterations (compute contention — §2.2).
+* ``static_pd``  (DistServe-like): fixed prefill/decode instance split,
+  per-instance prefix caches, prefix-cache-aware routing (Fig. 2a baseline),
+  KV transfer charged between tiers.
+* ``banaserve``: PD split + Global KV Cache Store (shared prefix cache, no
+  locality constraint), load-aware routing (Algorithm 2), and the Algorithm 1
+  migration controller continuously shifting capacity between the prefill
+  and decode roles (layer-level) and across decode instances (KV-head
+  level).
+
+Capacity abstraction: layer-level migration moves fractions of an
+instance's compute between roles (a GPU holding k of N layers of the
+prefill replica contributes k/N of a GPU to the prefill tier) — the
+system-level effect of Fig. 3 without simulating per-layer pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import analytical as A
+from ..core.kvstore import GlobalKVStore
+from ..core.migration import (ControllerConfig, DeviceLoad, MigrationAction,
+                              MigrationController, MigrationKind)
+from ..core.pipeline import PipelineModel
+from ..core.scheduling import (InstanceLoad, LoadAwareRouter,
+                               PrefixAwareRouter, RequestInfo,
+                               RoundRobinRouter)
+from ..models.config import ModelConfig
+from .request import Metrics, Request
+from .workload import WorkloadConfig, generate
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    model: ModelConfig
+    mode: str = "banaserve"            # colocated | static_pd | banaserve
+    hw: A.HardwareProfile = A.A100_80G
+    n_instances: int = 4
+    prefill_fraction: float = 0.5      # initial/static role split (PD modes)
+    decode_batch_max: int = 64
+    router: str = "load_aware"         # load_aware | prefix_aware | round_robin
+    global_store: bool = True
+    migration: bool = True
+    control_interval: float = 0.25
+    efficiency: float = 0.5            # MFU for prefill compute
+    local_cache_groups: int = 2        # per-instance prefix cache capacity
+    util_window: float = 1.0           # utilization EMA window (s)
+
+    @staticmethod
+    def preset(model: ModelConfig, system: str, n_instances: int = 4,
+               hw: A.HardwareProfile = A.A100_80G) -> "SimConfig":
+        if system == "vllm":
+            return SimConfig(model, "colocated", hw, n_instances,
+                             router="prefix_aware", global_store=False,
+                             migration=False)
+        if system == "distserve":
+            return SimConfig(model, "static_pd", hw, n_instances,
+                             router="prefix_aware", global_store=False,
+                             migration=False)
+        if system == "banaserve":
+            return SimConfig(model, "banaserve", hw, n_instances,
+                             router="load_aware", global_store=True,
+                             migration=True)
+        raise ValueError(system)
+
+
+@dataclasses.dataclass
+class _DecodeSlot:
+    req: Request
+    remaining: int
+    context: int
+
+
+class _Instance:
+    def __init__(self, name: str, prefill_cap: float, decode_cap: float):
+        self.name = name
+        self.prefill_cap = prefill_cap
+        self.decode_cap = decode_cap
+        self.prefill_queue: List[Request] = []
+        self.busy_until = 0.0
+        self.decode_slots: List[_DecodeSlot] = []
+        self.decode_iter_scheduled = False
+        self.kv_tokens = 0
+        self.busy: float = 0.0            # cumulative compute-busy seconds
+        self.util_ema = 0.0
+        self._last_util_t = 0.0
+        self.local_prefix: Dict[int, int] = {}
+        self.mig_frozen_until = 0.0       # capacity unavailable during move
+        self.work_p = 0.0                 # cumulative prefill work (cap-1 s)
+        self.work_d = 0.0                 # cumulative decode work (cap-1 s)
+
+    def compute_frac(self, now: float, window: float) -> float:
+        return min(self.util_ema, 1.0)
+
+    def note_busy(self, start: float, dur: float, window: float):
+        self.busy += dur
+        # EMA update at completion time
+        t = start + dur
+        dt = max(t - self._last_util_t, 1e-9)
+        inst_util = min(dur / dt, 1.0)
+        a = min(dt / window, 1.0)
+        self.util_ema = (1 - a) * self.util_ema + a * inst_util
+        self._last_util_t = t
+
+    def decay_util(self, now: float, window: float):
+        dt = max(now - self._last_util_t, 0.0)
+        if dt > 0:
+            a = min(dt / window, 1.0)
+            self.util_ema *= (1 - a)
+            self._last_util_t = now
+
+
+class ClusterSim:
+    def __init__(self, cfg: SimConfig, workload: WorkloadConfig):
+        self.cfg = cfg
+        self.wcfg = workload
+        self.model = cfg.model
+        self.metrics = Metrics()
+        self.events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.migration_log: List[Tuple[float, MigrationAction]] = []
+        self.util_trace: List[Tuple[float, Dict[str, float]]] = []
+
+        n = cfg.n_instances
+        if cfg.mode == "colocated":
+            self.instances = [_Instance(f"gpu{i}", 1.0, 1.0) for i in range(n)]
+            self.prefill_insts = self.instances
+            self.decode_insts = self.instances
+        else:
+            n_p = max(1, int(round(n * cfg.prefill_fraction)))
+            n_p = min(n_p, n - 1)
+            self.instances = (
+                [_Instance(f"prefill{i}", 1.0, 0.0) for i in range(n_p)]
+                + [_Instance(f"decode{i}", 0.0, 1.0) for i in range(n - n_p)])
+            self.prefill_insts = self.instances[:n_p]
+            self.decode_insts = self.instances[n_p:]
+        self.by_name = {i.name: i for i in self.instances}
+
+        if cfg.router == "load_aware":
+            self.router = LoadAwareRouter()
+        elif cfg.router == "prefix_aware":
+            self.router = PrefixAwareRouter()
+        else:
+            self.router = RoundRobinRouter()
+
+        self.store = GlobalKVStore(block_size=64) if cfg.global_store else None
+        self.global_prefix: Dict[int, int] = {}   # prefix_id -> cached len
+
+        if cfg.migration and cfg.mode == "banaserve":
+            self.controller = MigrationController(
+                ControllerConfig(rho=1.0, max_actions_per_cycle=2),
+                self._migration_cost)
+        else:
+            self.controller = None
+        self._last_work: Dict[str, Tuple[float, float]] = {
+            i.name: (0.0, 0.0) for i in self.instances}
+        self._decode_wait = 0
+        # banaserve: Algorithm 2 dispatches from a central queue each cycle
+        # (requests are never stranded on an instance whose capacity moved)
+        self.pending: List[Request] = []
+        self._last_ctl_t = 0.0
+        self._tier_rates = (0.0, 0.0)     # (prefill, decode) demand rates
+        self._layer_dir: Optional[str] = None   # anti-thrash cooldown
+        self._layer_dir_t = -1e9
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None):
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, payload))
+
+    # -- cost models -----------------------------------------------------
+    def _prefill_time(self, inst: _Instance, req: Request,
+                      cached: int) -> float:
+        eff_len = max(req.prompt_len - cached, 1)
+        t = A.prefill_time(self.model, eff_len, self.cfg.hw,
+                           efficiency=self.cfg.efficiency)
+        cap = max(inst.prefill_cap, 0.05)
+        t = t / cap
+        if cached > 0:
+            # layer-wise overlapped fetch: charge only the residual stall
+            pm = PipelineModel.from_workload(
+                t_forward_total=t, hit_rate=cached / max(req.prompt_len, 1),
+                n_layers=self.model.n_layers,
+                kv_bytes_per_token_layer=self.model.
+                kv_bytes_per_token_per_layer(),
+                seq_len=req.prompt_len, bandwidth_bps=self.cfg.hw.host_bw)
+            t += pm.residual_stall()
+        return t
+
+    def _decode_iter_time(self, inst: _Instance) -> float:
+        if not inst.decode_slots:
+            return 0.0
+        batch = len(inst.decode_slots)
+        ctx = int(np.mean([s.context for s in inst.decode_slots]))
+        t = A.decode_time_per_token(self.model, ctx, self.cfg.hw, batch=batch)
+        t = t / max(inst.decode_cap, 0.05)
+        if self.cfg.mode == "colocated":
+            t += 1.5e-3        # monolithic scheduler overhead per iteration
+        return t
+
+    # -- migration plumbing ------------------------------------------------
+    def _layer_quantum(self, amount: int) -> float:
+        """Capacity fraction moved by migrating ``amount`` layer groups.
+        Scaled so repeated actions converge to a full role flip quickly —
+        fractional decode capacity amortizes weight reads poorly, so the
+        controller prefers whole-instance repurposing."""
+        return min(1.0, amount / max(self.model.n_layers, 1) * 20)
+
+    def _tier_demands(self) -> Tuple[float, float]:
+        """(D_p, D_d): cluster demand per role in cap-1 GPU-seconds/second,
+        including queued prefill backlog amortized over a short horizon."""
+        dt = max(self.now - self._last_ctl_t, 1e-6)
+        horizon = 4 * self.cfg.control_interval
+        d_p = d_d = 0.0
+        for inst in self.instances:
+            lp, ld = self._last_work[inst.name]
+            d_p += (inst.work_p - lp) / dt
+            d_d += (inst.work_d - ld) / dt
+            for req in inst.prefill_queue:
+                d_p += A.prefill_time(self.model, req.prompt_len, self.cfg.hw,
+                                      efficiency=self.cfg.efficiency) / horizon
+        horizon2 = 4 * self.cfg.control_interval
+        for req in self.pending:
+            d_p += A.prefill_time(self.model, req.prompt_len, self.cfg.hw,
+                                  efficiency=self.cfg.efficiency) / horizon2
+        # requests bounced off a full decode tier = unmet slot demand
+        d_d += self._decode_wait / max(self.cfg.decode_batch_max, 1)
+        self._decode_wait = 0
+        return d_p, d_d
+
+    def _tier_caps(self) -> Tuple[float, float]:
+        return (sum(i.prefill_cap for i in self.instances),
+                sum(i.decode_cap for i in self.instances))
+
+    def _starved_role_global(self) -> str:
+        d_p, d_d = self._tier_rates
+        c_p, c_d = self._tier_caps()
+        return "prefill" if d_p / max(c_p, 1e-6) >= d_d / max(c_d, 1e-6) \
+            else "decode"
+
+    def _migration_cost(self, kind: MigrationKind, d_o: DeviceLoad,
+                        d_u: DeviceLoad, amount: int
+                        ) -> Tuple[float, float]:
+        src = self.by_name[d_o.device]
+        dst = self.by_name[d_u.device]
+        step = self._layer_quantum(amount)
+        if kind == MigrationKind.LAYER:
+            cost = A.layer_migration_time(self.model, amount,
+                                          kv_tokens=src.kv_tokens,
+                                          hw=self.cfg.hw)
+            # truthful benefit: reduction in max tier utilization after
+            # repurposing `step` of dst's capacity toward the starved role
+            d_p, d_d = self._tier_rates
+            c_p, c_d = self._tier_caps()
+            role = self._starved_role_global()
+            if role == "prefill":
+                m = min(step, dst.decode_cap, max(c_d - 0.25, 0.0))
+                c_p2, c_d2 = c_p + m, c_d - m
+            else:
+                m = min(step, dst.prefill_cap, max(c_p - 0.25, 0.0))
+                c_p2, c_d2 = c_p - m, c_d + m
+            if m <= 1e-9:
+                return 0.0, max(cost, 1e-6)
+            # anti-thrash: direction reversals need a 2 s cooldown
+            if (self._layer_dir is not None and self._layer_dir != role
+                    and self.now - self._layer_dir_t < 2.0):
+                return 0.0, max(cost, 1e-6)
+            u = lambda d, c: d / max(c, 1e-6)
+            before = max(u(d_p, c_p), u(d_d, c_d))
+            after = max(u(d_p, c_p2), u(d_d, c_d2))
+            benefit = (before - after) * 2.0
+        else:
+            kv_share = src.kv_tokens // max(self.model.n_kv_heads, 1)
+            cost = A.attention_migration_time(self.model, amount,
+                                              kv_tokens=kv_share,
+                                              hw=self.cfg.hw)
+            gap = d_o.utilization - d_u.utilization
+            # rebalances decode load only if both ends decode
+            can = (src.decode_cap > 0 and dst.decode_cap > 0
+                   and len(src.decode_slots) > 2 * len(dst.decode_slots)
+                   and len(dst.decode_slots) < self.cfg.decode_batch_max)
+            benefit = gap * 0.25 if can else 0.0
+        return benefit, max(cost, 1e-6)
+
+    def _apply_migration(self, act: MigrationAction):
+        src = self.by_name[act.src]
+        dst = self.by_name[act.dst]
+        step = act.amount / max(self.model.n_layers, 1) * 8
+        if act.kind == MigrationKind.LAYER:
+            # Fig. 3: layers of the starved role's replica move onto the
+            # underloaded device — i.e. dst's idle capacity is repurposed.
+            role = self._starved_role_global()
+            self._layer_dir = role
+            self._layer_dir_t = self.now
+            # never drain a role below a cluster-wide floor (the serving
+            # path must always exist — Eq. 2's feasibility constraint)
+            tot_p = sum(i.prefill_cap for i in self.instances)
+            tot_d = sum(i.decode_cap for i in self.instances)
+            if role == "prefill":
+                moved = min(step, dst.decode_cap, max(tot_d - 0.25, 0.0))
+                dst.decode_cap -= moved
+                dst.prefill_cap += moved
+            else:
+                moved = min(step, dst.prefill_cap, max(tot_p - 0.25, 0.0))
+                dst.prefill_cap -= moved
+                dst.decode_cap += moved
+            if role == "prefill" and moved > 0 and dst.decode_slots:
+                # the migrated layers' KV moves too: evacuate the same
+                # fraction of resident decode requests to other decoders
+                frac = moved / max(dst.decode_cap + moved, 1e-9)
+                n_ev = int(len(dst.decode_slots) * frac)
+                others = [i for i in self._decode_candidates()
+                          if i is not dst
+                          and len(i.decode_slots) < self.cfg.decode_batch_max]
+                while n_ev > 0 and others:
+                    tgt = min(others, key=lambda i: len(i.decode_slots))
+                    if len(tgt.decode_slots) >= self.cfg.decode_batch_max:
+                        others.remove(tgt)
+                        continue
+                    slot = dst.decode_slots.pop()
+                    dst.kv_tokens -= slot.context
+                    tgt.kv_tokens += slot.context
+                    tgt.decode_slots.append(slot)
+                    self._schedule_decode(tgt)
+                    n_ev -= 1
+            if self.cfg.mode == "banaserve":
+                self._dispatch_pending()
+            elif dst.prefill_cap > 0 and dst.prefill_queue:
+                self._try_start_prefill(dst)
+        else:  # KV_HEADS: move decode slots (KV) from hot to cold decoder
+            n_move = max(1, len(src.decode_slots) // 4)
+            for _ in range(n_move):
+                if not src.decode_slots or \
+                        len(dst.decode_slots) >= self.cfg.decode_batch_max:
+                    break
+                slot = src.decode_slots.pop()
+                src.kv_tokens -= slot.context
+                dst.kv_tokens += slot.context
+                dst.decode_slots.append(slot)
+            self._schedule_decode(dst)
+        dst.mig_frozen_until = self.now + act.predicted_cost
+        self.migration_log.append((self.now, act))
+
+    # -- load snapshots -----------------------------------------------------
+    def _device_loads(self) -> List[DeviceLoad]:
+        out = []
+        kv_bytes_tok = self.model.kv_bytes_per_token()
+        dt = max(self.now - self._last_ctl_t, 1e-6)
+        horizon = 4 * self.cfg.control_interval
+        for inst in self.instances:
+            inst.decay_util(self.now, self.cfg.util_window)
+            mem = inst.kv_tokens * kv_bytes_tok / self.cfg.hw.hbm_bytes
+            lp, ld = self._last_work[inst.name]
+            rate = ((inst.work_p - lp) + (inst.work_d - ld)) / dt
+            backlog = sum(
+                A.prefill_time(self.model, r.prompt_len, self.cfg.hw,
+                               efficiency=self.cfg.efficiency)
+                for r in inst.prefill_queue) / horizon
+            total_cap = max(inst.prefill_cap + inst.decode_cap, 1e-6)
+            out.append(DeviceLoad(
+                device=inst.name,
+                compute_frac=min((rate + backlog) / total_cap, 1.0),
+                memory_frac=min(mem * 8, 1.0),   # KV pool is ~1/8 of HBM
+                supports_layer=True,
+                supports_attention=(inst.decode_cap > 0),
+            ))
+        return out
+
+    def _instance_loads(self, insts: List[_Instance]) -> List[InstanceLoad]:
+        out = []
+        kv_bytes_tok = self.model.kv_bytes_per_token()
+        for inst in insts:
+            inst.decay_util(self.now, self.cfg.util_window)
+            mem = min(inst.kv_tokens * kv_bytes_tok * 8
+                      / self.cfg.hw.hbm_bytes, 1.0)
+            il = InstanceLoad(inst.name,
+                              load=inst.compute_frac(
+                                  self.now, self.cfg.util_window) + mem,
+                              queue_len=len(inst.prefill_queue))
+            il.cached_prefix_tokens = {
+                bytes([gid % 256]): ln
+                for gid, ln in inst.local_prefix.items()}
+            out.append(il)
+        return out
+
+    # -- event handlers -----------------------------------------------------
+    def _prefill_candidates(self) -> List[_Instance]:
+        return [i for i in self.instances if i.prefill_cap > 0]
+
+    def _decode_candidates(self) -> List[_Instance]:
+        return [i for i in self.instances if i.decode_cap > 0]
+
+    def _on_arrival(self, req: Request):
+        if self.cfg.mode == "banaserve":
+            self.pending.append(req)
+            self._dispatch_pending()
+            return
+        loads = self._instance_loads(self._prefill_candidates())
+        pkey = None
+        if req.prefix_id is not None:
+            pkey = bytes([req.prefix_id % 256])
+        info = RequestInfo(req.rid, req.prompt_len,
+                           est_load=min(req.prompt_len / 4096, 1.0),
+                           prefix_key=pkey)
+        plan = self.router.dispatch([info], loads)
+        inst = self.by_name[plan[req.rid]]
+        req.prefill_instance = inst.name
+        inst.prefill_queue.append(req)
+        self._try_start_prefill(inst)
+
+    def _dispatch_pending(self):
+        """Algorithm 2 over the central queue: hand requests to idle
+        prefill-capable instances, least-loaded first."""
+        while self.pending:
+            idle = [i for i in self._prefill_candidates()
+                    if i.busy_until <= self.now and not i.prefill_queue]
+            if not idle:
+                return
+            loads = self._instance_loads(idle)
+            req = self.pending.pop(0)
+            info = RequestInfo(req.rid, req.prompt_len,
+                               est_load=min(req.prompt_len / 4096, 1.0))
+            plan = self.router.dispatch([info], loads)
+            inst = self.by_name[plan[req.rid]]
+            req.prefill_instance = inst.name
+            inst.prefill_queue.append(req)
+            self._try_start_prefill(inst)
+
+    def _cached_tokens(self, inst: _Instance, req: Request) -> int:
+        if req.prefix_id is None:
+            return 0
+        if self.store is not None:                     # Global KV Store
+            got = self.global_prefix.get(req.prefix_id, 0)
+            return min(got, req.prefix_len)
+        got = inst.local_prefix.get(req.prefix_id, 0)  # local cache only
+        return min(got, req.prefix_len)
+
+    def _try_start_prefill(self, inst: _Instance):
+        if inst.busy_until > self.now or not inst.prefill_queue:
+            return
+        if inst.prefill_cap <= 0:
+            return
+        # colocated contention: prefill preempts — decode iters stall behind
+        req = inst.prefill_queue.pop(0)
+        cached = self._cached_tokens(inst, req)
+        req.cached_tokens = cached
+        req.t_prefill_start = self.now
+        dur = self._prefill_time(inst, req, cached)
+        inst.work_p += dur * max(inst.prefill_cap, 0.05)
+        inst.busy_until = self.now + dur
+        inst.note_busy(self.now, dur, self.cfg.util_window)
+        self._push(self.now + dur, "prefill_done", (inst.name, req))
+
+    def _on_prefill_done(self, inst: _Instance, req: Request):
+        # record cache contents
+        if req.prefix_id is not None:
+            if self.store is not None:
+                self.global_prefix[req.prefix_id] = max(
+                    self.global_prefix.get(req.prefix_id, 0), req.prefix_len)
+            else:
+                if len(inst.local_prefix) >= self.cfg.local_cache_groups and \
+                        req.prefix_id not in inst.local_prefix:
+                    inst.local_prefix.pop(next(iter(inst.local_prefix)))
+                inst.local_prefix[req.prefix_id] = req.prefix_len
+        # pick decode instance (least KV pressure) & charge KV transfer
+        cands = [i for i in self._decode_candidates()
+                 if len(i.decode_slots) < self.cfg.decode_batch_max]
+        if not cands:
+            # decode tier saturated: requeue (head-of-line) and retry shortly
+            self._decode_wait += 1
+            self._push(self.now + 0.01, "prefill_done", (inst.name, req))
+            return
+        # capacity-weighted placement: balance per-slot service rate
+        dec = min(cands, key=lambda i: (
+            (len(i.decode_slots) + 1) / max(i.decode_cap, 0.05),
+            i.kv_tokens))
+        t_x = 0.0
+        if dec is not inst:
+            t_x = A.kv_transfer_time(self.model, req.prompt_len, self.cfg.hw)
+        req.decode_instance = dec.name
+        req.t_first_token = self.now + t_x
+        req.generated.append(0)
+        dec.decode_slots.append(
+            _DecodeSlot(req, max(req.max_new_tokens - 1, 0),
+                        req.prompt_len + 1))
+        dec.kv_tokens += req.prompt_len
+        self._push(self.now + t_x, "decode_kick", dec.name)
+        self._try_start_prefill(inst)
+        if self.cfg.mode == "banaserve":
+            self._dispatch_pending()
+
+    def _schedule_decode(self, inst: _Instance):
+        if inst.decode_iter_scheduled or not inst.decode_slots:
+            return
+        start = max(self.now, inst.mig_frozen_until)
+        if self.cfg.mode == "colocated":
+            # exclusive compute: decode waits for any running prefill and
+            # occupies the timeline (the §2.2 interference)
+            start = max(start, inst.busy_until)
+        dur = self._decode_iter_time(inst)
+        fill = len(inst.decode_slots) / max(self.cfg.decode_batch_max, 1)
+        inst.work_d += dur * max(inst.decode_cap, 0.05) * fill
+        if self.cfg.mode == "colocated":
+            inst.busy_until = start + dur
+        inst.decode_iter_scheduled = True
+        self._push(start + dur, "decode_done", inst.name)
+        inst.note_busy(start, dur * (1.0 if self.cfg.mode == "colocated"
+                                     else 0.4), self.cfg.util_window)
+
+    def _on_decode_done(self, inst: _Instance):
+        inst.decode_iter_scheduled = False
+        finished = []
+        for slot in inst.decode_slots:
+            slot.req.generated.append(0)
+            slot.remaining -= 1
+            slot.context += 1
+            inst.kv_tokens += 1
+            if slot.remaining <= 0:
+                finished.append(slot)
+        for slot in finished:
+            inst.decode_slots.remove(slot)
+            inst.kv_tokens -= slot.context
+            slot.req.t_done = self.now
+            self.metrics.record(slot.req)
+        if self.cfg.mode == "colocated":
+            self._try_start_prefill(inst)     # prefill priority (vLLM)
+        if (self.cfg.mode == "banaserve" and not inst.decode_slots
+                and inst.decode_cap >= 0.5):
+            self._steal_decode_work(inst)
+        self._schedule_decode(inst)
+
+    def _steal_decode_work(self, inst: _Instance):
+        """Event-driven attention-level migration: an idle fast decoder
+        pulls KV (requests) from the slowest-per-slot decoder.  Cheap —
+        only the migrated heads'/requests' KV moves (Eq. 11)."""
+        donors = [i for i in self._decode_candidates()
+                  if i is not inst and len(i.decode_slots) >= 2]
+        if not donors:
+            return
+        donor = max(donors,
+                    key=lambda i: len(i.decode_slots) / max(i.decode_cap, 0.05))
+        # only steal if per-slot service rate actually improves
+        if len(donor.decode_slots) / max(donor.decode_cap, 0.05) <=                 len(inst.decode_slots) + 1:
+            return
+        n_move = len(donor.decode_slots) // 2
+        moved_tokens = 0
+        for _ in range(n_move):
+            if len(inst.decode_slots) >= self.cfg.decode_batch_max:
+                break
+            slot = donor.decode_slots.pop()
+            donor.kv_tokens -= slot.context
+            inst.kv_tokens += slot.context
+            inst.decode_slots.append(slot)
+            moved_tokens += slot.context
+        if moved_tokens:
+            t_mig = A.attention_migration_time(
+                self.model, self.model.n_kv_heads, moved_tokens, self.cfg.hw)
+            inst.mig_frozen_until = max(inst.mig_frozen_until,
+                                        self.now + t_mig)
+            self.migration_log.append((self.now, MigrationAction(
+                MigrationKind.KV_HEADS, donor.name, inst.name, n_move,
+                0.0, t_mig)))
+
+    def _on_control(self):
+        if self.cfg.mode == "banaserve":
+            self._dispatch_pending()
+        if self.controller is not None:
+            d_p, d_d = self._tier_demands()
+            op, od = self._tier_rates
+            self._tier_rates = (0.5 * op + 0.5 * d_p, 0.5 * od + 0.5 * d_d)
+            for act in self.controller.plan(self._device_loads()):
+                self._apply_migration(act)
+            self._last_work = {i.name: (i.work_p, i.work_d)
+                               for i in self.instances}
+            self._last_ctl_t = self.now
+        self.util_trace.append((self.now, {
+            i.name: i.compute_frac(self.now, self.cfg.util_window)
+            for i in self.instances}))
+        if self.events:
+            self._push(self.now + self.cfg.control_interval, "control")
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, object]:
+        reqs = generate(self.wcfg)
+        for r in reqs:
+            self._push(r.arrival, "arrival", r)
+        self._push(self.cfg.control_interval, "control")
+        n_done = 0
+        while self.events and n_done < len(reqs):
+            t, _, kind, payload = heapq.heappop(self.events)
+            self.now = t
+            if kind == "arrival":
+                self._on_arrival(payload)
+            elif kind == "prefill_done":
+                name, req = payload
+                self._on_prefill_done(self.by_name[name], req)
+            elif kind == "decode_kick":
+                self._schedule_decode(self.by_name[payload])
+            elif kind == "decode_done":
+                self._on_decode_done(self.by_name[payload])
+                n_done = self.metrics.n_requests
+            elif kind == "control":
+                self._on_control()
+        summary = self.metrics.summary()
+        summary["migrations"] = len(self.migration_log)
+        summary["mode"] = self.cfg.mode
+        if self.store is not None:
+            summary["store_entries"] = len(self.store)
+        loads = [i.busy for i in self.instances]
+        summary["busy_skew"] = (max(loads) - min(loads)) / max(max(loads), 1e-9)
+        # Fig. 2a metric: imbalance *within the prefill tier* (instances that
+        # ever served prefill) — the skew prefix-aware routing induces
+        pw = [i.work_p for i in self.instances if i.work_p > 0
+              or i.prefill_cap > 0]
+        if pw:
+            summary["prefill_skew"] = (max(pw) - min(pw)) / max(max(pw), 1e-9)
+        else:
+            summary["prefill_skew"] = 0.0
+        return summary

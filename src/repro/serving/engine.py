@@ -1,0 +1,162 @@
+"""Live serving engines over the real JAX model.
+
+``PrefillEngine`` — single-request prefill with Global-KV-Store integration:
+longest-prefix match, KV fetch + incremental (prefix-aware) prefill of the
+suffix only, and insertion of freshly produced full blocks back into the
+store.  This is the executable form of Fig. 5.
+
+``DecodeEngine`` — slot-based continuous batching decoder: a fixed-capacity
+batched cache; prefill output states are *inserted* into free slots (the
+prefill→decode KV transfer of PD disaggregation) and every step decodes all
+active slots.
+
+Both run the exact same ``models.transformer`` stack used by training and
+the dry-run — no separate serving model definition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kvstore import GlobalKVStore
+from ..models import kvcache as KC
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from .request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_len: int = 512
+    max_batch: int = 8
+    block_size: int = 16          # must match the store's block size
+    greedy: bool = True
+
+
+class PrefillEngine:
+    """One prefill instance."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 store: Optional[GlobalKVStore] = None, name: str = "prefill0"):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.store = store if KC.prefix_cacheable(cfg) else None
+        self.name = name
+        self._prefill = jax.jit(
+            functools.partial(T.apply, cfg, mode="prefill",
+                              logits_slice="last", prefix_aware=False),
+            static_argnames=())
+        self._prefill_inc = jax.jit(
+            functools.partial(T.apply, cfg, mode="prefill",
+                              logits_slice="last", prefix_aware=True))
+
+    # ------------------------------------------------------------------
+    def run(self, req: Request, frames: Optional[jax.Array] = None
+            ) -> Tuple[Dict[str, Any], jax.Array]:
+        """Prefill one request.  Returns (request_state, last_logits)."""
+        tokens = np.asarray(req.prompt, np.int32)
+        cache = T.init_cache(self.cfg, 1, self.ecfg.max_len,
+                             dtype=self.params["embed"].dtype)
+        matched = 0
+        if self.store is not None:
+            matched, keys = self.store.match(tokens.tolist())
+            matched = min(matched, len(tokens) - 1)  # always prefill >=1 token
+            matched -= matched % self.ecfg.block_size
+            if matched > 0:
+                keys = keys[: matched // self.ecfg.block_size]
+                payloads, _ = self.store.fetch(keys)
+                st = KC.extract_request_state(cache, 0)
+                off = 0
+                for p in payloads:
+                    st = KC.merge_prefix_kv(st, p, off)
+                    off += self.ecfg.block_size
+                cache = KC.insert_request_state(cache, 0, st)
+                req.cached_tokens = matched
+        suffix = tokens[matched:]
+        fn = self._prefill_inc if matched > 0 else self._prefill
+        logits, cache, _ = fn(self.params, suffix[None, :], cache=cache,
+                              frames=frames)
+        st = KC.extract_request_state(cache, 0)
+        # insert freshly computed full blocks into the global store
+        if self.store is not None:
+            bs = self.ecfg.block_size
+            n_full = len(tokens) // bs * bs
+            payloads = [KC.slice_prefix_kv(st, i, i + bs)
+                        for i in range(matched, n_full, bs)]
+            if payloads:
+                nbytes = KC.state_num_bytes(payloads[0])
+                all_keys_tokens = tokens[:n_full]
+                from ..core.kvstore import chain_hashes
+                keys = chain_hashes(all_keys_tokens.tolist(), bs)
+                self.store.insert(all_keys_tokens.tolist(),
+                                  [None] * (matched // bs) + payloads, nbytes)
+                # re-insert payloads for the new keys only
+        return st, logits[0]
+
+
+class DecodeEngine:
+    """One decode instance: slot-based continuous batching."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 name: str = "decode0"):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.name = name
+        self.cache = T.init_cache(cfg, ecfg.max_batch, ecfg.max_len,
+                                  dtype=params["embed"].dtype)
+        self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
+        self.next_token = np.zeros((ecfg.max_batch,), np.int32)
+        self._step = jax.jit(
+            functools.partial(T.apply, cfg, mode="decode",
+                              logits_slice="last"))
+
+    # ------------------------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def insert(self, req: Request, state: Dict[str, Any],
+               first_token: int) -> int:
+        """KV transfer: place a prefilled request into a decode slot."""
+        slot = self.free_slot()
+        assert slot is not None, "decode engine full"
+        self.cache = KC.insert_request_state(self.cache, slot, state)
+        self.slots[slot] = req
+        self.next_token[slot] = first_token
+        req.generated.append(int(first_token))
+        return slot
+
+    def step(self) -> List[Tuple[Request, int]]:
+        """One decode iteration for all active slots.  Returns finished."""
+        if self.active == 0:
+            return []
+        toks = jnp.asarray(self.next_token[:, None])
+        logits, self.cache, _ = self._step(self.params, toks,
+                                           cache=self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            self.next_token[i] = tok
+            done = (len(req.generated) >= req.max_new_tokens
+                    or int(self.cache["lengths"][i]) >= self.ecfg.max_len - 1)
+            if done:
+                finished.append((req, i))
+                self.slots[i] = None
+        return finished

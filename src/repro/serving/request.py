@@ -1,0 +1,96 @@
+"""Request lifecycle and per-request metrics (TTFT / TPOT / E2E)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class Phase(str, enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    TRANSFER = "transfer"       # KV hand-off prefill -> decode
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float                    # seconds (sim or wall clock)
+    prompt: np.ndarray                # token ids (int32)
+    max_new_tokens: int
+    prefix_id: Optional[int] = None   # shared-prefix group (workload metadata)
+    prefix_len: int = 0               # tokens shared with the group
+
+    # runtime state
+    phase: Phase = Phase.QUEUED
+    generated: List[int] = dataclasses.field(default_factory=list)
+    prefill_instance: Optional[str] = None
+    decode_instance: Optional[str] = None
+    cached_tokens: int = 0            # prefix tokens served from the store
+
+    # timestamps
+    t_prefill_start: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_done is None or self.t_first_token is None:
+            return None
+        n = max(len(self.generated) - 1, 1)
+        return (self.t_done - self.t_first_token) / n
+
+    @property
+    def e2e(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.arrival
+
+
+@dataclasses.dataclass
+class Metrics:
+    """Aggregates over completed requests."""
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    tpots: List[float] = dataclasses.field(default_factory=list)
+    e2es: List[float] = dataclasses.field(default_factory=list)
+    tokens_out: int = 0
+    n_requests: int = 0
+    t_start: float = 0.0
+    t_end: float = 0.0
+
+    def record(self, r: Request):
+        self.n_requests += 1
+        self.tokens_out += len(r.generated)
+        if r.ttft is not None:
+            self.ttfts.append(r.ttft)
+        if r.tpot is not None:
+            self.tpots.append(r.tpot)
+        if r.e2e is not None:
+            self.e2es.append(r.e2e)
+        self.t_end = max(self.t_end, r.t_done or 0.0)
+
+    def summary(self) -> dict:
+        dur = max(self.t_end - self.t_start, 1e-9)
+        mean = lambda xs: float(np.mean(xs)) if xs else float("nan")
+        p99 = lambda xs: float(np.percentile(xs, 99)) if xs else float("nan")
+        return {
+            "n_requests": self.n_requests,
+            "throughput_tok_s": self.tokens_out / dur,
+            "total_time_s": dur,
+            "mean_ttft_s": mean(self.ttfts),
+            "p99_ttft_s": p99(self.ttfts),
+            "mean_tpot_s": mean(self.tpots),
+            "mean_e2e_s": mean(self.e2es),
+        }

@@ -1,0 +1,85 @@
+"""Workload generators: Poisson arrivals with Alpaca-like (short) and
+LongBench-like (long) prompt-length distributions plus shared-prefix
+structure (§5.1.2/5.1.3).
+
+Alpaca: prompt lengths ~4–50 tokens (Fig. 7a).
+LongBench: ~2k–85k tokens, log-normal-ish (Fig. 7b).
+Output length capped at 512 (paper: "maximum output length is capped at
+512 tokens").  Shared prefixes follow a Zipf popularity law — the regime
+where prefix-cache-aware routing skews load (Fig. 2a).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    kind: str = "alpaca"            # alpaca | longbench | synthetic
+    rps: float = 5.0
+    n_requests: int = 100
+    vocab_size: int = 512
+    seed: int = 0
+    max_new_tokens: int = 512
+    # shared-prefix structure
+    n_prefix_groups: int = 8
+    prefix_share: float = 0.5       # fraction of requests carrying a shared prefix
+    prefix_zipf: float = 1.2        # popularity skew across groups
+    # synthetic-kind overrides
+    prompt_len_lo: int = 16
+    prompt_len_hi: int = 64
+
+
+def _prompt_len(cfg: WorkloadConfig, rng: np.random.Generator) -> int:
+    if cfg.kind == "alpaca":
+        return int(rng.integers(4, 51))                      # Fig. 7a
+    if cfg.kind == "longbench":
+        # log-normal spanning ~2k..85k (Fig. 7b)
+        x = rng.lognormal(mean=9.2, sigma=0.8)
+        return int(np.clip(x, 2000, 85000))
+    return int(rng.integers(cfg.prompt_len_lo, cfg.prompt_len_hi + 1))
+
+
+def _out_len(cfg: WorkloadConfig, rng: np.random.Generator) -> int:
+    lo = min(16, cfg.max_new_tokens)
+    return int(rng.integers(lo, cfg.max_new_tokens + 1))
+
+
+def generate(cfg: WorkloadConfig) -> List[Request]:
+    """Poisson arrival process with shared-prefix groups."""
+    rng = np.random.default_rng(cfg.seed)
+    # Zipfian popularity over prefix groups
+    ranks = np.arange(1, cfg.n_prefix_groups + 1, dtype=np.float64)
+    pop = ranks ** (-cfg.prefix_zipf)
+    pop /= pop.sum()
+    group_prefix_tokens = [
+        rng.integers(0, cfg.vocab_size, size=(4096,), dtype=np.int32)
+        for _ in range(cfg.n_prefix_groups)]
+
+    reqs: List[Request] = []
+    t = 0.0
+    for rid in range(cfg.n_requests):
+        t += rng.exponential(1.0 / cfg.rps)
+        plen = _prompt_len(cfg, rng)
+        if rng.random() < cfg.prefix_share and cfg.n_prefix_groups > 0:
+            gid = int(rng.choice(cfg.n_prefix_groups, p=pop))
+            pfx_len = min(plen // 2, 4096)
+            prompt = np.concatenate([
+                group_prefix_tokens[gid][:pfx_len],
+                rng.integers(0, cfg.vocab_size, size=(plen - pfx_len,),
+                             dtype=np.int32)])
+            req = Request(rid=rid, arrival=t, prompt=prompt,
+                          max_new_tokens=_out_len(cfg, rng),
+                          prefix_id=gid, prefix_len=pfx_len)
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, size=(plen,),
+                                  dtype=np.int32)
+            req = Request(rid=rid, arrival=t,
+                          max_new_tokens=_out_len(cfg, rng), prompt=prompt)
+        reqs.append(req)
+    return reqs

@@ -1,0 +1,60 @@
+"""Flat-file checkpointing: pytree -> .npz + structure manifest.
+
+No orbax dependency; deterministic leaf ordering via tree flattening with
+path names so checkpoints survive refactors that preserve key paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, step: int = 0, meta: Dict[str, Any] | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_names(tree)
+    np.savez(os.path.join(path, f"ckpt_{step}.npz"), **flat)
+    manifest = {"step": step, "leaves": sorted(flat),
+                "meta": meta or {}}
+    with open(os.path.join(path, f"ckpt_{step}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:-5]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".json")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, tree_like, step: int | None = None):
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"ckpt_{step}.npz"))
+    names = []
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    out = []
+    for pathkeys, leaf in leaves:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in pathkeys)
+        arr = data[name]
+        assert arr.shape == leaf.shape, (name, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+        names.append(name)
+    return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,91 @@
+"""Training step: causal LM loss (+ MoE load-balance auxiliary) and the
+pjit-able train_step used by both the example trainer and the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from . import optimizer as opt
+
+
+def lm_loss(cfg: ModelConfig, params, tokens: jax.Array,
+            frames=None, moe_impl: str = "sorted", moe_cf=None,
+            lb_coef: float = 0.01, remat: bool = False, act_spec=None,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy over tokens[:, :-1] -> tokens[:, 1:]."""
+    logits, aux = T.forward_train(cfg, params, tokens[:, :-1], frames=frames,
+                                  moe_impl=moe_impl, moe_cf=moe_cf,
+                                  remat=remat, act_spec=act_spec)
+    targets = tokens[:, 1:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    loss = nll
+    if cfg.n_experts > 0:
+        # Switch-style load balance: E * sum(load_frac * load_frac)
+        load = aux["router_load"]
+        lb = cfg.n_experts * jnp.sum(load * load)
+        loss = loss + lb_coef * lb
+        aux["lb_loss"] = lb
+    aux["nll"] = nll
+    return loss, aux
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.AdamWConfig,
+                    moe_impl: str = "sorted", moe_cf=None,
+                    remat: bool = False, num_microbatches: int = 1,
+                    act_spec=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch: {"tokens": (B, S+1) int32, optional "frames": (B, F, d)}.
+    Pure function of its inputs — safe to pjit with explicit shardings.
+
+    ``num_microbatches`` > 1 runs gradient accumulation over batch chunks
+    (activation memory / MB) with f32 grad accumulators; ``remat`` wraps the
+    layer scan in jax.checkpoint (activations recomputed in backward).
+    """
+    def grad_one(params, tokens, frames):
+        def loss_fn(p):
+            return lm_loss(cfg, p, tokens, frames=frames,
+                           moe_impl=moe_impl, moe_cf=moe_cf, remat=remat,
+                           act_spec=act_spec)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(params, opt_state, batch):
+        frames = batch.get("frames")
+        tokens = batch["tokens"]
+        if num_microbatches <= 1:
+            (loss, aux), grads = grad_one(params, tokens, frames)
+        else:
+            mb = num_microbatches
+            b = tokens.shape[0]
+            assert b % mb == 0, (b, mb)
+            toks = tokens.reshape(mb, b // mb, *tokens.shape[1:])
+            frs = None
+            if frames is not None:
+                frs = frames.reshape(mb, b // mb, *frames.shape[1:])
+
+            def acc_body(carry, xs):
+                g_acc, loss_acc = carry
+                t = xs[0]
+                f = xs[1] if frames is not None else None
+                (loss, aux), g = grad_one(params, t, f)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / mb, g_acc, g)
+                return (g_acc, loss_acc + loss / mb), aux["nll"]
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (toks, frs) if frames is not None else (toks,)
+            (grads, loss), nlls = jax.lax.scan(acc_body, (g0, 0.0), xs)
+            aux = {"nll": jnp.mean(nlls)}
+        params, opt_state, om = opt.apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = {"loss": loss, "nll": aux["nll"], **om}
+        return params, opt_state, metrics
+    return step

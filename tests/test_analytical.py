@@ -1,0 +1,65 @@
+"""§4.3 analytical model: paper-worked numbers and qualitative claims."""
+import pytest
+
+from repro import configs
+from repro.core import analytical as A
+
+LLAMA13 = configs.get("llama-13b")
+LLAMA8B_KV = 4096  # paper Eq. 15: llama-3.1-8B per-layer KV per token = 4 KB
+
+
+def test_eq15_kv_bytes_llama31_8b():
+    from repro.models.config import Family, ModelConfig
+    llama8 = ModelConfig(name="l8", family=Family.DENSE, n_layers=32,
+                         d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+                         vocab_size=128256)
+    assert llama8.kv_bytes_per_token_per_layer() == 4096          # Eq. 15
+    assert llama8.kv_bytes_per_token() == 128 * 1024              # Eq. 16
+
+
+def test_prefill_compute_bound_decode_memory_bound():
+    """Fig. 2b asymmetry: prefill ~compute-bound, decode ~memory-bound."""
+    hw = A.A100_80G
+    # prefill at 2k tokens: compute time dominates memory time
+    f = A.prefill_flops(LLAMA13, 2048)
+    t_comp = f / hw.peak_flops
+    t_mem = LLAMA13.param_count() * 2 / hw.hbm_bw
+    assert t_comp > t_mem
+    # decode: memory term dominates
+    fl = A.decode_flops_per_token(LLAMA13, 2048, batch=8)
+    by = A.decode_bytes_per_token(LLAMA13, 2048, batch=8)
+    assert by / hw.hbm_bw > fl / hw.peak_flops
+
+
+def test_layer_migration_weight_dominated():
+    """§4.1: S_w >> S_kv in most cases -> Eq. 4 dominated by weights."""
+    hw = A.A100_80G
+    t_w_only = A.layer_migration_time(LLAMA13, 2, kv_tokens=0, hw=hw)
+    t_with_kv = A.layer_migration_time(LLAMA13, 2, kv_tokens=2048, hw=hw)
+    assert t_with_kv < 1.5 * t_w_only
+
+
+def test_attention_migration_much_cheaper_than_layer():
+    """Eq. 11 vs Eq. 4: T_attn << T_layer."""
+    hw = A.A100_80G
+    t_attn = A.attention_migration_time(LLAMA13, 8, kv_tokens=2048, hw=hw)
+    t_layer = A.layer_migration_time(LLAMA13, 2, kv_tokens=2048, hw=hw)
+    assert t_attn < 0.2 * t_layer
+
+
+def test_throughput_eq30():
+    th = A.throughput(n_requests=10, l_out=100, t_ttft=1.0, t_tpot=0.01)
+    assert th == pytest.approx(10 * 100 / (1.0 + 100 * 0.01))
+
+
+def test_utilization_eq32_range():
+    hw = A.TPU_V5E
+    u = A.utilization(hw.peak_flops * 2, hw.hbm_bytes * 2, hw)
+    assert u == pytest.approx(2.0)
+    assert A.utilization(0, 0, hw) == 0.0
+
+
+def test_objective_trade_off():
+    w = A.ObjectiveWeights(alpha=1, beta=1, gamma=0)
+    assert A.objective(1.0, 0.1, 0, w) > A.objective(1.0, 0.5, 0, w)
+    assert A.objective(1.5, 0.1, 0, w) > A.objective(1.0, 0.1, 0, w)

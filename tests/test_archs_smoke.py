@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned config
+(<=2-ish layers, d_model<=256, <=4 experts) runs one forward + one train
+step on CPU, asserting output shapes and no NaNs.  The FULL configs are
+exercised only by the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step
+
+ARCHS = configs.names(assigned_only=True)
+
+
+def _smoke_inputs(cfg, key, batch=2, seq=12):
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    frames = None
+    if cfg.cross_attention:
+        frames = jax.random.normal(key, (batch, cfg.n_frames, cfg.d_model))
+    return toks, frames
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_config_limits(arch):
+    smoke = configs.get(arch).smoke()
+    assert smoke.d_model <= 512
+    assert smoke.n_layers <= max(4, len(smoke.block_pattern))
+    assert smoke.n_experts <= 4
+    assert smoke.vocab_size <= 512
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    smoke = configs.get(arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = T.init(smoke, key)
+    toks, frames = _smoke_inputs(smoke, key)
+    logits, aux = T.forward_train(smoke, params, toks, frames=frames)
+    assert logits.shape == (2, 12, smoke.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN/Inf logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    smoke = configs.get(arch).smoke()
+    key = jax.random.PRNGKey(1)
+    params = T.init(smoke, key)
+    opt_cfg = O.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    ostate = O.init_state(params)
+    step = make_train_step(smoke, opt_cfg)
+    toks, frames = _smoke_inputs(smoke, key, seq=13)
+    batch = {"tokens": toks}
+    if frames is not None:
+        batch["frames"] = frames
+    params2, ostate2, m = step(params, ostate, batch)
+    assert bool(jnp.isfinite(m["loss"])), f"{arch}: NaN loss"
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # parameters actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved, f"{arch}: train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_step(arch):
+    smoke = configs.get(arch).smoke()
+    key = jax.random.PRNGKey(2)
+    params = T.init(smoke, key)
+    toks, frames = _smoke_inputs(smoke, key)
+    cache = T.init_cache(smoke, 2, 32)
+    lg, cache, _ = T.prefill(smoke, params, toks, cache, frames=frames)
+    assert lg.shape == (2, smoke.vocab_size)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    lg2, cache, _ = T.decode_step(smoke, params, nxt, cache, frames=frames)
+    assert lg2.shape == (2, smoke.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(lg2))), f"{arch}: NaN decode logits"
+
+
+def test_registry_has_all_assigned_plus_paper_models():
+    assert len(configs.ASSIGNED) == 10
+    assert set(configs.PAPER_MODELS) == {"llama-13b", "opt-13b"}
+    for name, cfg in configs.REGISTRY.items():
+        assert cfg.source, f"{name} missing source citation"
+
+
+def test_exact_assigned_hyperparameters():
+    c = configs.get("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    c = configs.get("grok-1-314b")
+    assert (c.n_experts, c.top_k, c.n_layers, c.d_model) == (8, 2, 64, 6144)
+    c = configs.get("granite-moe-3b-a800m")
+    assert (c.n_experts, c.top_k, c.d_ff) == (40, 8, 512)
+    c = configs.get("recurrentgemma-9b")
+    assert c.n_layers == 38 and c.local_window == 2048
+    c = configs.get("xlstm-350m")
+    assert c.d_ff == 0 and c.n_heads == 4

@@ -1,0 +1,71 @@
+"""The HLO walker is load-bearing for the roofline: verify its trip-count
+weighting and collective accounting against known programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import Roofline, parse_collectives
+
+N = 256
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile().as_text()
+
+
+def test_scan_flops_weighted_by_known_trip_count():
+    def f(a, ws):
+        def body(c, w):
+            return c @ w, None
+        c, _ = jax.lax.scan(body, a, ws)
+        return c
+    a = jax.ShapeDtypeStruct((N, N), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, N, N), jnp.float32)
+    st = parse_collectives(_compile(f, a, ws), (1,))
+    assert st.dot_flops == pytest.approx(2 * 8 * N**3, rel=0.01)
+
+
+def test_nested_scan_flops():
+    def f(a, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        c, _ = jax.lax.scan(outer, a, ws)
+        return c
+    a = jax.ShapeDtypeStruct((N, N), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, N, N), jnp.float32)
+    st = parse_collectives(_compile(f, a, ws), (1,))
+    assert st.dot_flops == pytest.approx(2 * 32 * N**3, rel=0.01)
+
+
+def test_no_collectives_on_single_device():
+    def f(a):
+        return a @ a
+    a = jax.ShapeDtypeStruct((N, N), jnp.float32)
+    st = parse_collectives(_compile(f, a), (1,))
+    assert st.total_bytes == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline("a", "s", "single", 256,
+                 hlo_flops=197e12 * 0.010,          # 10 ms compute
+                 hlo_bytes=819e9 * 0.002,           # 2 ms memory
+                 collective_bytes=50e9 * 0.001,     # 1 ms collective
+                 model_flops=197e12 * 0.010 * 256 * 0.5,
+                 bytes_per_chip=1 << 30)
+    assert r.t_compute == pytest.approx(0.010)
+    assert r.t_memory == pytest.approx(0.002)
+    assert r.t_collective == pytest.approx(0.001)
+    assert r.bottleneck == "compute"
+    assert r.useful_flop_ratio == pytest.approx(0.5)
+
+
+def test_walker_bytes_positive_and_finite():
+    def f(a):
+        return jnp.tanh(a @ a) @ a
+    a = jax.ShapeDtypeStruct((N, N), jnp.float32)
+    st = parse_collectives(_compile(f, a), (1,))
+    assert st.hlo_bytes > 2 * N * N * 4      # at least the outputs, twice
+    assert st.dot_flops == pytest.approx(2 * 2 * N**3, rel=0.01)

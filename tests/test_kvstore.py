@@ -1,0 +1,87 @@
+"""Global KV Cache Store: prefix matching, tiers, eviction, pipeline."""
+import numpy as np
+import pytest
+
+from repro.core.kvstore import GlobalKVStore, TierSpec, chain_hashes
+from repro.core.pipeline import PipelineModel, paper_example
+
+
+def test_chain_hash_prefix_property():
+    a = chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = chain_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert a[0] == b[0] and a[1] != b[1]
+
+
+def test_match_longest_prefix():
+    st = GlobalKVStore(block_size=4)
+    toks = list(range(16))
+    keys = chain_hashes(toks, 4)
+    st.insert(toks, ["p0", "p1", "p2", "p3"], nbytes_per_block=100)
+    n, matched = st.match(toks)
+    assert n == 16 and matched == keys
+    n, matched = st.match(toks[:8] + [99] * 8)
+    assert n == 8
+    n, matched = st.match([99] + toks)
+    assert n == 0
+
+
+def test_fetch_promotes_and_counts_latency():
+    st = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", 250, 100.0), TierSpec("host", 10_000, 1.0)])
+    st.insert(list(range(8)), ["a", "b"], nbytes_per_block=100)
+    # third block overflows hbm -> first entry demoted to host
+    st.insert(list(range(12)), ["a", "b", "c"], nbytes_per_block=100)
+    tiers = [e.tier for e in st._entries.values()]
+    assert 1 in tiers
+    _, keys = st.match(list(range(12)))
+    payloads, lat = st.fetch(keys)
+    assert payloads == ["a", "b", "c"]
+    assert lat > 0
+    assert all(e.tier == 0 or e.nbytes == 100 for e in st._entries.values())
+
+
+def test_eviction_cascade_drops_from_last_tier():
+    st = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", 200, 100.0), TierSpec("host", 200, 1.0)])
+    for i in range(6):
+        st.insert([i * 10 + j for j in range(4)], [f"p{i}"],
+                  nbytes_per_block=100)
+    assert st.stats.evictions > 0
+    assert st.used_bytes() <= 400
+
+
+def test_hit_rate_accounting():
+    st = GlobalKVStore(block_size=4)
+    toks = list(range(8))
+    st.match(toks)                 # miss
+    st.insert(toks, ["a", "b"], nbytes_per_block=10)
+    st.match(toks)                 # hit
+    assert 0.0 < st.stats.hit_rate < 1.0
+
+
+# -- layer-wise pipeline (Eq. 12–17) ----------------------------------------
+
+def test_paper_example_numbers():
+    """§4.2 worked example: T_F,layer ≈ 4.22 ms, T_KV ≈ 0.082 ms."""
+    pm = paper_example()
+    assert pm.t_fwd_layer == pytest.approx(4.22e-3, rel=0.01)
+    assert pm.t_kv_layer == pytest.approx(0.082e-3, rel=0.03)
+    assert pm.fully_hidden()
+    # overlap hides essentially all transfer: residual << serial overhead
+    assert pm.residual_stall() < 3 * pm.t_kv_layer
+    assert pm.serial_time() > pm.overlapped_time()
+
+
+def test_pipeline_not_hidden_when_bandwidth_starved():
+    pm = PipelineModel(n_layers=32, t_fwd_layer=1e-3, t_kv_layer=5e-3)
+    assert not pm.fully_hidden()
+    assert pm.residual_stall() > 0
+
+
+def test_timeline_channels_do_not_overlap_within_channel():
+    pm = paper_example()
+    ev = pm.timeline()
+    for chan in ("HtoD", "GPU", "DtoH"):
+        spans = sorted((s, e) for c, _, s, e in ev if c == chan)
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert s2 >= e1 - 1e-12

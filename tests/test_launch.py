@@ -1,0 +1,134 @@
+"""Launch layer: sharding policy rules, input specs, and a real (small)
+dry-run lower+compile in a subprocess with placeholder devices."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs as S
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import ShardingPolicy
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class FakeMesh:
+    """Minimal mesh stand-in: just axis name -> size (policy only reads
+    .shape and .axis_names)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def _policy(arch, **kw):
+    return ShardingPolicy(MESH, configs.get(arch), **kw)
+
+
+def test_wq_sharded_over_model():
+    p = _policy("minitron-8b")
+    spec = p.param_spec("groups/0/attn/wq", (32, 4096, 32, 128))
+    assert spec == P(None, None, "model", None)
+
+
+def test_kv_heads_replicated_when_not_divisible():
+    p = _policy("minitron-8b")      # kv=8 < model=16
+    spec = p.param_spec("groups/0/attn/wk", (32, 4096, 8, 128))
+    assert spec[2] is None          # replicated KV projection
+
+
+def test_kv_heads_sharded_when_divisible():
+    p = _policy("gemma-7b")         # kv=16 == model=16
+    spec = p.param_spec("groups/0/attn/wk", (28, 3072, 16, 256))
+    assert spec[2] == "model"
+
+
+def test_fsdp_adds_data_axis_for_405b():
+    p = _policy("llama3-405b")
+    spec = p.param_spec("groups/0/attn/wq", (126, 16384, 128, 128))
+    assert spec == P(None, "data", "model", None)
+
+
+def test_tiny_model_replicates():
+    p = _policy("xlstm-350m")
+    spec = p.param_spec("groups/0/rec/wq", (6, 2048, 4, 256))
+    assert spec == P()
+
+
+def test_cache_seq_sharded_over_model():
+    p = _policy("minitron-8b")
+    spec = p.cache_spec("groups/0/k", (32, 128, 32768, 8, 128))
+    assert spec == P(None, ("data",), "model", None, None)
+
+
+def test_long_context_shards_sequence_over_everything():
+    p = _policy("minitron-8b", seq_shard=True)
+    spec = p.cache_spec("groups/0/k", (32, 1, 524288, 8, 128))
+    assert spec[1] is None                     # batch=1: not sharded
+    assert spec[2] == ("data", "model")        # context parallel
+
+
+def test_norms_replicated():
+    p = _policy("minitron-8b")
+    assert p.param_spec("groups/0/norm1", (32, 4096)) == P(None, None)
+
+
+# -- input specs --------------------------------------------------------
+
+def test_input_specs_shapes():
+    cfg = configs.get("gemma-7b")
+    tr = S.input_specs(cfg, S.SHAPES["train_4k"])
+    assert tr["batch"]["tokens"].shape == (256, 4097)
+    pf = S.input_specs(cfg, S.SHAPES["prefill_32k"])
+    assert pf["tokens"].shape == (32, 32768)
+    assert pf["cache"]["groups"][0]["k"].shape == (28, 32, 32768, 16, 256)
+    dc = S.input_specs(cfg, S.SHAPES["decode_32k"])
+    assert dc["tokens"].shape == (128, 1)
+
+
+def test_long500k_swaps_to_sliding_window_variant():
+    cfg = configs.get("llama3-405b")
+    var = S.arch_for_shape(cfg, S.SHAPES["long_500k"])
+    assert var.sliding_window == S.LONG_WINDOW
+    ins = S.input_specs(var, S.SHAPES["long_500k"])
+    # physical cache bounded by the window, not 524288
+    assert ins["cache"]["groups"][0]["k"].shape[2] == S.LONG_WINDOW
+
+
+def test_long500k_native_for_subquadratic():
+    cfg = configs.get("recurrentgemma-9b")
+    var = S.arch_for_shape(cfg, S.SHAPES["long_500k"])
+    assert var is cfg                           # no variant needed
+
+
+def test_audio_gets_frames_spec():
+    cfg = configs.get("seamless-m4t-large-v2")
+    ins = S.input_specs(cfg, S.SHAPES["prefill_32k"])
+    assert ins["frames"].shape == (32, 512, 1024)
+
+
+# -- real lower+compile smoke (subprocess so XLA_FLAGS stays contained) --
+
+@pytest.mark.slow
+def test_dryrun_one_combo_compiles():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-350m",
+         "--shape", "decode_32k", "--mesh", "single",
+         "--out", "/tmp/dryrun_test"],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open("/tmp/dryrun_test/"
+                         "xlstm-350m__decode_32k__single.json"))
+    assert rec["ok"]
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory",
+                                             "collective")

@@ -1,0 +1,128 @@
+"""Algorithm 1 (adaptive module migration) + layer-level migration executor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analytical import TPU_V5E
+from repro.core.layer_migration import PartitionedExecutor, unstack_layers
+from repro.core.migration import (ControllerConfig, DeviceLoad,
+                                  MigrationController, MigrationKind)
+from repro.models import transformer as T
+from repro.models.config import BlockKind, Family, ModelConfig
+
+
+def _controller(rho=0.5, **kw):
+    def cost_fn(kind, d_o, d_u, amount):
+        gap = d_o.utilization - d_u.utilization
+        if kind == MigrationKind.LAYER:
+            return gap * 0.5, 0.010
+        return gap * 0.2, 0.001
+    return MigrationController(ControllerConfig(rho=rho, **kw), cost_fn)
+
+
+def _load(name, c, m, **kw):
+    return DeviceLoad(name, c, m, **kw)
+
+
+def test_no_action_when_balanced():
+    ctl = _controller()
+    acts = ctl.plan([_load("a", 0.5, 0.5), _load("b", 0.55, 0.45)])
+    assert acts == []
+
+
+def test_migrates_from_hot_to_cold():
+    ctl = _controller()
+    acts = ctl.plan([_load("hot", 0.9, 0.9), _load("cold", 0.1, 0.1)])
+    assert acts
+    assert acts[0].src == "hot" and acts[0].dst == "cold"
+
+
+def test_respects_benefit_cost_ratio():
+    ctl = _controller(rho=1e9)        # nothing is ever profitable
+    acts = ctl.plan([_load("hot", 1.0, 1.0), _load("cold", 0.0, 0.0)])
+    assert acts == []
+
+
+def test_hysteresis_uses_lower_threshold_once_active():
+    ctl = _controller()
+    assert ctl.plan([_load("a", 0.9, 0.9), _load("b", 0.1, 0.1)])
+    # now a modest gap below delta_up but above delta_down still triggers
+    acts = ctl.plan([_load("a", 0.6, 0.0), _load("b", 0.3, 0.05)])
+    assert acts, "hysteresis should keep the controller active"
+
+
+def test_attention_only_devices_use_kv_heads():
+    def cost_fn(kind, d_o, d_u, amount):
+        gap = d_o.utilization - d_u.utilization
+        if kind == MigrationKind.LAYER:
+            return 0.0, 0.010          # layer migration unavailable/useless
+        return gap * 0.2, 0.001
+    ctl = MigrationController(ControllerConfig(), cost_fn)
+    acts = ctl.plan([_load("hot", 0.9, 0.9, supports_layer=False),
+                     _load("cold", 0.0, 0.0)])
+    assert acts and acts[0].kind == MigrationKind.KV_HEADS
+
+
+def test_budget_bounds_actions():
+    ctl = _controller(t_budget=0.010, max_actions_per_cycle=10)
+    acts = ctl.plan([_load("h1", 1.0, 1.0), _load("h2", 0.9, 0.95),
+                     _load("c1", 0.0, 0.0), _load("c2", 0.05, 0.0)])
+    assert sum(a.predicted_cost for a in acts) <= 0.010 + 1e-9
+
+
+# -- executable layer migration (Eq. 5 correctness) --------------------------
+
+CFG = ModelConfig(name="m", family=Family.DENSE, n_layers=4, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
+
+
+def test_partitioned_forward_matches_monolithic():
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128)
+    ref, _ = T.forward_train(CFG, params, toks)
+    ex = PartitionedExecutor(CFG, params, ["p0", "p0", "p1", "p1"],
+                             hw=TPU_V5E)
+    out, _, shares = ex.forward(toks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert set(shares) == {"p0", "p1"}
+
+
+def test_migration_preserves_semantics_and_moves_flops():
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128)
+    ref, _ = T.forward_train(CFG, params, toks)
+    ex = PartitionedExecutor(CFG, params, ["p0"] * 4, hw=TPU_V5E)
+    rec = ex.migrate(2, 4, "p1")
+    assert rec.payload_bytes > 0 and rec.est_time_s > 0
+    out, _, shares = ex.forward(toks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert shares["p0"] == shares["p1"]
+    assert ex.layers_on("p1") == [2, 3]
+
+
+def test_migration_with_live_decode_state():
+    """Fig. 3: weights AND KV move; decoding continues bit-identically."""
+    from repro.core.layer_migration import unstack_cache
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128)
+    # reference: monolithic prefill + decode
+    cache = T.init_cache(CFG, 2, 32)
+    lg, cache, _ = T.prefill(CFG, params, toks, cache)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    ref_lg, _, _ = T.decode_step(CFG, params, nxt, cache)
+
+    # partitioned: prefill, migrate mid-flight, then decode
+    ex = PartitionedExecutor(CFG, params, ["p0"] * 4, hw=TPU_V5E)
+    cache2 = T.init_cache(CFG, 2, 32)
+    states = unstack_cache(CFG, cache2)
+    lengths = jnp.zeros((2,), jnp.int32)
+    logits, states, _ = ex.forward(toks, states, mode="prefill",
+                                   lengths=lengths)
+    ex.migrate(1, 3, "p1", states=states)
+    lengths = lengths + toks.shape[1]
+    lg2, states, _ = ex.forward(nxt, states, mode="decode", lengths=lengths)
+    np.testing.assert_allclose(np.asarray(lg2[:, -1]), np.asarray(ref_lg),
+                               rtol=3e-3, atol=3e-3)

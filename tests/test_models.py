@@ -1,0 +1,155 @@
+"""Model substrate: train/prefill/decode consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import BlockKind, Family, ModelConfig
+
+FAMS = {
+    "dense": ModelConfig(name="dense", family=Family.DENSE, n_layers=2,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=128),
+    "moe": ModelConfig(name="moe", family=Family.MOE, n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                       n_experts=4, top_k=2),
+    "audio": ModelConfig(name="audio", family=Family.AUDIO, n_layers=2,
+                         d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                         vocab_size=128, cross_attention=True, n_frames=8),
+    "hybrid": ModelConfig(name="hybrid", family=Family.HYBRID, n_layers=5,
+                          d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+                          vocab_size=128, local_window=8,
+                          block_pattern=(BlockKind.RGLRU, BlockKind.RGLRU,
+                                         BlockKind.LOCAL_ATTENTION)),
+    "ssm": ModelConfig(name="ssm", family=Family.SSM, n_layers=4, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=128,
+                       block_pattern=(BlockKind.MLSTM,) * 3
+                       + (BlockKind.SLSTM,)),
+    "swa": ModelConfig(name="swa", family=Family.DENSE, n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab_size=128, sliding_window=8),
+}
+
+
+def _setup(name, seed=0):
+    cfg = FAMS[name]
+    key = jax.random.PRNGKey(seed)
+    params = T.init(cfg, key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    frames = (jax.random.normal(key, (2, cfg.n_frames, cfg.d_model))
+              if cfg.cross_attention else None)
+    return cfg, params, toks, frames
+
+
+@pytest.mark.parametrize("name", sorted(FAMS))
+def test_train_shapes_and_finite(name):
+    cfg, params, toks, frames = _setup(name)
+    logits, aux = T.forward_train(cfg, params, toks, frames=frames)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", sorted(FAMS))
+def test_prefill_matches_train(name):
+    cfg, params, toks, frames = _setup(name)
+    logits, _ = T.forward_train(cfg, params, toks, frames=frames)
+    cache = T.init_cache(cfg, 2, 64)
+    lg, cache, _ = T.prefill(cfg, params, toks, cache, frames=frames)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("name", sorted(FAMS))
+def test_decode_matches_train(name):
+    cfg, params, toks, frames = _setup(name)
+    cache = T.init_cache(cfg, 2, 64)
+    lg, cache, _ = T.prefill(cfg, params, toks, cache, frames=frames)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    lg_d, cache, _ = T.decode_step(cfg, params, nxt, cache, frames=frames)
+    toks2 = jnp.concatenate([toks, nxt], 1)
+    full, _ = T.forward_train(cfg, params, toks2, frames=frames)
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(full[:, -1]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    cfg = FAMS["swa"]
+    key = jax.random.PRNGKey(1)
+    params = T.init(cfg, key)
+    toks = jax.random.randint(key, (2, 20), 0, cfg.vocab_size)
+    cache = T.init_cache(cfg, 2, 32)
+    assert cache["groups"][0]["k"].shape[-3] == 8   # ring = window
+    lg, cache, _ = T.prefill(cfg, params, toks[:, :12], cache)
+    for i in range(12, 20):
+        lg, cache, _ = T.decode_step(cfg, params, toks[:, i:i + 1], cache)
+    full, _ = T.forward_train(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_incremental_prefill_prefix_aware():
+    cfg, params, toks, _ = _setup("dense")
+    toks = jnp.concatenate(
+        [toks, jax.random.randint(jax.random.PRNGKey(3), (2, 4), 0, 128)], 1)
+    cache = T.init_cache(cfg, 2, 64)
+    _, cache, _ = T.prefill(cfg, params, toks[:, :10], cache)
+    lg, cache, _ = T.apply(cfg, params, toks[:, 10:], cache=cache,
+                           mode="prefill", prefix_aware=True,
+                           logits_slice="last")
+    full, _ = T.forward_train(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_blocked_attention_equals_one_shot():
+    from repro.models import layers as L
+    cfg, params, _, _ = _setup("dense")
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (2, 100), 0, cfg.vocab_size)
+    saved_t, saved_q = L.ATTN_BLOCK_THRESHOLD, L.ATTN_BLOCK_Q
+    try:
+        L.ATTN_BLOCK_THRESHOLD, L.ATTN_BLOCK_Q = 32, 16
+        blocked, _ = T.forward_train(cfg, params, toks)
+        L.ATTN_BLOCK_THRESHOLD = 4096
+        ref, _ = T.forward_train(cfg, params, toks)
+    finally:
+        L.ATTN_BLOCK_THRESHOLD, L.ATTN_BLOCK_Q = saved_t, saved_q
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_moe_dense_vs_sorted_impl():
+    cfg, params, toks, _ = _setup("moe")
+    a, _ = T.forward_train(cfg, params, toks, moe_impl="dense")
+    b, _ = T.forward_train(cfg, params, toks, moe_impl="sorted")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_router_load_is_a_distribution():
+    cfg, params, toks, _ = _setup("moe")
+    _, aux = T.forward_train(cfg, params, toks)
+    load = aux["router_load"]
+    assert load.shape == (cfg.n_experts,)
+    assert abs(float(jnp.sum(load)) - 1.0) < 1e-3
+    assert bool(jnp.all(load >= 0))
+
+
+def test_head_offloaded_decode_matches_monolithic():
+    """Fig. 4 execution inside the real model: the last KV heads' attention
+    computed as a separate partial ("cold device") and recombined exactly."""
+    cfg = ModelConfig(name="off", family=Family.DENSE, n_layers=2,
+                      d_model=64, n_heads=8, n_kv_heads=4, d_ff=128,
+                      vocab_size=128)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 128)
+    cache = T.init_cache(cfg, 2, 32)
+    lg, cache, _ = T.prefill(cfg, params, toks, cache)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    ref, _, _ = T.decode_step(cfg, params, nxt, cache)
+    for n_off in (1, 2, 3):
+        out, _, _ = T.apply(cfg, params, nxt, cache=cache, mode="decode",
+                            logits_slice="last", head_offload=n_off)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,63 @@
+"""Pipeline-parallel decode (§Perf pair-1 iter 4): exactness vs the
+monolithic decode, run in a subprocess with an 8-device host mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.config import ModelConfig, Family
+    from repro.models import transformer as T
+    from repro.models.quant import quantize_weights
+    from repro.launch.pipeline_decode import (build_pipeline_decode,
+                                              pad_stacked_cache,
+                                              pad_stacked_params)
+    cfg = ModelConfig(name="p", family=Family.DENSE, n_layers=6, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    B = 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 12), 0, 128)
+    cache = T.init_cache(cfg, B, 32)
+    lg, cache, _ = T.prefill(cfg, params, toks, cache)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    ref, ref_cache, _ = T.decode_step(cfg, params, nxt, cache)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    fn, per_stage, n_pad = build_pipeline_decode(cfg, mesh, batch=B)
+    assert (per_stage, n_pad) == (2, 2), (per_stage, n_pad)
+    pp = pad_stacked_params(cfg, params, n_pad)
+    cp = pad_stacked_cache(cache, n_pad)
+    with mesh:
+        out, new_cache = jax.jit(fn)(pp, nxt, cp)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-3, atol=3e-3)
+    for k in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(new_cache["groups"][0][k][:cfg.n_layers]),
+            np.asarray(ref_cache["groups"][0][k]), rtol=3e-3, atol=3e-3)
+    # int8 weights through the pipeline too
+    with mesh:
+        out_q, _ = jax.jit(fn)(quantize_weights(pp), nxt,
+                               pad_stacked_cache(cache, n_pad))
+    corr = np.corrcoef(np.asarray(out).ravel(),
+                       np.asarray(out_q).ravel())[0, 1]
+    assert corr > 0.99, corr
+    print("PIPELINE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_decode_matches_monolithic():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "PIPELINE_OK" in out.stdout

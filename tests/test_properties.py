@@ -1,0 +1,149 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.attention_offload import (combine_partials,
+                                          partial_attention,
+                                          reference_attention,
+                                          split_kv_attention)
+from repro.core.kvstore import GlobalKVStore, chain_hashes
+from repro.core.migration import (ControllerConfig, DeviceLoad,
+                                  MigrationController, MigrationKind)
+from repro.core.pipeline import PipelineModel
+from repro.core.scheduling import InstanceLoad, LoadAwareRouter, RequestInfo
+
+# ---------------------------------------------------------------------------
+# Split-KV softmax combine: exact for ANY partition of the KV sequence
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 12), min_size=1, max_size=5),
+       st.integers(0, 10_000))
+def test_split_kv_any_partition_matches_reference(part_sizes, seed):
+    l = sum(part_sizes)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, 4, 8))
+    k = jax.random.normal(ks[1], (2, l, 4, 8))
+    v = jax.random.normal(ks[2], (2, l, 4, 8))
+    ref = reference_attention(q, k, v)
+    cuts = np.cumsum([0] + part_sizes)
+    kp = [k[:, a:b] for a, b in zip(cuts, cuts[1:])]
+    vp = [v[:, a:b] for a, b in zip(cuts, cuts[1:])]
+    out = split_kv_attention(q, kp, vp, axis="seq")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.5, 64.0))
+def test_combine_scale_invariance_of_denominator(seed, scale):
+    """l, m are per-partition; combined output must be invariant to which
+    partition saw the global max (shift-invariance of log-sum-exp)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 2, 4)) * scale
+    k = jax.random.normal(ks[1], (1, 10, 2, 4))
+    v = jax.random.normal(ks[2], (1, 10, 2, 4))
+    p1 = partial_attention(q, k[:, :5], v[:, :5])
+    p2 = partial_attention(q, k[:, 5:], v[:, 5:])
+    a = combine_partials([p1[0], p2[0]], [p1[1], p2[1]], [p1[2], p2[2]])
+    b = combine_partials([p2[0], p1[0]], [p2[1], p1[1]], [p2[2], p1[2]])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert bool(jnp.all(jnp.isfinite(a)))
+
+
+# ---------------------------------------------------------------------------
+# Global KV store invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=40),
+       st.lists(st.integers(0, 50), min_size=1, max_size=40),
+       st.integers(1, 8))
+def test_match_is_true_longest_common_block_prefix(a, b, bs):
+    st_ = GlobalKVStore(block_size=bs)
+    n_blocks_a = len(a) // bs
+    st_.insert(a, [f"p{i}" for i in range(n_blocks_a)], nbytes_per_block=10)
+    n, keys = st_.match(b)
+    # n must equal the longest common prefix rounded down to blocks
+    lcp = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        lcp += 1
+    expect = min(lcp // bs, n_blocks_a, len(b) // bs) * bs
+    assert n == expect
+    assert len(keys) == n // bs
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(4, 64)),
+                min_size=1, max_size=30))
+def test_store_capacity_never_exceeded(inserts):
+    from repro.core.kvstore import TierSpec
+    caps = [400, 300]
+    st_ = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", caps[0], 100.0), TierSpec("host", caps[1], 1.0)])
+    for seed, nbytes in inserts:
+        toks = list(np.random.default_rng(seed).integers(0, 9, 8))
+        st_.insert(toks, ["x", "y"], nbytes_per_block=nbytes)
+        assert st_.used_bytes(0) <= caps[0]
+        assert st_.used_bytes(1) <= caps[1]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 60), st.integers(0, 1000))
+def test_load_aware_never_worse_than_2x_ideal(n_inst, n_req, seed):
+    rng = np.random.default_rng(seed)
+    insts = [InstanceLoad(f"p{i}", load=float(rng.uniform(0, 0.2)),
+                          queue_len=0) for i in range(n_inst)]
+    reqs = [RequestInfo(i, 100, est_load=float(rng.uniform(0.01, 0.1)))
+            for i in range(n_req)]
+    LoadAwareRouter().dispatch(reqs, insts)
+    total = sum(p.load for p in insts)
+    assert max(p.load for p in insts) <= 2 * total / n_inst + 0.15
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0, 1)),
+                min_size=2, max_size=8), st.integers(0, 100))
+def test_controller_never_migrates_cold_to_hot(loads, seed):
+    def cost_fn(kind, d_o, d_u, amount):
+        gap = d_o.utilization - d_u.utilization
+        return gap * 0.3, 0.005
+    ctl = MigrationController(ControllerConfig(), cost_fn)
+    devs = [DeviceLoad(f"d{i}", c, m) for i, (c, m) in enumerate(loads)]
+    util = {d.device: d.utilization for d in devs}
+    for act in ctl.plan(devs):
+        assert util[act.src] > util[act.dst]
+        assert act.predicted_cost <= ControllerConfig().t_budget
+
+
+# ---------------------------------------------------------------------------
+# Pipeline model invariants (Eq. 12–17)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 128), st.floats(1e-6, 1e-1), st.floats(1e-7, 1e-1))
+def test_overlap_never_slower_than_serial(n_layers, t_fwd, t_kv):
+    pm = PipelineModel(n_layers, t_fwd, t_kv)
+    assert pm.overlapped_time() <= pm.serial_time() + 1e-12
+    assert pm.residual_stall() >= 0
+    if pm.fully_hidden():
+        # hidden: residual is at most the 2-transfer pipeline ramp
+        assert pm.residual_stall() <= 2 * pm.t_kv_layer + 1e-12

@@ -1,0 +1,97 @@
+"""Beyond-paper serving optimizations: int8 KV cache + int8 weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.models.quant import dequant, is_quantized, quantize_weights
+
+CFG = ModelConfig(name="q", family=Family.DENSE, n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 128)
+    return params, toks
+
+
+def test_int8_kv_decode_close_to_fp(setup):
+    params, toks = setup
+    cfgq = CFG.with_kv_quant()
+    c = T.init_cache(CFG, 2, 64)
+    lg, c, _ = T.prefill(CFG, params, toks, c)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    ref, _, _ = T.decode_step(CFG, params, nxt, c)
+    cq = T.init_cache(cfgq, 2, 64)
+    assert cq["groups"][0]["k"].dtype == jnp.int8
+    lgq, cq, _ = T.prefill(cfgq, params, toks, cq)
+    assert bool(jnp.all(jnp.argmax(lgq, -1) == jnp.argmax(lg, -1)))
+    out, _, _ = T.decode_step(cfgq, params, jnp.argmax(lgq, -1)[:, None], cq)
+    assert float(jnp.max(jnp.abs(out - ref))) < 0.15
+
+
+def test_int8_kv_fresh_prefill_matches_scatter_path(setup):
+    params, toks = setup
+    cfgq = CFG.with_kv_quant()
+    a, _, _ = T.apply(cfgq, params, toks, cache=T.init_cache(cfgq, 2, 64),
+                      mode="prefill", fresh_prefill=True, logits_slice="last")
+    b, _, _ = T.apply(cfgq, params, toks, cache=T.init_cache(cfgq, 2, 64),
+                      mode="prefill", fresh_prefill=False,
+                      logits_slice="last")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int8_kv_windowed_ring(setup):
+    params, _ = setup
+    import dataclasses
+    cfg = dataclasses.replace(CFG, sliding_window=8, kv_quant=True)
+    key = jax.random.PRNGKey(2)
+    p = T.init(cfg, key)
+    toks = jax.random.randint(key, (2, 20), 0, 128)
+    cache = T.init_cache(cfg, 2, 32)
+    lg, cache, _ = T.prefill(cfg, p, toks[:, :12], cache)
+    for i in range(12, 20):
+        lg, cache, _ = T.decode_step(cfg, p, toks[:, i:i + 1], cache)
+    full, _ = T.forward_train(cfg, p, toks)
+    # quantization noise allowed, ranking should broadly agree
+    corr = np.corrcoef(np.asarray(lg).ravel(),
+                       np.asarray(full[:, -1]).ravel())[0, 1]
+    assert corr > 0.99
+
+
+def test_weight_quant_structure_and_corr(setup):
+    params, toks = setup
+    qp = quantize_weights(params)
+    # norms stay bf16/f32; matrices become {"q","s"}
+    assert is_quantized(qp["embed"])
+    assert not is_quantized(qp["groups"][0]["norm1"])
+    assert qp["groups"][0]["attn"]["wq"]["q"].dtype == jnp.int8
+    # stacked scales are per-layer (scan-sliceable)
+    assert qp["groups"][0]["attn"]["wq"]["s"].shape == (2,)
+    a, _ = T.forward_train(CFG, params, toks)
+    b, _ = T.forward_train(CFG, qp, toks)
+    corr = np.corrcoef(np.asarray(a).ravel(), np.asarray(b).ravel())[0, 1]
+    assert corr > 0.99
+
+
+def test_weight_quant_serving_path(setup):
+    params, toks = setup
+    qp = quantize_weights(params)
+    cache = T.init_cache(CFG, 2, 64)
+    lg, cache, _ = T.prefill(CFG, qp, toks, cache)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    lg2, _, _ = T.decode_step(CFG, qp, nxt, cache)
+    assert bool(jnp.all(jnp.isfinite(lg2)))
+
+
+def test_dequant_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 128)) * 3.0
+    q = quantize_weights({"w": x})["w"]
+    back = dequant(q, jnp.float32)
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert err <= float(q["s"]) * 0.51 + 1e-6   # half-ULP of the int8 grid

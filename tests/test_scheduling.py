@@ -1,0 +1,74 @@
+"""Algorithm 2 (load-aware routing) vs the prefix-aware baseline (Fig. 2a)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduling import (InstanceLoad, LoadAwareRouter,
+                                   PrefixAwareRouter, RequestInfo,
+                                   RoundRobinRouter, load_skew)
+
+
+def _insts(n=3):
+    return [InstanceLoad(f"p{i}", load=0.0, queue_len=0) for i in range(n)]
+
+
+def _reqs(n, prefix_key=None, est=0.1):
+    return [RequestInfo(i, 100, est_load=est, prefix_key=prefix_key)
+            for i in range(n)]
+
+
+def test_load_aware_balances_uniform_requests():
+    insts = _insts(3)
+    plan = LoadAwareRouter().dispatch(_reqs(30), insts)
+    counts = {p.name: 0 for p in insts}
+    for v in plan.values():
+        counts[v] += 1
+    assert max(counts.values()) - min(counts.values()) <= 1
+    assert load_skew(insts) <= 0.1 + 1e-9
+
+
+def test_load_aware_prefers_least_loaded():
+    insts = _insts(3)
+    insts[0].load = 1.0
+    insts[1].load = 0.5
+    plan = LoadAwareRouter().dispatch(_reqs(1), insts)
+    assert plan[0] == "p2"
+
+
+def test_load_aware_queue_fallback_past_threshold():
+    insts = _insts(2)
+    insts[0].load = 2.0
+    insts[0].queue_len = 0
+    insts[1].load = 2.0
+    insts[1].queue_len = 5
+    plan = LoadAwareRouter(load_threshold=1.6).dispatch(_reqs(1), insts)
+    assert plan[0] == "p0"          # lowest queue wins once all overloaded
+
+
+def test_prefix_aware_skews_hot_prefix():
+    """Fig. 2a positive feedback: one popular prefix concentrates load."""
+    insts = _insts(3)
+    hot = b"\x01"
+    plan = PrefixAwareRouter(hit_bonus=2.0).dispatch(
+        _reqs(30, prefix_key=hot, est=0.05), insts)
+    counts = {p.name: 0 for p in insts}
+    for v in plan.values():
+        counts[v] += 1
+    assert max(counts.values()) >= 20   # most requests pile on one instance
+    assert load_skew(insts) > 0.5
+
+
+def test_load_aware_immune_to_prefix_popularity():
+    insts = _insts(3)
+    hot = b"\x01"
+    plan = LoadAwareRouter().dispatch(_reqs(30, prefix_key=hot, est=0.05),
+                                      insts)
+    counts = {}
+    for v in plan.values():
+        counts[v] = counts.get(v, 0) + 1
+    assert max(counts.values()) - min(counts.values()) <= 1
+
+
+def test_round_robin_cycles():
+    insts = _insts(3)
+    plan = RoundRobinRouter().dispatch(_reqs(6), insts)
+    assert [plan[i] for i in range(6)] == ["p0", "p1", "p2"] * 2

@@ -1,0 +1,99 @@
+"""End-to-end behaviour of the BanaServe system.
+
+The full loop: requests arrive -> load-aware routing -> prefill with Global
+KV Store reuse -> KV transfer into decode slots -> continuous-batching
+decode -> exact greedy generations; plus Algorithm 1 reacting to load and
+the simulator reproducing the paper's relative claims.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.kvstore import GlobalKVStore
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.serving.cluster import ClusterSim, SimConfig
+from repro.serving.engine import DecodeEngine, EngineConfig, PrefillEngine
+from repro.serving.request import Request
+from repro.serving.workload import WorkloadConfig, generate
+
+CFG = ModelConfig(name="sys", family=Family.DENSE, n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256)
+
+
+def test_full_serving_path_exactness():
+    """Workload generator -> engines -> exact generations with store reuse."""
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    store = GlobalKVStore(block_size=8)
+    ecfg = EngineConfig(max_len=160, max_batch=4, block_size=8)
+    pe = PrefillEngine(CFG, params, ecfg, store)
+    de = DecodeEngine(CFG, params, ecfg)
+    wl = WorkloadConfig(kind="synthetic", rps=100, n_requests=6,
+                        vocab_size=256, max_new_tokens=5, prefix_share=0.8,
+                        n_prefix_groups=1, seed=4, prompt_len_lo=20,
+                        prompt_len_hi=40)
+    reqs = generate(wl)
+    pending = list(reqs)
+    finished = []
+    while len(finished) < len(reqs):
+        while pending and de.free_slot() is not None:
+            r = pending.pop(0)
+            st, logits = pe.run(r)
+            de.insert(r, st, int(jnp.argmax(logits)))
+        finished += de.step()
+    # exactness vs monolithic greedy rollout
+    for r in reqs:
+        toks = jnp.asarray(r.prompt, jnp.int32)[None]
+        out = []
+        for _ in range(r.max_new_tokens):
+            lg, _ = T.forward_train(CFG, params, toks)
+            nxt = int(jnp.argmax(lg[0, -1]))
+            out.append(nxt)
+            toks = jnp.concatenate([toks, jnp.asarray([[nxt]])], 1)
+        assert r.generated == out, r.rid
+    # prefix reuse actually happened
+    assert any(r.cached_tokens > 0 for r in reqs)
+    assert store.stats.hit_rate > 0
+
+
+def test_simulator_reproduces_paper_ordering():
+    """BanaServe >= DistServe-like throughput on the long-context regime
+    (the paper's headline comparison)."""
+    model = configs.get("llama-13b")
+    w = WorkloadConfig(kind="longbench", rps=2, n_requests=40, seed=0,
+                       max_new_tokens=128)
+    b = ClusterSim(SimConfig.preset(model, "banaserve"), w).run()
+    d = ClusterSim(SimConfig.preset(model, "distserve"), w).run()
+    assert b["throughput_tok_s"] > 1.2 * d["throughput_tok_s"]
+
+
+def test_migration_controller_reacts_in_system():
+    model = configs.get("llama-13b")
+    w = WorkloadConfig(kind="longbench", rps=3, n_requests=30, seed=1,
+                       max_new_tokens=64)
+    sim = ClusterSim(SimConfig.preset(model, "banaserve"), w)
+    sim.run()
+    assert len(sim.migration_log) > 0
+    # capacity moved toward prefill under a prefill-heavy load
+    total_prefill_cap = sum(i.prefill_cap for i in sim.instances)
+    assert total_prefill_cap > 2.0   # started at 2.0 (2 prefill instances)
+
+
+def test_smoke_end_to_end_one_assigned_arch():
+    """Assigned-arch smoke through the ENTIRE serving path."""
+    cfg = configs.get("granite-8b").smoke()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(max_len=96, max_batch=2, block_size=8)
+    pe = PrefillEngine(cfg, params, ecfg, GlobalKVStore(block_size=8))
+    de = DecodeEngine(cfg, params, ecfg)
+    rng = np.random.default_rng(0)
+    r = Request(rid=0, arrival=0.0,
+                prompt=rng.integers(0, cfg.vocab_size, 20, dtype=np.int32),
+                max_new_tokens=4)
+    st, logits = pe.run(r)
+    de.insert(r, st, int(jnp.argmax(logits)))
+    while de.active:
+        de.step()
+    assert len(r.generated) == 4
