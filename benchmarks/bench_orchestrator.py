@@ -1,0 +1,64 @@
+"""Live-engine router A/B (Fig. 2a on real engines, not the simulator).
+
+Runs the same shared-prefix workload through the live orchestrator under
+
+* ``load_aware``   — LoadAwareRouter + one Global KV Cache Store shared by
+  every prefill instance (the BanaServe decoupling), and
+* ``prefix_aware`` — PrefixAwareRouter + per-instance private caches (the
+  cache-locality coupling of Fig. 2a), and
+* ``round_robin``  — locality- and load-blind control.
+
+Migration is off in all modes so the prefill token skew column isolates the
+*routing* policy — it is the live analogue of the Fig. 2a imbalance (the
+Algorithm 1 loop is demonstrated by examples/serve_disaggregated.py).  Hit
+rate shows what locality buys the baseline and what the shared store
+recovers without the skew.  Each mode gets one untimed warmup pass so the
+shared jit cache doesn't bill all compiles to whichever mode runs first.
+
+    PYTHONPATH=src python -m benchmarks.run --only orchestrator
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.serving.engine import EngineConfig
+from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
+from repro.serving.workload import WorkloadConfig, generate
+
+CFG = ModelConfig(name="bench", family=Family.DENSE, n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128)
+
+MODES = {
+    "load_aware": dict(router="load_aware", global_store=True),
+    "prefix_aware": dict(router="prefix_aware", global_store=False),
+    "round_robin": dict(router="round_robin", global_store=False),
+}
+
+
+def main() -> None:
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(max_len=96, max_batch=3, block_size=8)
+    wl = WorkloadConfig(kind="synthetic", rps=1000.0, n_requests=20,
+                        vocab_size=128, max_new_tokens=8, prefix_share=0.8,
+                        n_prefix_groups=3, seed=2, prompt_len_lo=24,
+                        prompt_len_hi=64)
+    print("fig2a_live,mode,throughput_tok_s,mean_ttft_s,"
+          "prefill_token_skew,store_hit_rate")
+    for mode, kw in MODES.items():
+        s = None
+        for _warm in (True, False):
+            orch = Orchestrator(CFG, params, OrchestratorConfig(
+                n_prefill=3, n_decode=2, engine=ecfg, migration=False, **kw))
+            s = orch.run(generate(wl))
+        print(f"fig2a_live,{mode},"
+              f"{s['throughput_tok_s']:.1f},{s['mean_ttft_s']:.3f},"
+              f"{s['prefill_token_skew']:.3f},{s['store_hit_rate']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

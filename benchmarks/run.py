@@ -10,13 +10,15 @@ import argparse
 import sys
 import time
 
-from . import (bench_attention, bench_migration, bench_pipeline,
-               bench_scheduler, bench_throughput, bench_utilization)
+from . import (bench_attention, bench_migration, bench_orchestrator,
+               bench_pipeline, bench_scheduler, bench_throughput,
+               bench_utilization)
 
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
     "migration": bench_migration,     # Eq. 4 / Eq. 11
-    "scheduler": bench_scheduler,     # Fig. 2a
+    "scheduler": bench_scheduler,     # Fig. 2a (simulator)
+    "orchestrator": bench_orchestrator,  # Fig. 2a on live engines
     "utilization": bench_utilization, # Fig. 2b
     "attention": bench_attention,     # kernels
     "throughput": bench_throughput,   # Fig. 8-11

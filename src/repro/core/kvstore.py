@@ -47,6 +47,15 @@ def chain_hashes(tokens: Sequence[int], block_size: int) -> List[bytes]:
     return out
 
 
+def leading_block_key(tokens: Sequence[int],
+                      block_size: int) -> Optional[bytes]:
+    """Hash of the first full block, or None — the locality signal shared
+    by the prefix-aware router and the engines' published-prefix records."""
+    if len(tokens) < block_size:
+        return None
+    return chain_hashes(tokens[:block_size], block_size)[0]
+
+
 @dataclasses.dataclass
 class TierSpec:
     name: str
@@ -98,12 +107,16 @@ class GlobalKVStore:
         self.stats = StoreStats()
 
     # -- lookup ----------------------------------------------------------
-    def match(self, tokens: Sequence[int]) -> Tuple[int, List[bytes]]:
+    def match(self, tokens: Sequence[int], record_stats: bool = True,
+              keys: Optional[List[bytes]] = None) -> Tuple[int, List[bytes]]:
         """Longest cached prefix of ``tokens``.
 
-        Returns (n_matched_tokens, matched_block_keys)."""
-        self.stats.lookups += 1
-        keys = chain_hashes(tokens, self.block_size)
+        Returns (n_matched_tokens, matched_block_keys).  Pass
+        ``record_stats=False`` for tentative probes (e.g. batch planning)
+        so repeated lookups for one request don't distort hit-rate stats;
+        pass precomputed ``keys`` to skip re-hashing the prompt."""
+        if keys is None:
+            keys = chain_hashes(tokens, self.block_size)
         matched: List[bytes] = []
         for k in keys:
             if k in self._entries:
@@ -111,8 +124,10 @@ class GlobalKVStore:
                 self._entries.move_to_end(k)        # LRU touch
             else:
                 break
-        self.stats.hit_blocks += len(matched)
-        self.stats.miss_blocks += len(keys) - len(matched)
+        if record_stats:
+            self.stats.lookups += 1
+            self.stats.hit_blocks += len(matched)
+            self.stats.miss_blocks += len(keys) - len(matched)
         return len(matched) * self.block_size, matched
 
     def fetch(self, keys: Sequence[bytes]) -> Tuple[List[Any], float]:
@@ -131,9 +146,11 @@ class GlobalKVStore:
 
     # -- insert ----------------------------------------------------------
     def insert(self, tokens: Sequence[int], payloads: Sequence[Any],
-               nbytes_per_block: int) -> List[bytes]:
+               nbytes_per_block: int,
+               keys: Optional[List[bytes]] = None) -> List[bytes]:
         """Insert per-block payloads for the (full-block) prefix of tokens."""
-        keys = chain_hashes(tokens, self.block_size)
+        if keys is None:
+            keys = chain_hashes(tokens, self.block_size)
         n = min(len(keys), len(payloads))
         out = []
         for k, p in zip(keys[:n], payloads[:n]):

@@ -39,6 +39,50 @@ class Router(Protocol):
                  instances: List[InstanceLoad]) -> Dict[int, str]: ...
 
 
+# ---------------------------------------------------------------------------
+# Live-engine adapter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LoadReport:
+    """One live engine's utilization snapshot — the Eq. 32/37 inputs.
+
+    ``compute_frac``/``memory_frac`` are the C/C_max and M/M_max terms;
+    ``cached_prefix_tokens`` (leading-block hash -> cached tokens) is the
+    locality signal the prefix-aware baseline router keys on."""
+    compute_frac: float
+    memory_frac: float
+    queue_len: int
+    cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def load(self) -> float:               # Eq. 37
+        return self.compute_frac + self.memory_frac
+
+
+class ReportsLoad(Protocol):
+    """Anything that can be routed over: live engines, simulator shims."""
+    name: str
+
+    def load_report(self) -> LoadReport: ...
+
+
+def live_instance_loads(engines: Sequence[ReportsLoad]) -> List[InstanceLoad]:
+    """Derive router inputs from live engines instead of simulator state.
+
+    This is the seam that lets ``LoadAwareRouter``/``PrefixAwareRouter`` run
+    unchanged over both the discrete-event simulator (serving/cluster.py) and
+    the live fleet (serving/orchestrator.py)."""
+    out: List[InstanceLoad] = []
+    for e in engines:
+        r = e.load_report()
+        out.append(InstanceLoad(
+            name=e.name, load=r.load, queue_len=r.queue_len,
+            cached_prefix_tokens=dict(r.cached_prefix_tokens)))
+    return out
+
+
 class LoadAwareRouter:
     """Algorithm 2: least-loaded first; past δ_L, lowest queue length."""
 

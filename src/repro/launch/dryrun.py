@@ -114,6 +114,10 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax API drift: cost_analysis() returns a per-device list of dicts
+        # on some versions and a bare dict on others
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         trips = _loop_trips(cfg, shape)
         coll = H.parse_collectives(hlo, trips)

@@ -86,7 +86,11 @@ def _dot_flops(line: str, shape_str: str, operands: str,
         prod_out *= d
     # contraction size from the lhs operand's contracting dims
     cm = _DOT_DIMS_RE.search(line)
-    ops = re.findall(r"%?([\w.\-]+)", operands.split(")")[0])
+    # operand names: prefer %-prefixed tokens — newer jaxlib prints each
+    # operand with its full shape ("f32[256,256]{1,0} %lhs"), so a bare
+    # token scan would pick up the dtype instead of the name
+    seg = operands.split(")")[0]
+    ops = re.findall(r"%([\w.\-]+)", seg) or re.findall(r"([\w.\-]+)", seg)
     if not cm or not ops:
         return 2.0 * prod_out
     lhs_shape = shapes.get(ops[0], "")

@@ -21,6 +21,7 @@ identity blocks (zero output projections — residual passthrough).
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Dict, Tuple
 
 import jax
@@ -32,6 +33,28 @@ from ..models import layers as L
 from ..models import quant as Q
 from ..models import transformer as T
 from ..models.config import BlockKind, ModelConfig
+
+
+def _shard_map(fn, mesh, in_specs, out_specs, manual_axes):
+    """jax API drift shim: shard_map moved out of jax.experimental, and its
+    kwargs changed (check_rep -> check_vma, auto -> axis_names) — detect
+    each by signature since the changes landed in different releases.
+
+    ``manual_axes`` are the axes ``fn`` references; with axis_names support
+    the rest stay GSPMD-sharded.  The old partial-auto mode trips XLA's
+    PartitionId limitation, so without axis_names we run fully manual: axes
+    absent from the specs are replicated inside the body — identical
+    results, duplicated compute."""
+    try:
+        sm = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    kw = ({"check_vma": False} if "check_vma" in params
+          else {"check_rep": False})
+    if "axis_names" in params:
+        kw["axis_names"] = set(manual_axes)
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 def pad_layers(cfg: ModelConfig, n_stages: int) -> Tuple[int, int]:
@@ -161,13 +184,12 @@ def build_pipeline_decode(cfg: ModelConfig, mesh, batch: int):
         p_in = {k: params[k] for k in p_specs if k != "groups"}
         p_in["groups"] = params["groups"][0]     # the stacked layer dict
         c_specs = jax.tree.map(lambda _: P("data"), cache["groups"][0])
-        logits, new_g, new_len = jax.shard_map(
-            stage_fn, mesh=mesh,
+        logits, new_g, new_len = _shard_map(
+            stage_fn, mesh,
             in_specs=(p_specs, P(), c_specs, P()),
             out_specs=(P(), c_specs, P()),
-            check_vma=False,
-            axis_names={"data"})(p_in, tokens, cache["groups"][0],
-                                 cache["lengths"])
+            manual_axes={"data"})(p_in, tokens, cache["groups"][0],
+                                  cache["lengths"])
         new_cache = {"lengths": new_len, "groups": (new_g,),
                      "rem": cache.get("rem", ())}
         return logits, new_cache

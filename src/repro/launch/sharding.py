@@ -44,8 +44,16 @@ def _axis_size(mesh: Mesh, axis) -> int:
 
 def _maybe(mesh: Mesh, axis, dim: int):
     """Use ``axis`` only when ``dim`` divides evenly."""
-    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 \
-        else None
+    if axis is None or dim % _axis_size(mesh, axis) != 0:
+        return None
+    # normalize singleton axis tuples to bare names: ("data",) and "data"
+    # mean the same sharding but no longer compare equal as spec entries
+    if isinstance(axis, tuple):
+        if not axis:
+            return None
+        if len(axis) == 1:
+            return axis[0]
+    return axis
 
 
 def _path_str(path) -> str:

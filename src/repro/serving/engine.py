@@ -1,16 +1,22 @@
 """Live serving engines over the real JAX model.
 
-``PrefillEngine`` — single-request prefill with Global-KV-Store integration:
+``PrefillEngine`` — batched prefill with Global-KV-Store integration:
 longest-prefix match, KV fetch + incremental (prefix-aware) prefill of the
 suffix only, and insertion of freshly produced full blocks back into the
-store.  This is the executable form of Fig. 5.
+store.  This is the executable form of Fig. 5.  Requests are bucketed by
+(suffix length, prefix-hit) so every forward is a dense ``(G, S)`` batch;
+rows inside a bucket may carry *different* cached-prefix lengths — per-row
+cache lengths drive positions and masks, so the batch is exact.
 
 ``DecodeEngine`` — slot-based continuous batching decoder: a fixed-capacity
 batched cache; prefill output states are *inserted* into free slots (the
 prefill→decode KV transfer of PD disaggregation) and every step decodes all
-active slots.
+active slots.  Slots can also be *extracted* mid-flight — the payload of
+attention-level migration and of role re-rolls (serving/orchestrator.py).
 
-Both run the exact same ``models.transformer`` stack used by training and
+Both report ``core.scheduling.LoadReport`` snapshots so the Algorithm 1/2
+policies run over live engines exactly as they run over the simulator, and
+both run the exact same ``models.transformer`` stack used by training and
 the dry-run — no separate serving model definition.
 """
 from __future__ import annotations
@@ -23,11 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.kvstore import GlobalKVStore
+from ..core.kvstore import GlobalKVStore, chain_hashes
+from ..core.scheduling import LoadReport
 from ..models import kvcache as KC
 from ..models import transformer as T
 from ..models.config import ModelConfig
-from .request import Request
+from .request import Phase, Request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +43,18 @@ class EngineConfig:
     max_batch: int = 8
     block_size: int = 16          # must match the store's block size
     greedy: bool = True
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_apply(cfg: ModelConfig, mode: str, prefix_aware: bool):
+    """Jitted forward shared across engine instances.
+
+    Keyed on the (hashable, frozen) ModelConfig so re-rolling an instance
+    between the prefill and decode roles reuses compiled executables instead
+    of paying a fresh trace+compile per engine object."""
+    return jax.jit(functools.partial(T.apply, cfg, mode=mode,
+                                     logits_slice="last",
+                                     prefix_aware=prefix_aware))
 
 
 class PrefillEngine:
@@ -48,56 +67,165 @@ class PrefillEngine:
         self.ecfg = ecfg
         self.store = store if KC.prefix_cacheable(cfg) else None
         self.name = name
-        self._prefill = jax.jit(
-            functools.partial(T.apply, cfg, mode="prefill",
-                              logits_slice="last", prefix_aware=False),
-            static_argnames=())
-        self._prefill_inc = jax.jit(
-            functools.partial(T.apply, cfg, mode="prefill",
-                              logits_slice="last", prefix_aware=True))
+        self.queue: List[Request] = []    # routed, not yet prefilled
+        self.tokens_prefilled = 0         # suffix tokens actually computed
+        self.n_prefilled = 0
+        # leading-block hash -> cached tokens; the locality signal the
+        # prefix-aware baseline router keys on (Fig. 2a)
+        self._leading: Dict[bytes, int] = {}
+        self._prefill = _jit_apply(cfg, "prefill", False)
+        self._prefill_inc = _jit_apply(cfg, "prefill", True)
 
-    # ------------------------------------------------------------------
+    # -- queue / load ----------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        req.advance(Phase.ROUTED)
+        req.prefill_instance = self.name
+        self.queue.append(req)
+
+    def load_report(self) -> LoadReport:
+        """Backlog-normalized utilization: queued prompt tokens against one
+        full engine's worth of work (max_batch·max_len).  Prefill holds no
+        resident KV — it is handed off — so memory_frac is 0."""
+        budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
+        queued = sum(r.prompt_len for r in self.queue)
+        return LoadReport(compute_frac=min(queued / budget, 1.0),
+                          memory_frac=0.0, queue_len=len(self.queue),
+                          cached_prefix_tokens=dict(self._leading))
+
+    # -- prefill ---------------------------------------------------------
+    def _match(self, tokens: np.ndarray,
+               keys: List[bytes]) -> Tuple[int, List[Any]]:
+        """Longest block-aligned cached prefix + its fetched payloads."""
+        if self.store is None or len(tokens) < 2:
+            return 0, []
+        matched, hit_keys = self.store.match(tokens, keys=keys)
+        matched = min(matched, len(tokens) - 1)  # always prefill >=1 token
+        matched -= matched % self.ecfg.block_size
+        if matched <= 0:
+            return 0, []
+        hit_keys = hit_keys[: matched // self.ecfg.block_size]
+        payloads, _ = self.store.fetch(hit_keys)
+        return matched, payloads
+
+    def _match_len(self, tokens: np.ndarray, keys: List[bytes]) -> int:
+        """Tentative match length for batch planning: no stats, no fetch."""
+        if self.store is None or len(tokens) < 2:
+            return 0
+        matched, _ = self.store.match(tokens, record_stats=False, keys=keys)
+        matched = min(matched, len(tokens) - 1)
+        return max(matched - matched % self.ecfg.block_size, 0)
+
+    def _publish(self, tokens: np.ndarray, st: Dict[str, Any],
+                 matched: int, keys: List[bytes]) -> None:
+        """Insert freshly computed full blocks into the global store."""
+        bs = self.ecfg.block_size
+        if not keys:
+            return
+        n_full = len(keys) * bs
+        self._leading[keys[0]] = max(self._leading.get(keys[0], 0), n_full)
+        if self.store is None:
+            return
+        payloads = [KC.slice_prefix_kv(st, i, i + bs)
+                    for i in range(matched, n_full, bs)]
+        if payloads:
+            nbytes = KC.state_num_bytes(payloads[0])
+            self.store.insert(tokens[:n_full],
+                              [None] * (matched // bs) + payloads, nbytes,
+                              keys=keys)
+
+    def run_batch(self, reqs: List[Request],
+                  frames: Optional[jax.Array] = None
+                  ) -> List[Tuple[Dict[str, Any], jax.Array]]:
+        """Prefill several requests in as few dense forwards as possible.
+
+        Wave loop: requests are bucketed by (suffix length, prefix-hit) and
+        one bucket runs per wave as a dense forward; blocks it publishes can
+        turn later requests' misses into hits, so the rest re-match and
+        re-bucket each wave.  Within a wave, miss-requests sharing a leading
+        block with an already-chosen one are deferred — their shared prefix
+        will be in the store by their turn.
+
+        Returns ``[(request_state, last_logits_row)]`` aligned with ``reqs``.
+        """
+        for req in reqs:
+            req.advance(Phase.PREFILL)
+        toks = [np.asarray(r.prompt, np.int32) for r in reqs]
+        # hash each prompt exactly once; every store probe reuses the chain.
+        # No store (non-cacheable arch) -> no hashing, and empty chains
+        # disable the shared-prefix deferral below.
+        keys_of = [chain_hashes(t, self.ecfg.block_size)
+                   if self.store is not None else [] for t in toks]
+        out: List[Optional[Tuple[Dict[str, Any], jax.Array]]] = \
+            [None] * len(reqs)
+        remaining = list(range(len(reqs)))
+        while remaining:
+            tlen = {i: self._match_len(toks[i], keys_of[i])
+                    for i in remaining}
+            # each distinct (rows, suffix_len) bucket shape costs one XLA
+            # compile; padded fixed-size buckets would bound the shape set
+            # (future optimization — the per-request path paid this too)
+            buckets: Dict[Tuple[int, bool], List[int]] = {}
+            for i in remaining:
+                buckets.setdefault((len(toks[i]) - tlen[i], tlen[i] > 0),
+                                   []).append(i)
+            (_slen, hit), idxs = max(buckets.items(),
+                                     key=lambda kv: len(kv[1]))
+            # defer duplicate uncached prefixes to a later wave
+            seen_leads, chosen = set(), []
+            for i in idxs:
+                lead = keys_of[i][0] if keys_of[i] else None
+                if tlen[i] == 0 and lead is not None and lead in seen_leads:
+                    continue
+                if lead is not None:
+                    seen_leads.add(lead)
+                chosen.append(i)
+            # the engine's capacity contract: never a denser forward than
+            # the configured batch; the wave loop picks up the overflow
+            chosen = chosen[: max(self.ecfg.max_batch, 1)]
+            cache = T.init_cache(self.cfg, len(chosen), self.ecfg.max_len,
+                                 dtype=self.params["embed"].dtype)
+            matched_of: Dict[int, int] = {}
+            for row, i in enumerate(chosen):
+                matched, payloads = self._match(toks[i], keys_of[i])
+                matched_of[i] = matched
+                if matched > 0:
+                    reqs[i].cached_tokens = matched
+                    st = KC.extract_request_state(cache, row)
+                    off = 0
+                    for p in payloads:
+                        st = KC.merge_prefix_kv(st, p, off)
+                        off += self.ecfg.block_size
+                    cache = KC.insert_request_state(cache, row, st)
+            suffixes = jnp.stack([
+                jnp.asarray(toks[i][matched_of[i]:]) for i in chosen])
+            fn = self._prefill_inc if hit else self._prefill
+            logits, cache, _ = fn(self.params, suffixes, cache=cache,
+                                  frames=frames)
+            for row, i in enumerate(chosen):
+                st = KC.extract_request_state(cache, row)
+                self._publish(toks[i], st, matched_of[i], keys_of[i])
+                self.tokens_prefilled += len(toks[i]) - matched_of[i]
+                self.n_prefilled += 1
+                out[i] = (st, logits[row])
+            done = set(chosen)
+            remaining = [i for i in remaining if i not in done]
+        return out  # type: ignore[return-value]
+
     def run(self, req: Request, frames: Optional[jax.Array] = None
             ) -> Tuple[Dict[str, Any], jax.Array]:
         """Prefill one request.  Returns (request_state, last_logits)."""
-        tokens = np.asarray(req.prompt, np.int32)
-        cache = T.init_cache(self.cfg, 1, self.ecfg.max_len,
-                             dtype=self.params["embed"].dtype)
-        matched = 0
-        if self.store is not None:
-            matched, keys = self.store.match(tokens.tolist())
-            matched = min(matched, len(tokens) - 1)  # always prefill >=1 token
-            matched -= matched % self.ecfg.block_size
-            if matched > 0:
-                keys = keys[: matched // self.ecfg.block_size]
-                payloads, _ = self.store.fetch(keys)
-                st = KC.extract_request_state(cache, 0)
-                off = 0
-                for p in payloads:
-                    st = KC.merge_prefix_kv(st, p, off)
-                    off += self.ecfg.block_size
-                cache = KC.insert_request_state(cache, 0, st)
-                req.cached_tokens = matched
-        suffix = tokens[matched:]
-        fn = self._prefill_inc if matched > 0 else self._prefill
-        logits, cache, _ = fn(self.params, suffix[None, :], cache=cache,
-                              frames=frames)
-        st = KC.extract_request_state(cache, 0)
-        # insert freshly computed full blocks into the global store
-        if self.store is not None:
-            bs = self.ecfg.block_size
-            n_full = len(tokens) // bs * bs
-            payloads = [KC.slice_prefix_kv(st, i, i + bs)
-                        for i in range(matched, n_full, bs)]
-            if payloads:
-                nbytes = KC.state_num_bytes(payloads[0])
-                all_keys_tokens = tokens[:n_full]
-                from ..core.kvstore import chain_hashes
-                keys = chain_hashes(all_keys_tokens.tolist(), bs)
-                self.store.insert(all_keys_tokens.tolist(),
-                                  [None] * (matched // bs) + payloads, nbytes)
-                # re-insert payloads for the new keys only
-        return st, logits[0]
+        return self.run_batch([req], frames=frames)[0]
+
+    def run_queued(self, max_reqs: int,
+                   frames: Optional[jax.Array] = None
+                   ) -> List[Tuple[Request, Dict[str, Any], jax.Array]]:
+        """Prefill up to ``max_reqs`` from the head of the routed queue."""
+        n = min(max_reqs, len(self.queue))
+        if n <= 0:
+            return []
+        batch = [self.queue.pop(0) for _ in range(n)]
+        results = self.run_batch(batch, frames=frames)
+        return [(r, st, lg) for r, (st, lg) in zip(batch, results)]
 
 
 class DecodeEngine:
@@ -113,9 +241,11 @@ class DecodeEngine:
                                   dtype=params["embed"].dtype)
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
         self.next_token = np.zeros((ecfg.max_batch,), np.int32)
-        self._step = jax.jit(
-            functools.partial(T.apply, cfg, mode="decode",
-                              logits_slice="last"))
+        # host-side mirror of active rows' cache lengths: keeps the hot
+        # hand-off/control paths free of device syncs
+        self._slot_len = np.zeros((ecfg.max_batch,), np.int64)
+        self.tokens_decoded = 0
+        self._step = _jit_apply(cfg, "decode", False)
 
     # ------------------------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -128,17 +258,62 @@ class DecodeEngine:
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    def insert(self, req: Request, state: Dict[str, Any],
-               first_token: int) -> int:
-        """KV transfer: place a prefilled request into a decode slot."""
+    @property
+    def free_slots(self) -> int:
+        return self.ecfg.max_batch - self.active
+
+    @property
+    def kv_tokens(self) -> int:
+        """Resident KV across active slots (host-side, no device sync)."""
+        return int(self._slot_len.sum())
+
+    def load_report(self) -> LoadReport:
+        """Occupancy as C/C_max (every step touches every active slot) and
+        resident KV against the full cache footprint as M/M_max."""
+        cap = max(self.ecfg.max_batch, 1)
+        mem = self.kv_tokens / max(self.ecfg.max_batch * self.ecfg.max_len, 1)
+        return LoadReport(compute_frac=self.active / cap,
+                          memory_frac=min(mem, 1.0), queue_len=self.active)
+
+    # -- slot transfer ---------------------------------------------------
+    def adopt(self, req: Request, state: Dict[str, Any],
+              next_token: int) -> int:
+        """Place an in-flight request's state into a free slot (migration
+        receive path: no token is emitted by the move itself)."""
         slot = self.free_slot()
         assert slot is not None, "decode engine full"
         self.cache = KC.insert_request_state(self.cache, slot, state)
         self.slots[slot] = req
-        self.next_token[slot] = first_token
-        req.generated.append(int(first_token))
+        self.next_token[slot] = int(next_token)
+        self._slot_len[slot] = int(state["length"])
+        req.decode_instance = self.name
         return slot
 
+    def insert(self, req: Request, state: Dict[str, Any],
+               first_token: int) -> int:
+        """KV transfer: place a prefilled request into a decode slot."""
+        slot = self.adopt(req, state, int(first_token))
+        req.generated.append(int(first_token))
+        req.advance(Phase.DECODE)
+        return slot
+
+    def extract_slot(self, slot: int
+                     ) -> Tuple[Request, Dict[str, Any], int]:
+        """Pull an active slot's full state out (migration send path)."""
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} empty"
+        state = KC.extract_request_state(self.cache, slot)
+        tok = int(self.next_token[slot])
+        self.slots[slot] = None
+        self._slot_len[slot] = 0
+        return req, state, tok
+
+    def drain(self) -> List[Tuple[Request, Dict[str, Any], int]]:
+        """Extract every active slot (role re-roll / instance teardown)."""
+        return [self.extract_slot(i) for i, s in enumerate(self.slots)
+                if s is not None]
+
+    # -- decode ----------------------------------------------------------
     def step(self) -> List[Tuple[Request, int]]:
         """One decode iteration for all active slots.  Returns finished."""
         if self.active == 0:
@@ -151,12 +326,24 @@ class DecodeEngine:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            if len(req.generated) >= req.max_new_tokens:
+                # budget already met at insert time (max_new_tokens == 1):
+                # finish without emitting the extra token
+                req.advance(Phase.DONE)
+                finished.append((req, i))
+                self.slots[i] = None
+                self._slot_len[i] = 0
+                continue
             tok = int(nxt[i])
             req.generated.append(tok)
             self.next_token[i] = tok
+            self._slot_len[i] += 1
+            self.tokens_decoded += 1
             done = (len(req.generated) >= req.max_new_tokens
-                    or int(self.cache["lengths"][i]) >= self.ecfg.max_len - 1)
+                    or int(self._slot_len[i]) >= self.ecfg.max_len - 1)
             if done:
+                req.advance(Phase.DONE)
                 finished.append((req, i))
                 self.slots[i] = None
+                self._slot_len[i] = 0
         return finished

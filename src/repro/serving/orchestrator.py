@@ -1,0 +1,399 @@
+"""Live disaggregated orchestrator: route + migrate over real engines.
+
+This is the executable counterpart of the discrete-event simulator
+(``serving/cluster.py``): one step-driven control loop that owns a fleet of
+``PrefillEngine`` / ``DecodeEngine`` instances over the *real* JAX model and
+wires the paper's three mechanisms together:
+
+* **Global KV Cache Store (§4.2)** — one ``GlobalKVStore`` shared by every
+  prefill instance (``global_store=True``), or per-instance private stores
+  for the locality-constrained baseline A/B.
+* **Algorithm 2 routing (§4.4.2)** — incoming requests are dispatched
+  through ``core.scheduling`` routers over live ``InstanceLoad`` snapshots
+  (the ``live_instance_loads`` adapter), then prefilled in dense batches.
+* **Algorithm 1 migration (§4.4.1)** — every ``control_interval`` steps the
+  per-instance ``DeviceLoad``s feed ``core.migration.MigrationController``;
+  an emitted LAYER action *re-rolls* an underloaded instance into the
+  overloaded tier's role (the executable form of Fig. 3 — all layers of the
+  starved role's replica materialize on the idle device), evacuating any
+  resident decode KV to peers first.  KV_HEADS actions rebalance in-flight
+  requests' KV between decode instances (attention-level migration).
+
+Per-step order: route pending → batched prefill + KV hand-off into decode
+slots → decode step on every decode instance → (periodically) control
+cycle.  Every hand-off and migration is exact pytree surgery
+(``models.kvcache``), so orchestrated greedy decode is token-identical to a
+single-engine rollout — asserted by tests/test_orchestrator.py and
+examples/serve_disaggregated.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from ..core import analytical as A
+from ..core.kvstore import GlobalKVStore, leading_block_key
+from ..core.migration import (ControllerConfig, DeviceLoad, MigrationAction,
+                              MigrationController, MigrationKind)
+from ..core.scheduling import (LoadAwareRouter, PrefixAwareRouter,
+                               RequestInfo, RoundRobinRouter,
+                               live_instance_loads)
+from ..models.config import ModelConfig
+from .engine import DecodeEngine, EngineConfig, PrefillEngine
+from .request import Metrics, Phase, Request
+
+ROLE_PREFILL = "prefill"
+ROLE_DECODE = "decode"
+
+
+def _make_router(name: str):
+    if name == "load_aware":
+        return LoadAwareRouter()
+    if name == "prefix_aware":
+        return PrefixAwareRouter()
+    if name == "round_robin":
+        return RoundRobinRouter()
+    raise ValueError(f"unknown router {name!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestratorConfig:
+    n_prefill: int = 2
+    n_decode: int = 2
+    router: str = "load_aware"     # load_aware | prefix_aware | round_robin
+    global_store: bool = True      # shared store vs per-instance caches
+    engine: EngineConfig = EngineConfig()
+    migration: bool = True
+    control_interval: int = 4      # orchestrator steps per control cycle
+    controller: ControllerConfig = ControllerConfig(
+        delta_up=0.5, delta_down=0.25, rho=0.5, max_actions_per_cycle=2)
+    hw: A.HardwareProfile = A.TPU_V5E
+    prefill_chunk: int = 4         # max requests prefilled per member/step
+    min_prefill: int = 1           # role floors: the serving path must exist
+    min_decode: int = 1
+
+
+class _Member:
+    """One fleet slot: a named device currently playing one role.
+
+    Exactly one of ``prefill``/``decode`` is live; a re-roll swaps them.
+    Token counters live here (not on the engine) so they survive re-rolls.
+    """
+
+    def __init__(self, name: str, role: str):
+        self.name = name
+        self.role = role
+        self.prefill: Optional[PrefillEngine] = None
+        self.decode: Optional[DecodeEngine] = None
+        self.rerolled = False          # role changed at least once
+        self.tokens_prefilled = 0
+        self.n_prefilled = 0
+        self.tokens_decoded = 0
+
+    @property
+    def engine(self):
+        return self.prefill if self.role == ROLE_PREFILL else self.decode
+
+    def load_report(self):
+        return self.engine.load_report()
+
+
+class Orchestrator:
+    """Owns the fleet; drives route → prefill → hand-off → decode → control."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 ocfg: OrchestratorConfig = OrchestratorConfig()):
+        if ocfg.n_prefill < 1 or ocfg.n_decode < 1:
+            raise ValueError("fleet needs >=1 prefill and >=1 decode "
+                             f"instance, got {ocfg.n_prefill}p/"
+                             f"{ocfg.n_decode}d")
+        self.cfg = cfg
+        self.params = params
+        self.ocfg = ocfg
+        self.ecfg = ocfg.engine
+        self.store = (GlobalKVStore(block_size=self.ecfg.block_size)
+                      if ocfg.global_store else None)
+        self.router = _make_router(ocfg.router)
+        self.members: List[_Member] = []
+        for i in range(ocfg.n_prefill):
+            m = _Member(f"prefill{i}", ROLE_PREFILL)
+            m.prefill = self._new_prefill(m.name)
+            self.members.append(m)
+        for i in range(ocfg.n_decode):
+            m = _Member(f"decode{i}", ROLE_DECODE)
+            m.decode = DecodeEngine(cfg, params, self.ecfg, name=m.name)
+            self.members.append(m)
+        self._by_name = {m.name: m for m in self.members}
+        self.controller = (MigrationController(ocfg.controller,
+                                               self._migration_cost)
+                           if ocfg.migration else None)
+        self.pending: List[Request] = []      # submitted, not yet routed
+        self.metrics = Metrics()
+        self.migration_log: List[MigrationAction] = []
+        self.util_trace: List[Dict[str, float]] = []
+        self._step_i = 0
+        self._t0: Optional[float] = None
+
+    # -- fleet views -----------------------------------------------------
+    def _new_prefill(self, name: str) -> PrefillEngine:
+        store = self.store if self.store is not None else \
+            GlobalKVStore(block_size=self.ecfg.block_size)
+        return PrefillEngine(self.cfg, self.params, self.ecfg, store,
+                             name=name)
+
+    def prefill_members(self) -> List[_Member]:
+        return [m for m in self.members if m.role == ROLE_PREFILL]
+
+    def decode_members(self) -> List[_Member]:
+        return [m for m in self.members if m.role == ROLE_DECODE]
+
+    @property
+    def fleet(self) -> Dict[str, str]:
+        return {m.name: m.role for m in self.members}
+
+    def in_flight(self) -> int:
+        return (len(self.pending)
+                + sum(len(m.prefill.queue) for m in self.prefill_members())
+                + sum(m.decode.active for m in self.decode_members()))
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        return time.monotonic() - self._t0
+
+    # -- submission / routing --------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Accept a request; arrival is re-stamped to orchestrator time so
+        live TTFT/E2E metrics are well defined."""
+        req.arrival = self._now()
+        self.pending.append(req)
+
+    def _prefix_key(self, req: Request) -> Optional[bytes]:
+        return leading_block_key(req.prompt, self.ecfg.block_size)
+
+    def _route_pending(self) -> None:
+        """Algorithm 2 over the central queue: dispatch every pending
+        request onto a prefill member's queue using live load snapshots."""
+        if not self.pending:
+            return
+        members = self.prefill_members()
+        loads = live_instance_loads([m.prefill for m in members])
+        budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
+        infos = [RequestInfo(r.rid, r.prompt_len,
+                             est_load=min(r.prompt_len / budget, 1.0),
+                             prefix_key=self._prefix_key(r))
+                 for r in self.pending]
+        plan = self.router.dispatch(infos, loads)
+        for req in self.pending:
+            self._by_name[plan[req.rid]].prefill.enqueue(req)
+        self.pending = []
+
+    # -- one orchestration tick ------------------------------------------
+    def step(self) -> List[Request]:
+        """Route → prefill + hand-off → decode → control.  Returns the
+        requests that finished during this tick."""
+        now = self._now()
+        self._route_pending()
+        # prefill is admission-controlled by free decode slots: never
+        # produce KV that has nowhere to land
+        free = sum(m.decode.free_slots for m in self.decode_members())
+        for m in self.prefill_members():
+            if free <= 0:
+                break
+            n = min(self.ocfg.prefill_chunk, free)
+            before_tok = m.prefill.tokens_prefilled
+            before_n = m.prefill.n_prefilled
+            for req, st, logits in m.prefill.run_queued(n):
+                req.t_prefill_start = req.t_prefill_start or now
+                req.advance(Phase.TRANSFER)
+                tgt = min((d for d in self.decode_members()
+                           if d.decode.free_slots > 0),
+                          key=lambda d: (d.decode.active, d.decode.kv_tokens))
+                tgt.decode.insert(req, st, int(jnp.argmax(logits)))
+                req.t_first_token = self._now()
+                free -= 1
+            # counters accumulate on the member (engines don't survive
+            # re-rolls), fed by engine deltas — one source of truth
+            m.tokens_prefilled += m.prefill.tokens_prefilled - before_tok
+            m.n_prefilled += m.prefill.n_prefilled - before_n
+        finished: List[Request] = []
+        for m in self.decode_members():
+            before = m.decode.tokens_decoded
+            for req, _slot in m.decode.step():
+                req.t_done = self._now()
+                self.metrics.record(req)
+                finished.append(req)
+            m.tokens_decoded += m.decode.tokens_decoded - before
+        self._step_i += 1
+        if self.controller is not None and \
+                self._step_i % self.ocfg.control_interval == 0:
+            self._control()
+        return finished
+
+    def run(self, reqs: Sequence[Request], max_steps: int = 100_000) -> dict:
+        """Drive ``reqs`` to completion; returns the summary dict."""
+        for r in sorted(reqs, key=lambda r: r.arrival):
+            self.submit(r)
+        target = self.metrics.n_requests + len(reqs)
+        for _ in range(max_steps):
+            self.step()
+            if self.metrics.n_requests >= target:
+                break
+            if self.in_flight() == 0:
+                raise RuntimeError("orchestrator lost requests: nothing in "
+                                   f"flight but only {self.metrics.n_requests}"
+                                   f"/{target} done")
+        else:
+            raise RuntimeError(f"not done after {max_steps} steps")
+        return self.summary()
+
+    # -- Algorithm 1: control cycle --------------------------------------
+    def _device_loads(self) -> List[DeviceLoad]:
+        out = []
+        for m in self.members:
+            r = m.load_report()
+            out.append(DeviceLoad(
+                device=m.name, compute_frac=r.compute_frac,
+                memory_frac=r.memory_frac, supports_layer=True,
+                supports_attention=(m.role == ROLE_DECODE)))
+        return out
+
+    def _control(self) -> List[MigrationAction]:
+        loads = self._device_loads()
+        self.util_trace.append({d.device: d.utilization for d in loads})
+        acts = self.controller.plan(loads)
+        return [a for a in acts if self.apply_action(a)]
+
+    def _can_reroll(self, member: _Member, new_role: str) -> bool:
+        if member.role == new_role:
+            return False
+        if member.role == ROLE_PREFILL and \
+                len(self.prefill_members()) <= self.ocfg.min_prefill:
+            return False
+        if member.role == ROLE_DECODE:
+            if len(self.decode_members()) <= self.ocfg.min_decode:
+                return False
+            # resident KV must fit on the remaining decode peers
+            spare = sum(d.decode.free_slots for d in self.decode_members()
+                        if d is not member)
+            if member.decode.active > spare:
+                return False
+        return True
+
+    def _migration_cost(self, kind: MigrationKind, d_o: DeviceLoad,
+                        d_u: DeviceLoad, amount: int):
+        """Benefit/cost hook for the controller, over live fleet state.
+
+        Benefit is the utilization-gap reduction a feasible action buys;
+        cost is the Eq. 4/11 analytical transfer time on ``ocfg.hw``."""
+        src = self._by_name[d_o.device]
+        dst = self._by_name[d_u.device]
+        gap = d_o.utilization - d_u.utilization
+        if kind == MigrationKind.LAYER:
+            kv = dst.decode.kv_tokens if dst.role == ROLE_DECODE else 0
+            cost = max(A.layer_migration_time(self.cfg, self.cfg.n_layers,
+                                              kv_tokens=kv, hw=self.ocfg.hw),
+                       1e-6)
+            if not self._can_reroll(dst, src.role):
+                return 0.0, cost
+            return gap / 2.0, cost
+        # KV_HEADS: rebalance in-flight decode KV between two decoders
+        cost = max(A.attention_migration_time(
+            self.cfg, amount,
+            kv_tokens=src.decode.kv_tokens if src.role == ROLE_DECODE else 0,
+            hw=self.ocfg.hw), 1e-6)
+        if (src.role != ROLE_DECODE or dst.role != ROLE_DECODE
+                or src.decode.active <= dst.decode.active + 1
+                or dst.decode.free_slots <= 0):
+            return 0.0, cost
+        return gap / 4.0, cost
+
+    # -- action execution -------------------------------------------------
+    def apply_action(self, act: MigrationAction) -> bool:
+        """Execute one controller action against the live fleet.  Public so
+        hosts/tests can force a migration.  Returns True if applied."""
+        src = self._by_name.get(act.src)
+        dst = self._by_name.get(act.dst)
+        if src is None or dst is None:
+            return False
+        if act.kind == MigrationKind.LAYER:
+            ok = self._reroll(dst, src.role)
+        else:
+            ok = self._rebalance_decode(src, dst)
+        if ok:
+            self.migration_log.append(act)
+        return ok
+
+    def _reroll(self, member: _Member, new_role: str) -> bool:
+        """Fig. 3 executable: repurpose ``member`` into ``new_role``."""
+        if not self._can_reroll(member, new_role):
+            return False
+        if new_role == ROLE_DECODE:
+            # prefill -> decode: queued (unstarted) requests go back to the
+            # central queue; Algorithm 2 re-routes them next step
+            self.pending = list(member.prefill.queue) + self.pending
+            member.prefill.queue.clear()
+            member.prefill = None
+            member.decode = DecodeEngine(self.cfg, self.params, self.ecfg,
+                                         name=member.name)
+        else:
+            # decode -> prefill: evacuate resident KV to decode peers first
+            # (the migrated layers' serving state moves with them)
+            for req, st, tok in member.decode.drain():
+                tgt = min((d for d in self.decode_members()
+                           if d is not member and d.decode.free_slots > 0),
+                          key=lambda d: d.decode.active)
+                tgt.decode.adopt(req, st, tok)
+            member.decode = None
+            member.prefill = self._new_prefill(member.name)
+        member.role = new_role
+        member.rerolled = True
+        return True
+
+    def _rebalance_decode(self, src: _Member, dst: _Member) -> bool:
+        """Attention-level migration: move half the slot excess src→dst."""
+        if src.role != ROLE_DECODE or dst.role != ROLE_DECODE:
+            return False
+        n = min((src.decode.active - dst.decode.active) // 2,
+                dst.decode.free_slots)
+        if n <= 0:
+            return False
+        moved = 0
+        for slot, s in enumerate(src.decode.slots):
+            if moved >= n:
+                break
+            if s is None:
+                continue
+            req, st, tok = src.decode.extract_slot(slot)
+            dst.decode.adopt(req, st, tok)
+            moved += 1
+        return moved > 0
+
+    # -- reporting ---------------------------------------------------------
+    def summary(self) -> dict:
+        s = self.metrics.summary()
+        s["router"] = self.ocfg.router
+        s["global_store"] = self.ocfg.global_store
+        s["migrations"] = len(self.migration_log)
+        s["fleet"] = self.fleet
+        # routing-imbalance metric (Fig. 2a): only members that held the
+        # prefill role for the whole run — re-rolled members' counters
+        # reflect migration, not router quality
+        pw = [m.tokens_prefilled for m in self.members
+              if m.role == ROLE_PREFILL and not m.rerolled]
+        s["prefill_token_skew"] = ((max(pw) - min(pw)) / max(max(pw), 1)
+                                   if pw else 0.0)
+        if self.store is not None:
+            s["store_hit_rate"] = self.store.stats.hit_rate
+            s["store_entries"] = len(self.store)
+        else:
+            stores = [m.prefill.store for m in self.prefill_members()
+                      if m.prefill.store is not None]
+            hits = sum(st.stats.hit_blocks for st in stores)
+            tot = hits + sum(st.stats.miss_blocks for st in stores)
+            s["store_hit_rate"] = hits / tot if tot else 0.0
+            s["store_entries"] = sum(len(st) for st in stores)
+        return s

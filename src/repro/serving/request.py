@@ -10,10 +10,16 @@ import numpy as np
 
 class Phase(str, enum.Enum):
     QUEUED = "queued"
+    ROUTED = "routed"           # assigned to a prefill instance
     PREFILL = "prefill"
     TRANSFER = "transfer"       # KV hand-off prefill -> decode
     DECODE = "decode"
     DONE = "done"
+
+
+# lifecycle order; requests only ever move forward (skips allowed — e.g. a
+# standalone engine run goes QUEUED -> PREFILL without a routing step)
+_PHASE_ORDER = {p: i for i, p in enumerate(Phase)}
 
 
 @dataclasses.dataclass
@@ -36,6 +42,14 @@ class Request:
     t_prefill_start: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+
+    def advance(self, phase: Phase) -> None:
+        """Move the lifecycle forward; backwards transitions are bugs."""
+        if _PHASE_ORDER[phase] < _PHASE_ORDER[self.phase]:
+            raise ValueError(
+                f"request {self.rid}: illegal phase transition "
+                f"{self.phase.value} -> {phase.value}")
+        self.phase = phase
 
     @property
     def prompt_len(self) -> int:

@@ -66,7 +66,7 @@ def test_tiny_model_replicates():
 def test_cache_seq_sharded_over_model():
     p = _policy("minitron-8b")
     spec = p.cache_spec("groups/0/k", (32, 128, 32768, 8, 128))
-    assert spec == P(None, ("data",), "model", None, None)
+    assert spec == P(None, "data", "model", None, None)
 
 
 def test_long_context_shards_sequence_over_everything():
