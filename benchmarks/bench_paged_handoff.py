@@ -1,0 +1,128 @@
+"""Hand-off / migration cost A/B: dense row surgery vs block-table moves.
+
+The dense path moves a request by rewriting the *whole* batched cache
+(`insert_request_state` / `extract_request_state` rebuild every leaf), so
+its cost scales with total cache size.  The paged path copies only the
+request's pages through the block table, so its cost scales with the
+request's blocks.  Two sweeps make that visible:
+
+* fixed request length, growing cache (``max_batch``) — dense grows,
+  paged stays flat;
+* fixed cache, growing request length — paged grows with the request.
+
+Also prints the Eq. 4/11 per-layer overlapped-vs-serial transfer estimate
+for the moved payload and the prefill compile-shape report (the padded
+power-of-two bucket discipline).
+
+    PYTHONPATH=src python -m benchmarks.run --only paged_handoff
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytical as A
+from repro.models import kvcache as KC
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.serving.engine import EngineConfig, PrefillEngine
+from repro.serving.request import Request
+
+CFG = ModelConfig(name="bench", family=Family.DENSE, n_layers=4, d_model=128,
+                  n_heads=8, n_kv_heads=4, d_ff=256, vocab_size=256)
+MAX_LEN = 256
+BS = 16
+N_ITER = 30
+
+
+def _bench(fn) -> float:
+    jax.block_until_ready(fn())                  # warmup + shape compile
+    t0 = time.perf_counter()
+    for _ in range(N_ITER):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / N_ITER * 1e3
+
+
+def _dense_move_ms(max_batch: int, req_len: int) -> float:
+    """The pre-paged runtime's hand-off: un-jitted whole-cache pytree
+    surgery — every leaf of the batched cache is rebuilt per move."""
+    box = {"c": T.init_cache(CFG, max_batch, MAX_LEN)}
+
+    def move():
+        st = KC.extract_request_state(box["c"], 0)
+        box["c"] = KC.insert_request_state(box["c"], 1, st)
+        return box["c"]
+
+    return _bench(move)
+
+
+def _paged_move_ms(max_batch: int, req_len: int) -> float:
+    """The paged runtime's hand-off: jitted gather of the request's pages +
+    donated scatter into the destination slot's blocks — the exact shared
+    movers DecodeEngine.extract_slot/adopt run."""
+    from repro.serving.engine import _page_gather, _page_scatter
+    pcache = KC.dense_to_paged(T.init_cache(CFG, max_batch, MAX_LEN), BS)
+    n = -(-req_len // BS)
+    tables = np.asarray(pcache["block_tables"])
+    src = jnp.asarray(tables[0][:n], jnp.int32)
+    dst = jnp.asarray(tables[1][:n], jnp.int32)
+    box = {"c": pcache}
+
+    def move():
+        ps = _page_gather(box["c"], src, 0, req_len, block_size=BS)
+        box["c"] = _page_scatter(box["c"], ps, dst, 1, block_size=BS)
+        return box["c"]
+
+    return _bench(move)
+
+
+def main() -> None:
+    print("paged_handoff,mode,max_batch,req_len,ms_per_move")
+    for max_batch in (4, 8, 16):
+        for mode, fn in (("dense", _dense_move_ms), ("paged", _paged_move_ms)):
+            ms = fn(max_batch, 64)
+            print(f"paged_handoff,{mode},{max_batch},64,{ms:.3f}")
+    for req_len in (16, 64, 192):
+        for mode, fn in (("dense", _dense_move_ms), ("paged", _paged_move_ms)):
+            ms = fn(8, req_len)
+            print(f"paged_handoff,{mode},8,{req_len},{ms:.3f}")
+
+    # Eq. 4/11: the moved payload's ordered per-layer schedule, serial vs
+    # layer-wise overlapped against the destination's per-layer compute —
+    # at the paper's own evaluation scale (llama-13b, 1k-token request)
+    from repro.configs import llama_13b
+    big = llama_13b.CONFIG
+    seq = 1000
+    per_layer = big.kv_bytes_per_token_per_layer() * seq
+    nbytes = [per_layer] * big.n_layers
+    t_layer = A.decode_time_per_token(big, seq, A.TPU_V5E) / big.n_layers
+    ser = A.serial_schedule_time(nbytes, A.TPU_V5E.net_bw, t_layer)
+    ovl = A.overlapped_schedule_time(nbytes, A.TPU_V5E.net_bw, t_layer)
+    print("paged_handoff_schedule,layers,serial_ms,overlap_ms,hidden_frac")
+    print(f"paged_handoff_schedule,{len(nbytes)},{ser * 1e3:.4f},"
+          f"{ovl * 1e3:.4f},{1 - ovl / ser:.3f}")
+
+    # compile-shape discipline over a mixed-length workload
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    pe = PrefillEngine(CFG, params,
+                       EngineConfig(max_len=MAX_LEN, max_batch=4,
+                                    block_size=BS), None)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=0.0,
+                    prompt=rng.integers(0, 256, int(rng.integers(8, 120)),
+                                        dtype=np.int32), max_new_tokens=1)
+            for i in range(12)]
+    pe.run_batch(reqs)
+    rep = pe.compile_report()
+    print("paged_prefill_shapes,n_shapes,bound")
+    print(f"paged_prefill_shapes,{rep['n_shapes']},{rep['bound']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,14 +11,15 @@ import sys
 import time
 
 from . import (bench_attention, bench_migration, bench_orchestrator,
-               bench_pipeline, bench_scheduler, bench_throughput,
-               bench_utilization)
+               bench_paged_handoff, bench_pipeline, bench_scheduler,
+               bench_throughput, bench_utilization)
 
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
     "migration": bench_migration,     # Eq. 4 / Eq. 11
     "scheduler": bench_scheduler,     # Fig. 2a (simulator)
     "orchestrator": bench_orchestrator,  # Fig. 2a on live engines
+    "paged_handoff": bench_paged_handoff,  # block moves vs row surgery
     "utilization": bench_utilization, # Fig. 2b
     "attention": bench_attention,     # kernels
     "throughput": bench_throughput,   # Fig. 8-11

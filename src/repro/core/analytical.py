@@ -8,7 +8,7 @@ benefit/cost evaluation, and (c) the roofline report's MODEL_FLOPS terms.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 from ..models.config import ModelConfig
 
@@ -161,6 +161,33 @@ def attention_migration_time(cfg: ModelConfig, n_heads: int, kv_tokens: int,
 def migration_cost(n_modules: int, t_transfer: float, t_sync: float = 2e-3,
                    t_realloc: float = 1e-3) -> float:
     return n_modules * (t_transfer + t_sync + t_realloc)   # Eq. 28
+
+
+# ---------------------------------------------------------------------------
+# Ordered per-layer transfer schedules (paged hand-off / migration payloads)
+# ---------------------------------------------------------------------------
+
+def serial_schedule_time(layer_bytes: "Sequence[int]", bandwidth: float,
+                         t_layer_compute: float = 0.0,
+                         t_sync: float = 2e-3) -> float:
+    """Eq. 4/11 without overlap: every layer's pages transfer, then its
+    compute runs, strictly in sequence."""
+    return (sum(layer_bytes) / bandwidth
+            + len(layer_bytes) * t_layer_compute + t_sync)
+
+
+def overlapped_schedule_time(layer_bytes: "Sequence[int]", bandwidth: float,
+                             t_layer_compute: float = 0.0,
+                             t_sync: float = 2e-3) -> float:
+    """Eq. 4/11 with §4.2 layer-wise overlap: layer *i*'s pages stream
+    while layer *i-1* computes, so a layer only stalls when its transfer
+    outlives the compute in front of it (the two-stage pipeline makespan
+    of Eq. 12–17 over a non-uniform schedule)."""
+    recv = done = 0.0
+    for nbytes in layer_bytes:
+        recv += nbytes / bandwidth
+        done = max(done, recv) + t_layer_compute
+    return done + t_sync
 
 
 # ---------------------------------------------------------------------------

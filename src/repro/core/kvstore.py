@@ -86,13 +86,14 @@ class StoreStats:
 
 
 class _Entry:
-    __slots__ = ("payload", "nbytes", "tier", "n_tokens")
+    __slots__ = ("payload", "nbytes", "tier", "n_tokens", "sched")
 
     def __init__(self, payload: Any, nbytes: int, tier: int, n_tokens: int):
         self.payload = payload
         self.nbytes = nbytes
         self.tier = tier
         self.n_tokens = n_tokens
+        self.sched = None      # memoized per-layer byte schedule (or ())
 
 
 class GlobalKVStore:
@@ -130,19 +131,62 @@ class GlobalKVStore:
             self.stats.miss_blocks += len(keys) - len(matched)
         return len(matched) * self.block_size, matched
 
-    def fetch(self, keys: Sequence[bytes]) -> Tuple[List[Any], float]:
+    def fetch(self, keys: Sequence[bytes],
+              t_layer_compute: Optional[float] = None
+              ) -> Tuple[List[Any], float]:
         """Payloads for ``keys`` + modelled fetch latency (s) given each
-        block's current tier (Eq. 13: S_kv·L/B per tier)."""
+        block's current tier (Eq. 13: S_kv·L/B per tier).
+
+        With ``t_layer_compute`` the fetch is charged as the §4.2
+        layer-wise overlapped transmission instead: each block's bytes are
+        split over its payload's ordered per-layer schedule
+        (``models.kvcache.layer_transfer_schedule``) and only the
+        non-overlapped residual — the pipeline makespan minus the compute
+        that runs regardless (Eq. 12–17) — is billed, so a fetch hidden
+        under per-layer compute costs ~nothing."""
         payloads, latency = [], 0.0
+        per_layer: Dict[int, float] = {}
         for k in keys:
             e = self._entries[k]
             payloads.append(e.payload)
             bw = self.tiers[e.tier].bandwidth_gbps * 1e9
-            latency += e.nbytes / bw
+            sched = (self._layer_schedule(e)
+                     if t_layer_compute is not None else None)
+            if sched:
+                # seconds per layer: the block's accounted bytes, split
+                # over the per-layer schedule at this block's tier bw
+                tot = sum(b for _, b in sched) or 1
+                for layer, nb in sched:
+                    per_layer[layer] = per_layer.get(layer, 0.0) \
+                        + e.nbytes * (nb / tot) / bw
+            else:
+                latency += e.nbytes / bw
             self.stats.bytes_fetched += e.nbytes
             if e.tier != 0:                          # promote to HBM tier
                 self._move_tier(k, e, 0)
+        if per_layer:
+            from ..core.analytical import overlapped_schedule_time
+            seconds = [per_layer[i] for i in sorted(per_layer)]
+            # residual stall: makespan minus the compute baseline (the
+            # schedule is already in seconds: unit bandwidth)
+            t = t_layer_compute or 0.0
+            latency += max(0.0, overlapped_schedule_time(
+                seconds, 1.0, t, t_sync=0.0) - len(seconds) * t)
         return payloads, latency
+
+    @staticmethod
+    def _layer_schedule(e: _Entry):
+        """Memoized ordered per-layer byte schedule of an entry's payload;
+        () for opaque (non request-state) payloads."""
+        if e.sched is None:
+            e.sched = ()
+            if isinstance(e.payload, dict) and "groups" in e.payload:
+                from ..models.kvcache import layer_transfer_schedule
+                try:
+                    e.sched = tuple(layer_transfer_schedule(e.payload))
+                except Exception:
+                    pass
+        return e.sched
 
     # -- insert ----------------------------------------------------------
     def insert(self, tokens: Sequence[int], payloads: Sequence[Any],

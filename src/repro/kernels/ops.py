@@ -81,6 +81,32 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           pos_k: jax.Array, pos_q: jax.Array, *,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_k: int = 512,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Split-KV decode over a block-table-gathered KV view.
+
+    The caller has already gathered the row's pages into the linear view
+    (models.layers paged decode path); this wrapper derives the causal
+    (+window) validity mask from positions (-1 = hole/unassigned page) and
+    runs the split-KV kernel — the KV-block grid axis of the kernel IS the
+    page axis, so partial (o, l, m) triples are per-page and migration can
+    ship them instead of raw KV.
+
+    q: (B, H, D); k, v: (B, L, KV, D); pos_k: (B, L); pos_q: (B,)."""
+    pq = pos_q[:, None]
+    valid = (pos_k >= 0) & (pos_k <= pq)
+    if window is not None:
+        valid &= pos_k > pq - window
+    if scale is not None and scale != 1.0 / math.sqrt(q.shape[-1]):
+        q = q * (scale * math.sqrt(q.shape[-1]))
+    return decode_attention(q, k, v, valid, block_k=block_k,
+                            interpret=interpret)
+
+
 def decode_partials(q: jax.Array, k: jax.Array, v: jax.Array,
                     valid: jax.Array, *, block_k: int = 512,
                     interpret: Optional[bool] = None):

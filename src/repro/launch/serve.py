@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -58,12 +59,12 @@ def main() -> None:
     frames = (jnp.zeros((1, cfg.n_frames, cfg.d_model))
               if cfg.cross_attention else None)
 
-    pending = list(reqs)
+    pending = deque(reqs)
     done = 0
     while done < len(reqs):
         # admit while slots are free (continuous batching)
         while pending and de.free_slot() is not None:
-            r = pending.pop(0)
+            r = pending.popleft()
             r.t_prefill_start = time.time() - t0
             st, logits = pe.run(r, frames=frames)
             first = int(jnp.argmax(logits))

@@ -1,30 +1,56 @@
-"""Per-request cache state manipulation.
+"""Per-request cache state manipulation — dense rows and paged blocks.
 
-These are the primitives the disaggregated runtime is built from:
+Dense primitives (the original whole-cache pytree surgery):
 
 * ``extract_request_state`` — pull one batch row's full serving state
   (KV cache slices, ring buffers, recurrent states) out of a batched cache.
-  This is the payload of the prefill→decode **KV transfer** and of
-  attention-level migration.
 * ``insert_request_state`` — write such a state into a (different) batched
-  cache at a free slot.  Prefill instance → Global KV Store → decode
-  instance round-trips are exact.
+  cache at a free slot.
 * ``slice_prefix_kv`` / ``merge_prefix_kv`` — token-range slices of the
   attention KV used by the Global KV Cache Store's block granularity.
 
-All functions are pure pytree surgery and jit-compatible.
+Paged primitives (the serving runtime's block-table layout):
+
+* ``dense_to_paged`` / ``paged_to_dense`` — exact conversion between the
+  dense batched cache ``(B, L, KV, D)`` and a **block pool**
+  ``(n_blocks, block_size, KV, D)`` plus per-slot block tables
+  ``(B, L // block_size)`` of physical block ids (-1 = unassigned).
+  Physical block 0 is a reserved scratch page that absorbs writes from
+  inactive decode rows; it is never referenced by a live table entry.
+* ``extract_paged_state`` / ``insert_paged_state`` — move ONE request
+  between pools by copying only its pages (cost ∝ the request's blocks,
+  not the cache size).  This is the prefill→decode hand-off and the
+  attention-level migration payload.
+* ``dense_state_to_paged`` / ``paged_state_to_dense`` — re-shape a single
+  request's state between the two layouts (the hand-off wire format).
+* ``layer_transfer_schedule`` — the ordered per-layer byte schedule of a
+  hand-off payload; ``core.analytical.overlapped_schedule_time`` costs it
+  with the §4.2 layer-wise transmission overlap (Eq. 4/11).
+
+Only attention KV leaves (``k``/``v``/``pos`` + int8 scales) whose cache
+length equals the stack's page length (the longest attention cache) are
+paged; ring buffers shorter than that, recurrent states and cross-attention
+KV stay slot-dense and ride along unchanged, so conversions are exact for
+every ``BlockKind``.
+
+All device-side functions are pure pytree surgery and jit-compatible.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .config import BlockKind, ModelConfig
 
 Cache = Dict[str, Any]
 RequestState = Dict[str, Any]
+
+# Attention-state leaves that live in the block pool; everything else
+# (recurrent states, cross KV) stays indexed by batch row.
+PAGED_KEYS = ("k", "v", "pos", "k_scale", "v_scale")
 
 
 def extract_request_state(cache: Cache, row: int) -> RequestState:
@@ -121,4 +147,341 @@ def merge_prefix_kv(dst: RequestState, src: RequestState,
 
 def state_num_bytes(st: RequestState) -> int:
     """Total bytes of a request state (migration cost accounting)."""
-    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(st))
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(st)
+               if hasattr(a, "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# Paged block-table layout
+# ---------------------------------------------------------------------------
+
+def page_len(cache: Cache) -> Optional[int]:
+    """The stack's page space: the longest attention-cache length (works
+    on batched caches and single-request states alike — it only reads the
+    trailing dim of "pos" leaves).  Groups whose cache is exactly this
+    long are paged; shorter ring buffers stay slot-dense (their KV is
+    bounded by the window anyway)."""
+    best = 0
+    for g in tuple(cache["groups"]) + tuple(cache["rem"]):
+        if isinstance(g, dict) and "pos" in g:
+            best = max(best, int(g["pos"].shape[-1]))
+    return best or None
+
+
+# trailing (non-batch, non-seq) dims of each pageable leaf kind
+_LEAF_TAIL = {"k": 2, "v": 2, "pos": 0, "k_scale": 1, "v_scale": 1}
+
+
+def _is_dense_paged_leaf(key: str, a: Any, batch_axis: int, plen: int) -> bool:
+    """A dense-layout cache leaf that belongs in the block pool:
+    (lead..., B, plen, tail...)."""
+    return (key in PAGED_KEYS and hasattr(a, "shape")
+            and a.ndim == batch_axis + 2 + _LEAF_TAIL[key]
+            and a.shape[batch_axis + 1] == plen)
+
+
+def _is_pool_leaf(key: str, a: Any, batch_axis: int, batch: int,
+                  block_size: int) -> bool:
+    """A pool-layout cache leaf: (lead..., n_blocks, block_size, tail...).
+    The pool always holds the scratch block, so n_blocks != batch — that is
+    what distinguishes it from a dense ring leaf whose window happens to
+    equal block_size."""
+    return (key in PAGED_KEYS and hasattr(a, "shape")
+            and a.ndim == batch_axis + 2 + _LEAF_TAIL[key]
+            and a.shape[batch_axis + 1] == block_size
+            and a.shape[batch_axis] != batch)
+
+
+def _leaf_fill(key: str):
+    return -1 if key == "pos" else 0
+
+
+def dense_to_paged(cache: Cache, block_size: int) -> Cache:
+    """Exact conversion: dense batched cache -> block pool + block tables.
+
+    Every logical block of every row gets a physical page (identity
+    mapping), so the round trip through ``paged_to_dense`` is bit-exact for
+    arbitrary cache contents.  Physical block 0 is the reserved scratch
+    page."""
+    batch = int(cache["lengths"].shape[0])
+    plen = page_len(cache)
+    if plen is None:
+        raise ValueError("cache has no attention KV to page")
+    if plen % block_size:
+        raise ValueError(f"page length {plen} not a multiple of "
+                         f"block_size {block_size}")
+    nb = plen // block_size
+    tables = (np.arange(batch * nb, dtype=np.int32).reshape(batch, nb) + 1)
+
+    def conv(g: Dict[str, Any], batch_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if _is_dense_paged_leaf(key, a, batch_axis, plen):
+                lead = a.shape[:batch_axis]
+                tail = a.shape[batch_axis + 2:]
+                pages = a.reshape(lead + (batch * nb, block_size) + tail)
+                scratch = jnp.full(lead + (1, block_size) + tail,
+                                   _leaf_fill(key), a.dtype)
+                out[key] = jnp.concatenate([scratch, pages], axis=batch_axis)
+            else:
+                out[key] = a
+        return out
+
+    return {
+        "lengths": cache["lengths"],
+        "block_tables": jnp.asarray(tables),
+        "groups": tuple(conv(g, 1) for g in cache["groups"]),
+        "rem": tuple(conv(g, 0) for g in cache["rem"]),
+    }
+
+
+def paged_to_dense(pcache: Cache, block_size: int) -> Cache:
+    """Exact inverse of ``dense_to_paged``.  Unassigned logical blocks
+    (table entry -1) materialize as canonical blanks (zeros, pos = -1)."""
+    tables = pcache["block_tables"]
+    batch, nb = tables.shape
+    plen = nb * block_size
+    safe = jnp.maximum(tables, 0)
+    live = tables >= 0
+
+    def conv(g: Dict[str, Any], batch_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if _is_pool_leaf(key, a, batch_axis, batch, block_size):
+                idx = (slice(None),) * batch_axis + (safe,)
+                gathered = a[idx]               # (..., B, nb, bs, tail)
+                lshape = ((1,) * batch_axis + (batch, nb)
+                          + (1,) * (gathered.ndim - batch_axis - 2))
+                gathered = jnp.where(live.reshape(lshape), gathered,
+                                     jnp.asarray(_leaf_fill(key), a.dtype))
+                lead = gathered.shape[:batch_axis]
+                tail = gathered.shape[batch_axis + 3:]
+                out[key] = gathered.reshape(lead + (batch, plen) + tail)
+            else:
+                out[key] = a
+        return out
+
+    return {
+        "lengths": pcache["lengths"],
+        "groups": tuple(conv(g, 1) for g in pcache["groups"]),
+        "rem": tuple(conv(g, 0) for g in pcache["rem"]),
+    }
+
+
+# -- per-request page moves (hand-off / migration payloads) -----------------
+
+def _slot_index(batch_axis: int, slot) -> Tuple:
+    return (slice(None),) * batch_axis + (slot,)
+
+
+def gather_pages(pcache: Cache, idx: jax.Array, slot, length, *,
+                 block_size: int) -> RequestState:
+    """Jit-compatible core of ``extract_paged_state``: gather the pages at
+    physical ids ``idx`` (traced (n,) int32) plus the slot-dense leaves of
+    ``slot``.  Cost ∝ n pages, never the pool."""
+    batch = int(pcache["block_tables"].shape[0])
+
+    def conv(g: Dict[str, Any], batch_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if _is_pool_leaf(key, a, batch_axis, batch, block_size):
+                out[key] = a[(slice(None),) * batch_axis + (idx,)]
+            elif isinstance(a, dict):
+                out[key] = jax.tree.map(
+                    lambda x: x[_slot_index(batch_axis, slot)], a)
+            else:
+                out[key] = a[_slot_index(batch_axis, slot)]
+        return out
+
+    return {
+        "length": jnp.asarray(length, jnp.int32),
+        "groups": tuple(conv(g, 1) for g in pcache["groups"]),
+        "rem": tuple(conv(g, 0) for g in pcache["rem"]),
+    }
+
+
+def scatter_pages(pcache: Cache, st: RequestState, idx: jax.Array, slot, *,
+                  block_size: int) -> Cache:
+    """Jit-compatible core of ``insert_paged_state``: write the state's
+    pages into physical blocks ``idx`` plus the slot-dense leaves, table
+    row and length.  Under jit with the cache donated, these are in-place
+    page writes — cost ∝ n pages, never the pool."""
+    batch = int(pcache["block_tables"].shape[0])
+    nb = int(pcache["block_tables"].shape[1])
+    n = int(idx.shape[0])
+
+    def conv(c: Dict[str, Any], s: Dict[str, Any],
+             batch_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in c.items():
+            if _is_pool_leaf(key, a, batch_axis, batch, block_size):
+                out[key] = a.at[(slice(None),) * batch_axis + (idx,)].set(
+                    s[key])
+            elif isinstance(a, dict):
+                out[key] = jax.tree.map(
+                    lambda x, y: x.at[_slot_index(batch_axis, slot)].set(y),
+                    a, s[key])
+            else:
+                out[key] = a.at[_slot_index(batch_axis, slot)].set(s[key])
+        return out
+
+    row = jnp.full((nb,), -1, jnp.int32).at[:n].set(idx.astype(jnp.int32))
+    return {
+        "lengths": pcache["lengths"].at[slot].set(st["length"]),
+        "block_tables": pcache["block_tables"].at[slot].set(row),
+        "groups": tuple(conv(c, s, 1)
+                        for c, s in zip(pcache["groups"], st["groups"])),
+        "rem": tuple(conv(c, s, 0)
+                     for c, s in zip(pcache["rem"], st["rem"])),
+    }
+
+
+def extract_paged_state(pcache: Cache, slot: int, block_size: int, *,
+                        table_row: Optional[np.ndarray] = None,
+                        length=None, gather=gather_pages) -> RequestState:
+    """One slot's state out of a paged cache: only its pages are gathered
+    (cost ∝ the request's blocks), plus its slot-dense leaves.  ``gather``
+    may be a jitted wrapper of ``gather_pages`` (the serving engines pass
+    one) — the protocol lives here either way."""
+    row = np.asarray(table_row if table_row is not None
+                     else pcache["block_tables"][slot])
+    phys = row[row >= 0]
+    st = gather(pcache, jnp.asarray(phys, jnp.int32), slot,
+                pcache["lengths"][slot] if length is None else length,
+                block_size=block_size)
+    st["n_blocks"] = int(len(phys))
+    return st
+
+
+def insert_paged_state(pcache: Cache, slot: int, st: RequestState,
+                       phys_blocks: Sequence[int], block_size: int, *,
+                       scatter=scatter_pages) -> Cache:
+    """Write a paged request state into ``slot``: per-layer page copies into
+    the given physical blocks plus slot-dense writes.  The executable form
+    of the block-table hand-off.  ``scatter`` may be a jitted (donating)
+    wrapper of ``scatter_pages``."""
+    n = int(st["n_blocks"])
+    assert len(phys_blocks) == n, (len(phys_blocks), n)
+    body = {k: v for k, v in st.items() if k != "n_blocks"}
+    return scatter(pcache, body,
+                   jnp.asarray(np.asarray(phys_blocks, np.int32)),
+                   slot, block_size=block_size)
+
+
+def reset_page_positions(pcache: Cache, phys_blocks: Sequence[int],
+                         block_size: int) -> Cache:
+    """Invalidate (pos = -1) the given physical blocks' position entries.
+    Freed blocks keep their stale K/V — harmless once masked — but stale
+    *positions* would alias a new owner's live range, so every block must
+    pass through here between owners.  Jit-compatible (``phys_blocks`` may
+    be a traced array) — the engines run it jitted with the cache donated
+    so it is an in-place write of the freed rows."""
+    idx = jnp.asarray(phys_blocks).astype(jnp.int32)
+    batch = int(pcache["block_tables"].shape[0])
+
+    def conv(g: Dict[str, Any], batch_axis: int) -> Dict[str, Any]:
+        a = g.get("pos")
+        if a is None or not _is_pool_leaf("pos", a, batch_axis, batch,
+                                          block_size):
+            return g
+        out = dict(g)
+        out["pos"] = a.at[(slice(None),) * batch_axis + (idx,)].set(-1)
+        return out
+
+    return {**pcache,
+            "groups": tuple(conv(g, 1) for g in pcache["groups"]),
+            "rem": tuple(conv(g, 0) for g in pcache["rem"])}
+
+
+# -- dense request state <-> paged request state ----------------------------
+
+def dense_state_to_paged(st: RequestState, block_size: int, *,
+                         length: Optional[int] = None) -> RequestState:
+    """Reshape a dense request state into its used pages.  Blocks beyond
+    the used prefix are dropped — they are masked (pos = -1) junk that the
+    decode engine overwrites before ever attending to it."""
+    n_tok = int(st["length"] if length is None else length)
+    plen = page_len(st)      # same "pos"-leaf rule as the cache layout
+    if plen is None:
+        raise ValueError("request state has no attention KV to page")
+    nb_slot = plen // block_size
+    n_used = min(max(-(-n_tok // block_size), 0), nb_slot)
+
+    def conv(g: Dict[str, Any], seq_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if (key in PAGED_KEYS and hasattr(a, "shape")
+                    and a.ndim == seq_axis + 1 + _LEAF_TAIL[key]
+                    and a.shape[seq_axis] == plen):
+                lead = a.shape[:seq_axis]
+                tail = a.shape[seq_axis + 1:]
+                pages = a.reshape(lead + (nb_slot, block_size) + tail)
+                out[key] = pages[(slice(None),) * seq_axis
+                                 + (slice(0, n_used),)]
+            else:
+                out[key] = a
+        return out
+
+    return {
+        "length": jnp.asarray(n_tok, jnp.int32),
+        "n_blocks": n_used,
+        "groups": tuple(conv(g, 1) for g in st["groups"]),
+        "rem": tuple(conv(g, 0) for g in st["rem"]),
+    }
+
+
+def paged_state_to_dense(ps: RequestState, block_size: int,
+                         plen: int) -> RequestState:
+    """Inverse of ``dense_state_to_paged``: pad back out to the full page
+    space with canonical blanks."""
+    nb_slot = plen // block_size
+    n = int(ps["n_blocks"])
+
+    def conv(g: Dict[str, Any], seq_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if (key in PAGED_KEYS and hasattr(a, "shape")
+                    and a.ndim == seq_axis + 2 + _LEAF_TAIL[key]
+                    and a.shape[seq_axis] == n
+                    and a.shape[seq_axis + 1] == block_size):
+                pad = [(0, 0)] * a.ndim
+                pad[seq_axis] = (0, nb_slot - n)
+                full = jnp.pad(a, pad, constant_values=_leaf_fill(key))
+                lead = full.shape[:seq_axis]
+                tail = full.shape[seq_axis + 2:]
+                out[key] = full.reshape(lead + (plen,) + tail)
+            else:
+                out[key] = a
+        return out
+
+    return {
+        "length": ps["length"],
+        "groups": tuple(conv(g, 1) for g in ps["groups"]),
+        "rem": tuple(conv(g, 0) for g in ps["rem"]),
+    }
+
+
+def layer_transfer_schedule(st: RequestState) -> List[Tuple[int, int]]:
+    """Ordered per-layer (layer_index, nbytes) transfer schedule of a
+    hand-off payload, in stack execution order (scan over repeats, pattern
+    positions within a repeat, remainder layers last).  This is the wire
+    schedule of the §4.2 layer-wise overlapped transmission; cost it with
+    ``core.analytical.overlapped_schedule_time``."""
+    sched: List[Tuple[int, int]] = []
+    groups = tuple(st["groups"])
+    n_rep = 0
+    if groups:
+        arrs = [a for a in jax.tree.leaves(groups[0]) if hasattr(a, "shape")]
+        n_rep = int(arrs[0].shape[0]) if arrs else 0
+        per_g = [sum(a.size * a.dtype.itemsize
+                     for a in jax.tree.leaves(g) if hasattr(a, "dtype"))
+                 // max(n_rep, 1) for g in groups]
+        for r in range(n_rep):
+            for gi, nbytes in enumerate(per_g):
+                sched.append((r * len(groups) + gi, nbytes))
+    base = n_rep * len(groups)
+    for i, g in enumerate(st["rem"]):
+        sched.append((base + i, sum(a.size * a.dtype.itemsize
+                                    for a in jax.tree.leaves(g)
+                                    if hasattr(a, "dtype"))))
+    return sched

@@ -222,10 +222,18 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                     prefix_aware: bool = False,
                     fresh_prefill: bool = False,
                     head_offload: int = 0,
+                    block_tables: Optional[jax.Array] = None,
+                    paged_kernel: bool = False,
                     ) -> Tuple[jax.Array, Optional[State], Optional[State]]:
     """Self attention (+ optional cross attention handled by caller).
 
-    state (when not None): {"k": (B,L,KV,D), "v": (B,L,KV,D)} ring/linear cache.
+    state (when not None): {"k": (B,L,KV,D), "v": (B,L,KV,D)} ring/linear
+    cache — or, when ``block_tables`` is given and the state's K/V live in
+    a block pool {"k": (n_blocks, bs, KV, D)}, the paged decode path: the
+    new token's K/V are scattered into the row's current page and attention
+    gathers the row's pages through the block table (``paged_kernel=True``
+    additionally routes the gathered pages through the split-KV Pallas
+    decode kernel).
     ``prefix_aware``: during prefill, additionally attend over the cache's
     existing prefix (incremental prefill on a Global-KV-Store hit).
     ``head_offload``: Fig. 4 execution — the last ``head_offload`` KV heads'
@@ -301,6 +309,51 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                 if quant:
                     k_sc = state["k_scale"].at[b_idx, write_pos].set(ks_w)
                     v_sc = state["v_scale"].at[b_idx, write_pos].set(vs_w)
+        elif block_tables is not None and cache_k.shape[0] != b:
+            # paged decode: S == 1, state leaves are block pools.  Scatter
+            # the new token into its page, then gather the row's pages into
+            # the linear (B, L, KV, D) view — identical values at every
+            # live position, so the math is bit-identical to the dense path.
+            assert head_offload == 0, "head offload + paged not combined"
+            bs_pg = cache_k.shape[1]
+            nb = block_tables.shape[1]
+            plen = nb * bs_pg
+            pos0 = positions[:, 0]
+            slot_off = pos0 % plen
+            rows = jnp.arange(b)
+            phys = block_tables[rows, slot_off // bs_pg]
+            # unassigned rows (-1) land on the reserved scratch block 0,
+            # which no live table entry references
+            wblk = jnp.maximum(phys, 0)
+            off = slot_off % bs_pg
+            if quant:
+                cache_k = cache_k.at[wblk, off].set(k_q[:, 0])
+                cache_v = cache_v.at[wblk, off].set(v_q[:, 0])
+                k_sc = state["k_scale"].at[wblk, off].set(k_s[:, 0])
+                v_sc = state["v_scale"].at[wblk, off].set(v_s[:, 0])
+            else:
+                cache_k = cache_k.at[wblk, off].set(k[:, 0])
+                cache_v = cache_v.at[wblk, off].set(v[:, 0])
+            slot_pos = slot_pos.at[wblk, off].set(pos0)
+            safe = jnp.maximum(block_tables, 0)
+            kvh, hd = cache_k.shape[-2], cache_k.shape[-1]
+            k_lin = cache_k[safe].reshape(b, plen, kvh, hd)
+            v_lin = cache_v[safe].reshape(b, plen, kvh, hd)
+            live = (block_tables >= 0)[:, :, None]
+            pos_lin = jnp.where(live, slot_pos[safe], -1).reshape(b, plen)
+            if paged_kernel and not quant and cfg.logit_soft_cap is None:
+                from ..kernels.ops import paged_decode_attention
+                o = paged_decode_attention(q[:, 0], k_lin, v_lin, pos_lin,
+                                           pos0, window=window,
+                                           scale=scale)[:, None]
+            else:
+                o = attend(q, k_lin, v_lin, positions, pos_lin,
+                           window=window, scale=scale,
+                           soft_cap=cfg.logit_soft_cap,
+                           k_scale=(k_sc[safe].reshape(b, plen, kvh)
+                                    if quant else None),
+                           v_scale=(v_sc[safe].reshape(b, plen, kvh)
+                                    if quant else None))
         else:  # decode: S == 1
             write_pos = positions % cache_len
             if quant:

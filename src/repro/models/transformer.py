@@ -156,6 +156,47 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     block_size: int, dtype=jnp.float32) -> Cache:
+    """Blank serving cache in the paged block-pool layout (models.kvcache):
+    pool leaves are built directly at pool shape — no dense intermediate —
+    with all block tables empty (-1) and physical block 0 reserved as the
+    scratch page."""
+    from . import kvcache as KC
+    pat, n_rep, rem = _group_shapes(cfg)
+    protos = {kind: _block_state(cfg, kind, 1, max_len, dtype)
+              for kind in set(pat)}
+    plen = max((int(p["pos"].shape[-1]) for p in protos.values()
+                if "pos" in p), default=0)
+    if not plen or plen % block_size:
+        raise ValueError(f"stack not pageable at block_size {block_size} "
+                         f"(page length {plen})")
+    nb = plen // block_size
+    n_phys = 1 + batch * nb
+
+    def build(kind: BlockKind) -> Dict[str, Any]:
+        out = {}
+        for key, a in _block_state(cfg, kind, batch, max_len, dtype).items():
+            if KC._is_dense_paged_leaf(key, a, 0, plen):
+                out[key] = jnp.full((n_phys, block_size) + a.shape[2:],
+                                    KC._leaf_fill(key), a.dtype)
+            else:
+                out[key] = a
+        return out
+
+    groups = []
+    for kind in pat:
+        st = build(kind)
+        groups.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape).copy(), st))
+    return {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "block_tables": jnp.full((batch, nb), -1, jnp.int32),
+        "groups": tuple(groups),
+        "rem": tuple(build(pat[i]) for i in range(rem)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Block application
 # ---------------------------------------------------------------------------
@@ -164,6 +205,7 @@ def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Params, x: jax.Array,
                  *, positions, state, mode, frames, moe_impl: str,
                  moe_cf=None, moe_mesh=None, prefix_aware: bool = False,
                  fresh_prefill: bool = False, head_offload: int = 0,
+                 block_tables=None, paged_kernel: bool = False,
                  ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (x, new_state, router_load)."""
     p = Q.dequant_tree(p, x.dtype)      # no-op unless weights are int8
@@ -184,7 +226,8 @@ def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Params, x: jax.Array,
             mode=mode, window=window, frames=frames,
             cross_p=p.get("cross"), cross_state=cross_state,
             prefix_aware=prefix_aware, fresh_prefill=fresh_prefill,
-            head_offload=head_offload)
+            head_offload=head_offload, block_tables=block_tables,
+            paged_kernel=paged_kernel)
         x = x + y
         new_state = None
         if state is not None:
@@ -236,14 +279,26 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
           act_spec=None,
           param_hook=None,
           logits_slice: str = "all",
+          logits_at: Optional[jax.Array] = None,
+          paged_kernel: bool = False,
           ) -> Tuple[jax.Array, Optional[Cache], Dict[str, jax.Array]]:
     """Run the stack.
 
     tokens: (B, S) int32.  mode: train | prefill | decode.
     logits_slice: "all" -> (B,S,V); "last" -> (B,V) (serving fast path).
+    logits_at: optional (B,) per-row position into S for the "last" slice —
+    the padded-bucket prefill path reads each row's true last token.
+    A cache carrying "block_tables" is a paged block-pool cache
+    (models.kvcache): decode gathers KV pages through the tables and
+    scatters the new token into its page (paged_kernel=True routes the
+    gathered pages through the split-KV Pallas kernel).
     """
     pat, n_rep, rem = _group_shapes(cfg)
     b, s = tokens.shape
+    block_tables = None
+    if cache is not None and "block_tables" in cache:
+        assert mode == "decode", "paged caches serve the decode path only"
+        block_tables = cache["block_tables"]
     if cache is not None:
         lengths = cache["lengths"]
         positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
@@ -275,7 +330,8 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
                 cfg, kind, layer_params[g], x, positions=positions,
                 state=st, mode=mode, frames=frames, moe_impl=moe_impl,
                 moe_cf=moe_cf, moe_mesh=moe_mesh, prefix_aware=prefix_aware,
-                fresh_prefill=fresh_prefill, head_offload=head_offload)
+                fresh_prefill=fresh_prefill, head_offload=head_offload,
+                block_tables=block_tables, paged_kernel=paged_kernel)
             new_states.append(ns if ns is not None else {})
             load_acc = load_acc + rl
         if act_spec is not None:
@@ -318,13 +374,15 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             cfg, pat[i], params["rem"][i], x, positions=positions,
             state=st, mode=mode, frames=frames, moe_impl=moe_impl,
             moe_cf=moe_cf, moe_mesh=moe_mesh, prefix_aware=prefix_aware,
-            fresh_prefill=fresh_prefill, head_offload=head_offload)
+            fresh_prefill=fresh_prefill, head_offload=head_offload,
+            block_tables=block_tables, paged_kernel=paged_kernel)
         new_rem_states.append(ns if ns is not None else {})
         loads.append(rl)
 
     x = L.rms_norm(x, params["out_norm"], cfg.rms_eps)
     if logits_slice == "last":
-        x = x[:, -1, :]
+        x = x[:, -1, :] if logits_at is None \
+            else x[jnp.arange(b), logits_at, :]
     if cfg.tie_embeddings:
         logits = jnp.einsum("...d,vd->...v", x,
                             Q.dequant(params["embed"], compute_dtype))
@@ -339,6 +397,8 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             "groups": new_group_states,
             "rem": tuple(new_rem_states),
         }
+        if block_tables is not None:
+            new_cache["block_tables"] = block_tables
     aux = {"router_load": sum(loads) / max(cfg.n_layers, 1)}
     return logits, new_cache, aux
 

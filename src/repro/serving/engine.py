@@ -1,18 +1,27 @@
-"""Live serving engines over the real JAX model.
+"""Live serving engines over the real JAX model, on the paged KV runtime.
 
 ``PrefillEngine`` — batched prefill with Global-KV-Store integration:
 longest-prefix match, KV fetch + incremental (prefix-aware) prefill of the
 suffix only, and insertion of freshly produced full blocks back into the
 store.  This is the executable form of Fig. 5.  Requests are bucketed by
-(suffix length, prefix-hit) so every forward is a dense ``(G, S)`` batch;
-rows inside a bucket may carry *different* cached-prefix lengths — per-row
-cache lengths drive positions and masks, so the batch is exact.
+(padded suffix length, prefix-hit) so every forward is a dense ``(G, S)``
+batch; rows inside a bucket may carry *different* cached-prefix lengths —
+per-row cache lengths drive positions and masks, so the batch is exact.
+Suffixes (and row counts) are padded to power-of-two buckets capped at
+``max_len`` so the set of compiled XLA shapes is bounded and reported
+(``compile_report``); padded junk lands at masked future positions the
+decoder overwrites before ever attending to them.
 
-``DecodeEngine`` — slot-based continuous batching decoder: a fixed-capacity
-batched cache; prefill output states are *inserted* into free slots (the
-prefill→decode KV transfer of PD disaggregation) and every step decodes all
-active slots.  Slots can also be *extracted* mid-flight — the payload of
-attention-level migration and of role re-rolls (serving/orchestrator.py).
+``DecodeEngine`` — slot-based continuous batching over a **paged block
+pool** (models.kvcache): per-slot block tables index pages of
+``block_size`` tokens, decode gathers pages through the tables inside the
+jitted step, and prefill output states are *inserted* by copying only
+their pages into freshly allocated blocks (the prefill→decode KV transfer
+of PD disaggregation).  Slots can also be *extracted* mid-flight as page
+payloads — the attention-level migration / role re-roll unit whose cost
+scales with the request's blocks, not the cache size.  Architectures with
+no pageable attention KV (pure recurrent stacks, windows that don't divide
+into blocks) fall back to the dense row layout transparently.
 
 Both report ``core.scheduling.LoadReport`` snapshots so the Algorithm 1/2
 policies run over live engines exactly as they run over the simulator, and
@@ -23,12 +32,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import analytical as A
 from ..core.kvstore import GlobalKVStore, chain_hashes
 from ..core.scheduling import LoadReport
 from ..models import kvcache as KC
@@ -43,18 +54,69 @@ class EngineConfig:
     max_batch: int = 8
     block_size: int = 16          # must match the store's block size
     greedy: bool = True
+    decode_kernel: bool = False   # paged decode via the split-KV Pallas kernel
+    # when set, store fetches are billed as the §4.2 layer-wise overlapped
+    # transmission against this hardware's per-layer prefill compute
+    hw: Optional[A.HardwareProfile] = None
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _attn_cache_lens(cfg: ModelConfig, max_len: int) -> List[int]:
+    """Attention cache lengths probed from batch-1 layer-state protos, so
+    ``transformer._block_state`` stays the single source of truth for
+    per-kind window rules."""
+    lens = []
+    for kind in set(cfg.blocks()):
+        st = T._block_state(cfg, kind, 1, max_len, jnp.float32)
+        if "pos" in st:
+            lens.append(int(st["pos"].shape[-1]))
+    return lens
+
+
+def serving_page_len(cfg: ModelConfig, max_len: int) -> Optional[int]:
+    """The paged runtime's page space for this arch at this cache size, or
+    None when the stack holds no attention KV."""
+    lens = _attn_cache_lens(cfg, max_len)
+    return max(lens) if lens else None
+
+
+def _paged_page_len(cfg: ModelConfig, ecfg: EngineConfig) -> Optional[int]:
+    """Page length if the serving cache can be paged, else None (dense
+    fallback).  Shared by both engines so hand-off wire formats agree."""
+    plen = serving_page_len(cfg, ecfg.max_len)
+    if plen is None or plen % ecfg.block_size:
+        return None
+    return plen
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_apply(cfg: ModelConfig, mode: str, prefix_aware: bool):
+def _jit_apply(cfg: ModelConfig, mode: str, prefix_aware: bool,
+               paged_kernel: bool = False):
     """Jitted forward shared across engine instances.
 
     Keyed on the (hashable, frozen) ModelConfig so re-rolling an instance
     between the prefill and decode roles reuses compiled executables instead
-    of paying a fresh trace+compile per engine object."""
+    of paying a fresh trace+compile per engine object.  The cache is
+    donated: decode updates its pools in place instead of copying them
+    every step (callers never reuse the cache they pass in)."""
     return jax.jit(functools.partial(T.apply, cfg, mode=mode,
                                      logits_slice="last",
-                                     prefix_aware=prefix_aware))
+                                     prefix_aware=prefix_aware,
+                                     paged_kernel=paged_kernel),
+                   donate_argnames=("cache",))
+
+
+# Jitted page movers shared by every engine: XLA specializes per
+# (pool shape, n_blocks) and the donated scatter writes pages in place —
+# hand-off/migration cost is the moved request's pages, not the pool.
+_page_gather = jax.jit(KC.gather_pages, static_argnames=("block_size",))
+_page_scatter = jax.jit(KC.scatter_pages, static_argnames=("block_size",),
+                        donate_argnums=(0,))
+_page_reset = jax.jit(KC.reset_page_positions,
+                      static_argnames=("block_size",), donate_argnums=(0,))
 
 
 class PrefillEngine:
@@ -67,12 +129,27 @@ class PrefillEngine:
         self.ecfg = ecfg
         self.store = store if KC.prefix_cacheable(cfg) else None
         self.name = name
-        self.queue: List[Request] = []    # routed, not yet prefilled
+        self.queue: Deque[Request] = deque()   # routed, not yet prefilled
         self.tokens_prefilled = 0         # suffix tokens actually computed
         self.n_prefilled = 0
         # leading-block hash -> cached tokens; the locality signal the
         # prefix-aware baseline router keys on (Fig. 2a)
         self._leading: Dict[bytes, int] = {}
+        self._page_len = _paged_page_len(cfg, ecfg)
+        # recurrent states would integrate junk pad tokens; attention-only
+        # stacks mask them, so only those get the padded bucket discipline
+        self._pad = not cfg.uses_recurrent_state
+        # padded writes must never wrap the SHORTEST attention ring: a
+        # wrapped pad token would evict a live in-window key
+        attn_lens = _attn_cache_lens(cfg, ecfg.max_len)
+        self._pad_cap = min(attn_lens) if attn_lens else ecfg.max_len
+        self.prefill_shapes: Set[Tuple[int, int, bool]] = set()
+        # store-fetch billing: per-layer prefill compute of one block, the
+        # overlap partner of the store's per-layer page streams
+        self._t_layer_fetch = (
+            A.prefill_time(cfg, ecfg.block_size, ecfg.hw)
+            / max(cfg.n_layers, 1) if ecfg.hw is not None else None)
+        self.fetch_latency_s = 0.0    # modelled (overlapped when hw set)
         self._prefill = _jit_apply(cfg, "prefill", False)
         self._prefill_inc = _jit_apply(cfg, "prefill", True)
 
@@ -104,7 +181,9 @@ class PrefillEngine:
         if matched <= 0:
             return 0, []
         hit_keys = hit_keys[: matched // self.ecfg.block_size]
-        payloads, _ = self.store.fetch(hit_keys)
+        payloads, t_fetch = self.store.fetch(
+            hit_keys, t_layer_compute=self._t_layer_fetch)
+        self.fetch_latency_s += t_fetch
         return matched, payloads
 
     def _match_len(self, tokens: np.ndarray, keys: List[bytes]) -> int:
@@ -133,19 +212,65 @@ class PrefillEngine:
                               [None] * (matched // bs) + payloads, nbytes,
                               keys=keys)
 
+    def _bucket_len(self, slen: int, matched: int) -> int:
+        """Pad a suffix length to its power-of-two bucket, capped at the
+        row's remaining capacity in the SHORTEST attention cache (padded
+        writes must never wrap a ring past live tokens).  ``matched`` is
+        block-aligned, so the cap values form the finite set
+        {pad_cap - j*block_size} and the shape set stays bounded (see
+        ``prefill_shape_bound``).  A suffix longer than a windowed cache
+        falls back to its exact shape — those stacks never had bounded
+        shapes, and a windowed stack is never store-cacheable anyway."""
+        if not self._pad:
+            return slen
+        padded = min(_pow2_ceil(slen), self._pad_cap - matched)
+        return padded if padded >= slen else slen
+
+    def prefill_shape_bound(self) -> int:
+        """Upper bound on distinct jitted prefill shapes under the padded
+        bucket discipline: power-of-two rows x (power-of-two suffix
+        lengths + block-aligned capacity caps) x hit/miss.  Holds whenever
+        suffixes fit the shortest attention cache (always true for
+        linear-cache stacks)."""
+        def pow2s(cap: int) -> set:
+            vals, v = {cap}, 1
+            while v < cap:
+                vals.add(v)
+                v <<= 1
+            return vals
+        lens = pow2s(self.ecfg.max_len)
+        lens |= {self._pad_cap - j * self.ecfg.block_size
+                 for j in range(0, self._pad_cap
+                                // max(self.ecfg.block_size, 1))}
+        return 2 * len(pow2s(max(self.ecfg.max_batch, 1))) \
+            * len({v for v in lens if v >= 1})
+
+    def compile_report(self) -> Dict[str, Any]:
+        """Distinct (rows, padded_suffix, hit) forward shapes this engine
+        ran — each is at most one XLA compile in the shared jit cache."""
+        return {"shapes": sorted(self.prefill_shapes),
+                "n_shapes": len(self.prefill_shapes),
+                "bound": self.prefill_shape_bound()}
+
     def run_batch(self, reqs: List[Request],
                   frames: Optional[jax.Array] = None
                   ) -> List[Tuple[Dict[str, Any], jax.Array]]:
         """Prefill several requests in as few dense forwards as possible.
 
-        Wave loop: requests are bucketed by (suffix length, prefix-hit) and
-        one bucket runs per wave as a dense forward; blocks it publishes can
-        turn later requests' misses into hits, so the rest re-match and
-        re-bucket each wave.  Within a wave, miss-requests sharing a leading
-        block with an already-chosen one are deferred — their shared prefix
-        will be in the store by their turn.
+        Wave loop: requests are bucketed by (padded suffix length,
+        prefix-hit) and one bucket runs per wave as a dense forward; blocks
+        it publishes can turn later requests' misses into hits, so the rest
+        re-match and re-bucket each wave.  Within a wave, miss-requests
+        sharing a leading block with an already-chosen one are deferred —
+        their shared prefix will be in the store by their turn.  Suffixes
+        and row counts pad to power-of-two buckets so the compiled-shape
+        set stays bounded (see ``compile_report``); each row's true last
+        token drives its logits and the padded tail is masked junk the
+        decoder overwrites in place.
 
-        Returns ``[(request_state, last_logits_row)]`` aligned with ``reqs``.
+        Returns ``[(request_state, last_logits_row)]`` aligned with
+        ``reqs`` — request states in the paged wire format when the arch
+        supports it (see models.kvcache).
         """
         for req in reqs:
             req.advance(Phase.PREFILL)
@@ -161,15 +286,13 @@ class PrefillEngine:
         while remaining:
             tlen = {i: self._match_len(toks[i], keys_of[i])
                     for i in remaining}
-            # each distinct (rows, suffix_len) bucket shape costs one XLA
-            # compile; padded fixed-size buckets would bound the shape set
-            # (future optimization — the per-request path paid this too)
             buckets: Dict[Tuple[int, bool], List[int]] = {}
             for i in remaining:
-                buckets.setdefault((len(toks[i]) - tlen[i], tlen[i] > 0),
-                                   []).append(i)
-            (_slen, hit), idxs = max(buckets.items(),
-                                     key=lambda kv: len(kv[1]))
+                slen = len(toks[i]) - tlen[i]
+                buckets.setdefault((self._bucket_len(slen, tlen[i]),
+                                    tlen[i] > 0), []).append(i)
+            (blen, hit), idxs = max(buckets.items(),
+                                    key=lambda kv: len(kv[1]))
             # defer duplicate uncached prefixes to a later wave
             seen_leads, chosen = set(), []
             for i in idxs:
@@ -182,7 +305,23 @@ class PrefillEngine:
             # the engine's capacity contract: never a denser forward than
             # the configured batch; the wave loop picks up the overflow
             chosen = chosen[: max(self.ecfg.max_batch, 1)]
-            cache = T.init_cache(self.cfg, len(chosen), self.ecfg.max_len,
+            n_rows = len(chosen)
+            wave_frames = frames
+            if self._pad and (wave_frames is None
+                              or wave_frames.shape[0] == n_rows):
+                # row padding: dummy rows get zero frames; a frames batch
+                # that doesn't match the wave is left alone so the
+                # cross-attention shape check stays loud
+                padded_rows = min(_pow2_ceil(n_rows),
+                                  max(self.ecfg.max_batch, 1))
+                if wave_frames is not None and padded_rows > n_rows:
+                    wave_frames = jnp.concatenate([
+                        wave_frames,
+                        jnp.zeros((padded_rows - n_rows,)
+                                  + wave_frames.shape[1:],
+                                  wave_frames.dtype)])
+                n_rows = padded_rows
+            cache = T.init_cache(self.cfg, n_rows, self.ecfg.max_len,
                                  dtype=self.params["embed"].dtype)
             matched_of: Dict[int, int] = {}
             for row, i in enumerate(chosen):
@@ -196,16 +335,28 @@ class PrefillEngine:
                         st = KC.merge_prefix_kv(st, p, off)
                         off += self.ecfg.block_size
                     cache = KC.insert_request_state(cache, row, st)
-            suffixes = jnp.stack([
-                jnp.asarray(toks[i][matched_of[i]:]) for i in chosen])
+            suffix = np.zeros((n_rows, blen), np.int32)
+            slens = np.ones((n_rows,), np.int32)   # dummy rows read pos 0
+            for row, i in enumerate(chosen):
+                s_i = toks[i][matched_of[i]:]
+                suffix[row, : len(s_i)] = s_i
+                slens[row] = len(s_i)
             fn = self._prefill_inc if hit else self._prefill
-            logits, cache, _ = fn(self.params, suffixes, cache=cache,
-                                  frames=frames)
+            self.prefill_shapes.add((n_rows, blen, hit))
+            logits, cache, _ = fn(self.params, jnp.asarray(suffix),
+                                  cache=cache, frames=wave_frames,
+                                  logits_at=jnp.asarray(slens - 1))
             for row, i in enumerate(chosen):
                 st = KC.extract_request_state(cache, row)
+                # the cache advanced by the padded length; the request's
+                # true length is what decode must resume from
+                st["length"] = jnp.asarray(
+                    matched_of[i] + int(slens[row]), jnp.int32)
                 self._publish(toks[i], st, matched_of[i], keys_of[i])
                 self.tokens_prefilled += len(toks[i]) - matched_of[i]
                 self.n_prefilled += 1
+                if self._page_len is not None:
+                    st = KC.dense_state_to_paged(st, self.ecfg.block_size)
                 out[i] = (st, logits[row])
             done = set(chosen)
             remaining = [i for i in remaining if i not in done]
@@ -223,13 +374,14 @@ class PrefillEngine:
         n = min(max_reqs, len(self.queue))
         if n <= 0:
             return []
-        batch = [self.queue.pop(0) for _ in range(n)]
+        batch = [self.queue.popleft() for _ in range(n)]
         results = self.run_batch(batch, frames=frames)
         return [(r, st, lg) for r, (st, lg) in zip(batch, results)]
 
 
 class DecodeEngine:
-    """One decode instance: slot-based continuous batching."""
+    """One decode instance: slot-based continuous batching over the paged
+    block pool (dense row fallback for archs with no pageable KV)."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  name: str = "decode0"):
@@ -237,15 +389,33 @@ class DecodeEngine:
         self.params = params
         self.ecfg = ecfg
         self.name = name
-        self.cache = T.init_cache(cfg, ecfg.max_batch, ecfg.max_len,
-                                  dtype=params["embed"].dtype)
+        self.page_len = _paged_page_len(cfg, ecfg)
+        self.paged = self.page_len is not None
+        if self.paged:
+            self.cache = T.init_paged_cache(cfg, ecfg.max_batch,
+                                            ecfg.max_len, ecfg.block_size,
+                                            dtype=params["embed"].dtype)
+            self._nb_slot = self.page_len // ecfg.block_size
+            n_phys = 1 + ecfg.max_batch * self._nb_slot
+            # host-side mirrors: block tables + free list (block 0 is the
+            # reserved scratch page); the device table is refreshed from
+            # the mirror whenever it goes stale
+            self._bt = np.full((ecfg.max_batch, self._nb_slot), -1, np.int32)
+            self._bt_dirty = False    # device table out of sync with _bt
+            self._free: List[int] = list(range(n_phys - 1, 0, -1))
+            self._slot_blocks: List[List[int]] = \
+                [[] for _ in range(ecfg.max_batch)]
+        else:
+            self.cache = T.init_cache(cfg, ecfg.max_batch, ecfg.max_len,
+                                      dtype=params["embed"].dtype)
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
         self.next_token = np.zeros((ecfg.max_batch,), np.int32)
         # host-side mirror of active rows' cache lengths: keeps the hot
         # hand-off/control paths free of device syncs
         self._slot_len = np.zeros((ecfg.max_batch,), np.int64)
         self.tokens_decoded = 0
-        self._step = _jit_apply(cfg, "decode", False)
+        self._step = _jit_apply(cfg, "decode", False,
+                                ecfg.decode_kernel and self.paged)
 
     # ------------------------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -276,13 +446,37 @@ class DecodeEngine:
                           memory_frac=min(mem, 1.0), queue_len=self.active)
 
     # -- slot transfer ---------------------------------------------------
+    def _release_blocks(self, slot: int) -> None:
+        self._free.extend(reversed(self._slot_blocks[slot]))
+        self._slot_blocks[slot] = []
+        self._bt[slot, :] = -1
+        # the stale device row must be resynced before the next step: a
+        # freed block can be reallocated, and a write through the stale
+        # row would land in the new owner's page
+        self._bt_dirty = True
+
     def adopt(self, req: Request, state: Dict[str, Any],
               next_token: int) -> int:
         """Place an in-flight request's state into a free slot (migration
-        receive path: no token is emitted by the move itself)."""
+        receive path: no token is emitted by the move itself).  Paged
+        states land as per-layer page copies into freshly allocated
+        blocks; dense states are converted first."""
         slot = self.free_slot()
         assert slot is not None, "decode engine full"
-        self.cache = KC.insert_request_state(self.cache, slot, state)
+        if self.paged:
+            if "n_blocks" not in state:
+                state = KC.dense_state_to_paged(state, self.ecfg.block_size)
+            n = int(state["n_blocks"])
+            assert len(self._free) >= n, "decode block pool exhausted"
+            phys = [self._free.pop() for _ in range(n)]
+            self.cache = KC.insert_paged_state(
+                self.cache, slot, state, phys, self.ecfg.block_size,
+                scatter=_page_scatter)
+            self._bt[slot, :] = -1
+            self._bt[slot, :n] = phys
+            self._slot_blocks[slot] = list(phys)
+        else:
+            self.cache = KC.insert_request_state(self.cache, slot, state)
         self.slots[slot] = req
         self.next_token[slot] = int(next_token)
         self._slot_len[slot] = int(state["length"])
@@ -299,10 +493,19 @@ class DecodeEngine:
 
     def extract_slot(self, slot: int
                      ) -> Tuple[Request, Dict[str, Any], int]:
-        """Pull an active slot's full state out (migration send path)."""
+        """Pull an active slot's state out (migration send path).  On the
+        paged layout only the slot's pages are gathered — cost scales with
+        the request's blocks, not the cache size."""
         req = self.slots[slot]
         assert req is not None, f"slot {slot} empty"
-        state = KC.extract_request_state(self.cache, slot)
+        if self.paged:
+            state = KC.extract_paged_state(
+                self.cache, slot, self.ecfg.block_size,
+                table_row=self._bt[slot],
+                length=int(self._slot_len[slot]), gather=_page_gather)
+            self._release_blocks(slot)
+        else:
+            state = KC.extract_request_state(self.cache, slot)
         tok = int(self.next_token[slot])
         self.slots[slot] = None
         self._slot_len[slot] = 0
@@ -318,6 +521,31 @@ class DecodeEngine:
         """One decode iteration for all active slots.  Returns finished."""
         if self.active == 0:
             return []
+        if self.paged:
+            # lazy page allocation: make sure every active slot owns the
+            # block its next token lands in (ring wraps reuse old pages)
+            fresh: List[int] = []
+            for i, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                j = (int(self._slot_len[i]) % self.page_len) \
+                    // self.ecfg.block_size
+                if self._bt[i, j] < 0:
+                    assert self._free, "decode block pool exhausted"
+                    pb = self._free.pop()
+                    self._bt[i, j] = pb
+                    self._slot_blocks[i].append(pb)
+                    fresh.append(pb)
+            if fresh:
+                # recycled blocks carry the previous owner's positions —
+                # invalidate them (in place, donated) before anything
+                # gathers through them
+                self.cache = _page_reset(
+                    self.cache, jnp.asarray(np.asarray(fresh, np.int32)),
+                    block_size=self.ecfg.block_size)
+            if fresh or self._bt_dirty:
+                self.cache["block_tables"] = jnp.asarray(self._bt)
+                self._bt_dirty = False
         toks = jnp.asarray(self.next_token[:, None])
         logits, self.cache, _ = self._step(self.params, toks,
                                            cache=self.cache)
@@ -333,6 +561,8 @@ class DecodeEngine:
                 finished.append((req, i))
                 self.slots[i] = None
                 self._slot_len[i] = 0
+                if self.paged:
+                    self._release_blocks(i)
                 continue
             tok = int(nxt[i])
             req.generated.append(tok)
@@ -346,4 +576,6 @@ class DecodeEngine:
                 finished.append((req, i))
                 self.slots[i] = None
                 self._slot_len[i] = 0
+                if self.paged:
+                    self._release_blocks(i)
         return finished

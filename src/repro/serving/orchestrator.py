@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -41,6 +42,7 @@ from ..core.migration import (ControllerConfig, DeviceLoad, MigrationAction,
 from ..core.scheduling import (LoadAwareRouter, PrefixAwareRouter,
                                RequestInfo, RoundRobinRouter,
                                live_instance_loads)
+from ..models import kvcache as KC
 from ..models.config import ModelConfig
 from .engine import DecodeEngine, EngineConfig, PrefillEngine
 from .request import Metrics, Phase, Request
@@ -92,6 +94,7 @@ class _Member:
         self.tokens_prefilled = 0
         self.n_prefilled = 0
         self.tokens_decoded = 0
+        self.fetch_latency_s = 0.0
 
     @property
     def engine(self):
@@ -113,7 +116,10 @@ class Orchestrator:
         self.cfg = cfg
         self.params = params
         self.ocfg = ocfg
-        self.ecfg = ocfg.engine
+        # engines bill Global-KV-Store fetches as §4.2 overlapped
+        # transmission on the fleet's hardware profile
+        self.ecfg = (dataclasses.replace(ocfg.engine, hw=ocfg.hw)
+                     if ocfg.engine.hw is None else ocfg.engine)
         self.store = (GlobalKVStore(block_size=self.ecfg.block_size)
                       if ocfg.global_store else None)
         self.router = _make_router(ocfg.router)
@@ -130,10 +136,15 @@ class Orchestrator:
         self.controller = (MigrationController(ocfg.controller,
                                                self._migration_cost)
                            if ocfg.migration else None)
-        self.pending: List[Request] = []      # submitted, not yet routed
+        self.pending: Deque[Request] = deque()  # submitted, not yet routed
         self.metrics = Metrics()
         self.migration_log: List[MigrationAction] = []
         self.util_trace: List[Dict[str, float]] = []
+        # per-layer overlapped transfer schedule accounting: modelled
+        # hand-off seconds with and without §4.2 layer-wise overlap
+        self.n_handoffs = 0
+        self.handoff_serial_s = 0.0
+        self.handoff_overlap_s = 0.0
         self._step_i = 0
         self._t0: Optional[float] = None
 
@@ -174,6 +185,22 @@ class Orchestrator:
     def _prefix_key(self, req: Request) -> Optional[bytes]:
         return leading_block_key(req.prompt, self.ecfg.block_size)
 
+    def _account_handoff(self, req: Request, st: Dict) -> None:
+        """Cost the KV hand-off's ordered per-layer transfer schedule with
+        and without §4.2 layer-wise overlap (Eq. 4/11 on ``ocfg.hw``): the
+        overlap partner is the destination's per-layer decode compute."""
+        sched = KC.layer_transfer_schedule(st)
+        if not sched:
+            return
+        t_layer = A.decode_time_per_token(
+            self.cfg, req.prompt_len, self.ocfg.hw) / max(len(sched), 1)
+        nbytes = [b for _, b in sched]
+        self.n_handoffs += 1
+        self.handoff_serial_s += A.serial_schedule_time(
+            nbytes, self.ocfg.hw.net_bw, t_layer)
+        self.handoff_overlap_s += A.overlapped_schedule_time(
+            nbytes, self.ocfg.hw.net_bw, t_layer)
+
     def _route_pending(self) -> None:
         """Algorithm 2 over the central queue: dispatch every pending
         request onto a prefill member's queue using live load snapshots."""
@@ -189,7 +216,7 @@ class Orchestrator:
         plan = self.router.dispatch(infos, loads)
         for req in self.pending:
             self._by_name[plan[req.rid]].prefill.enqueue(req)
-        self.pending = []
+        self.pending.clear()
 
     # -- one orchestration tick ------------------------------------------
     def step(self) -> List[Request]:
@@ -206,12 +233,17 @@ class Orchestrator:
             n = min(self.ocfg.prefill_chunk, free)
             before_tok = m.prefill.tokens_prefilled
             before_n = m.prefill.n_prefilled
+            before_fetch = m.prefill.fetch_latency_s
             for req, st, logits in m.prefill.run_queued(n):
                 req.t_prefill_start = req.t_prefill_start or now
                 req.advance(Phase.TRANSFER)
+                # ties broken by member name so target selection is
+                # deterministic across re-rolls and fleet orderings
                 tgt = min((d for d in self.decode_members()
                            if d.decode.free_slots > 0),
-                          key=lambda d: (d.decode.active, d.decode.kv_tokens))
+                          key=lambda d: (d.decode.active, d.decode.kv_tokens,
+                                         d.name))
+                self._account_handoff(req, st)
                 tgt.decode.insert(req, st, int(jnp.argmax(logits)))
                 req.t_first_token = self._now()
                 free -= 1
@@ -219,6 +251,7 @@ class Orchestrator:
             # re-rolls), fed by engine deltas — one source of truth
             m.tokens_prefilled += m.prefill.tokens_prefilled - before_tok
             m.n_prefilled += m.prefill.n_prefilled - before_n
+            m.fetch_latency_s += m.prefill.fetch_latency_s - before_fetch
         finished: List[Request] = []
         for m in self.decode_members():
             before = m.decode.tokens_decoded
@@ -333,8 +366,9 @@ class Orchestrator:
             return False
         if new_role == ROLE_DECODE:
             # prefill -> decode: queued (unstarted) requests go back to the
-            # central queue; Algorithm 2 re-routes them next step
-            self.pending = list(member.prefill.queue) + self.pending
+            # front of the central queue; Algorithm 2 re-routes them next
+            # step (extendleft reverses, so feed it the reversed queue)
+            self.pending.extendleft(reversed(member.prefill.queue))
             member.prefill.queue.clear()
             member.prefill = None
             member.decode = DecodeEngine(self.cfg, self.params, self.ecfg,
@@ -345,7 +379,7 @@ class Orchestrator:
             for req, st, tok in member.decode.drain():
                 tgt = min((d for d in self.decode_members()
                            if d is not member and d.decode.free_slots > 0),
-                          key=lambda d: d.decode.active)
+                          key=lambda d: (d.decode.active, d.name))
                 tgt.decode.adopt(req, st, tok)
             member.decode = None
             member.prefill = self._new_prefill(member.name)
@@ -379,6 +413,10 @@ class Orchestrator:
         s["global_store"] = self.ocfg.global_store
         s["migrations"] = len(self.migration_log)
         s["fleet"] = self.fleet
+        s["handoffs"] = self.n_handoffs
+        s["handoff_serial_s"] = self.handoff_serial_s
+        s["handoff_overlap_s"] = self.handoff_overlap_s
+        s["store_fetch_s"] = sum(m.fetch_latency_s for m in self.members)
         # routing-imbalance metric (Fig. 2a): only members that held the
         # prefill role for the whole run — re-rolled members' counters
         # reflect migration, not router quality

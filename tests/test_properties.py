@@ -18,6 +18,9 @@ from repro.core.migration import (ControllerConfig, DeviceLoad,
                                   MigrationController, MigrationKind)
 from repro.core.pipeline import PipelineModel
 from repro.core.scheduling import InstanceLoad, LoadAwareRouter, RequestInfo
+from repro.models import kvcache as KC
+from repro.models import transformer as T
+from repro.models.config import BlockKind, Family, ModelConfig
 
 # ---------------------------------------------------------------------------
 # Split-KV softmax combine: exact for ANY partition of the KV sequence
@@ -97,6 +100,86 @@ def test_store_capacity_never_exceeded(inserts):
         st_.insert(toks, ["x", "y"], nbytes_per_block=nbytes)
         assert st_.used_bytes(0) <= caps[0]
         assert st_.used_bytes(1) <= caps[1]
+
+
+# ---------------------------------------------------------------------------
+# Paged KV layout: dense <-> block-pool round trip is exact for any stack
+# ---------------------------------------------------------------------------
+
+_ALL_KINDS = [BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION,
+              BlockKind.RGLRU, BlockKind.MLSTM, BlockKind.SLSTM]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(_ALL_KINDS), min_size=1, max_size=4),
+       st.integers(0, 3),           # extra layers beyond one pattern pass
+       st.integers(1, 3),           # batch
+       st.integers(1, 4),           # page blocks (max_len = bs * this)
+       st.integers(0, 10_000))
+def test_paged_round_trip_exact_all_block_kinds(pat, extra, batch,
+                                                n_blocks, seed):
+    """dense_to_paged . paged_to_dense == id, bitwise, for ARBITRARY cache
+    contents across every BlockKind mix (recurrent/windowed leaves ride
+    along slot-dense; attention KV goes through the block pool)."""
+    pat = list(pat)
+    if BlockKind.ATTENTION not in pat:   # need something to page
+        pat.append(BlockKind.ATTENTION)
+    bs = 4
+    max_len = bs * n_blocks
+    cfg = ModelConfig(name="prop", family=Family.DENSE,
+                      n_layers=len(pat) + extra, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=32,
+                      block_pattern=tuple(pat), local_window=max_len)
+    cache = T.init_cache(cfg, batch, max_len)
+    rng = np.random.default_rng(seed)
+
+    def rnd(a):
+        if a.dtype == jnp.int32:
+            return jnp.asarray(rng.integers(-1, 99, a.shape), a.dtype)
+        return jnp.asarray(rng.normal(size=a.shape), a.dtype)
+
+    cache = jax.tree.map(rnd, cache)
+    back = KC.paged_to_dense(KC.dense_to_paged(cache, bs), bs)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 10_000))
+def test_paged_state_round_trip_matches_extract(length, seed):
+    """extract_paged_state of a converted cache == dense extract of the
+    same row (over the live region) for any request length."""
+    cfg = ModelConfig(name="prop2", family=Family.DENSE, n_layers=2,
+                      d_model=16, n_heads=2, n_kv_heads=2, d_ff=32,
+                      vocab_size=32)
+    bs, max_len = 4, 24
+    cache = T.init_cache(cfg, 2, max_len)
+    rng = np.random.default_rng(seed)
+
+    def rnd(a):
+        if a.dtype == jnp.int32:
+            return jnp.asarray(rng.integers(0, 99, a.shape), a.dtype)
+        return jnp.asarray(rng.normal(size=a.shape), a.dtype)
+
+    cache = jax.tree.map(rnd, cache)
+    cache["lengths"] = jnp.asarray([length, 0], jnp.int32)
+    st = KC.extract_request_state(cache, 0)
+    ps = KC.dense_state_to_paged(st, bs)
+    assert ps["n_blocks"] == -(-length // bs)
+    back = KC.paged_state_to_dense(ps, bs, max_len)
+    # exact over the paged prefix; the dropped tail re-materializes blank
+    keep = ps["n_blocks"] * bs
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape:
+            continue
+        if a.ndim and a.shape[-1] == max_len:          # pos-like leaves
+            np.testing.assert_array_equal(a[..., :keep], b[..., :keep])
+        elif a.ndim >= 3 and a.shape[-3] == max_len:   # k/v leaves
+            np.testing.assert_array_equal(a[..., :keep, :, :],
+                                          b[..., :keep, :, :])
+        else:
+            np.testing.assert_array_equal(a, b)
 
 
 # ---------------------------------------------------------------------------
