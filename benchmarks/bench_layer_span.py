@@ -1,0 +1,149 @@
+"""Layer-span migration A/B: span move vs whole-instance re-roll (§4.1).
+
+Three views of the same claim — migrating a contiguous layer span costs
+the SPAN, while the pre-span runtime's only LAYER action (re-rolling a
+whole instance) always pays the full stack:
+
+* analytical (Eq. 4/5/11, paper scale: llama-13b): the per-layer
+  overlapped schedule of a k-layer span move (weights + resident KV)
+  against the flat n_layers re-roll, serial vs overlapped;
+* live wall clock: ``DecodePipeline.move_span`` with growing span sizes
+  on a loaded pipeline, against the re-roll path (fresh engine + full
+  drain/adopt of every resident slot);
+* payload bytes: what actually crossed the boundary per move
+  (``move_span``'s weight/KV accounting).
+
+    PYTHONPATH=src python -m benchmarks.run --only layer_span
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytical as A
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.serving.engine import DecodeEngine, EngineConfig, PrefillEngine
+from repro.serving.request import Request
+from repro.serving.span import DecodePipeline
+
+CFG = ModelConfig(name="span-bench", family=Family.DENSE, n_layers=8,
+                  d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                  vocab_size=256)
+ECFG = EngineConfig(max_len=128, max_batch=4, block_size=16)
+N_ITER = 5
+
+
+def _loaded_pipeline(params, bounds):
+    """A decode pipeline with every slot resident (mid-flight requests)."""
+    pe = PrefillEngine(CFG, params, ECFG, None)
+    dp = DecodePipeline(CFG, params, ECFG, bounds)
+    rng = np.random.default_rng(0)
+    for rid in range(ECFG.max_batch):
+        prompt = rng.integers(0, 256, 48 + 8 * rid, dtype=np.int32)
+        r = Request(rid=rid, arrival=0.0, prompt=prompt,
+                    max_new_tokens=10_000)
+        st, lg = pe.run(r)
+        dp.insert(r, st, int(jnp.argmax(lg)))
+    dp.step()
+    return dp
+
+
+def _span_move_ms(params, k: int) -> float:
+    """Wall ms of moving k boundary layers back and forth on a loaded
+    2-stage pipeline (averaged per single move)."""
+    dp = _loaded_pipeline(params, [(0, CFG.n_layers - 1),
+                                   (CFG.n_layers - 1, CFG.n_layers)])
+    dp.move_span(0, 1, k)          # warmup (shape compiles for both cuts)
+    dp.move_span(1, 0, k)
+    t0 = time.perf_counter()
+    for _ in range(N_ITER):
+        dp.move_span(0, 1, k)
+        dp.move_span(1, 0, k)
+    return (time.perf_counter() - t0) / (2 * N_ITER) * 1e3
+
+
+def _reroll_ms(params) -> float:
+    """Wall ms of the whole-instance alternative: stand up a fresh
+    full-stack engine and move EVERY resident slot into it (the
+    orchestrator's pre-span LAYER execution)."""
+    pe = PrefillEngine(CFG, params, ECFG, None)
+    src = DecodeEngine(CFG, params, ECFG, name="src")
+    rng = np.random.default_rng(0)
+    for rid in range(ECFG.max_batch):
+        prompt = rng.integers(0, 256, 48 + 8 * rid, dtype=np.int32)
+        r = Request(rid=rid, arrival=0.0, prompt=prompt,
+                    max_new_tokens=10_000)
+        st, lg = pe.run(r)
+        src.insert(r, st, int(jnp.argmax(lg)))
+    src.step()
+
+    def reroll(engine):
+        fresh = DecodeEngine(CFG, params, ECFG, name="fresh")
+        for req, st, tok in engine.drain():
+            fresh.adopt(req, st, tok)
+        return fresh
+
+    src = reroll(src)              # warmup
+    t0 = time.perf_counter()
+    for _ in range(N_ITER):
+        src = reroll(src)
+    return (time.perf_counter() - t0) / N_ITER * 1e3
+
+
+def main() -> None:
+    # -- analytical sweep at paper scale (Eq. 4/11) ----------------------
+    from repro.configs import llama_13b
+    big = llama_13b.CONFIG
+    kv_tokens = 4 * 1000           # 4 resident requests, 1k tokens each
+    t_layer = A.decode_time_per_token(big, 1000, A.TPU_V5E) / big.n_layers
+    print("layer_span_analytical,span_layers,serial_ms,overlap_ms,"
+          "reroll_ms")
+    reroll = A.layer_migration_time(big, big.n_layers, kv_tokens, A.TPU_V5E)
+    prev = 0.0
+    for k in (1, 2, 4, 8, 16, big.n_layers):
+        ser = A.span_migration_time(big, k, kv_tokens, A.TPU_V5E,
+                                    t_layer_compute=t_layer,
+                                    overlapped=False)
+        ovl = A.span_migration_time(big, k, kv_tokens, A.TPU_V5E,
+                                    t_layer_compute=t_layer)
+        assert ovl <= ser + 1e-12, "overlap must beat the serial sum"
+        assert ovl >= prev, "span cost must grow with the span"
+        prev = ovl
+        print(f"layer_span_analytical,{k},{ser * 1e3:.4f},"
+              f"{ovl * 1e3:.4f},{reroll * 1e3:.4f}")
+
+    # -- live payloads + wall clock --------------------------------------
+    # the billed migration cost is the payload's Eq. 4/11 schedule
+    # (payload_bytes scales exactly with the span); host wall clock is the
+    # CPU-container cost of the state surgery itself, reported for texture
+    params = T.init(CFG, jax.random.PRNGKey(0))
+    print("layer_span_live,mode,span_layers,payload_bytes,"
+          "eq4_overlap_ms,host_ms_per_move")
+    for k in (1, 2, 4):
+        dp = _loaded_pipeline(params, [(0, CFG.n_layers - 1),
+                                       (CFG.n_layers - 1, CFG.n_layers)])
+        rec = dp.move_span(0, 1, k)
+        payload = rec["weight_bytes"] + rec["kv_bytes"]
+        eq4 = A.overlapped_schedule_time([payload // k] * k,
+                                         A.TPU_V5E.net_bw, t_sync=0.0)
+        ms = _span_move_ms(params, k)
+        print(f"layer_span_live,span,{rec['layers']},{payload},"
+              f"{eq4 * 1e3:.4f},{ms:.3f}")
+    ms = _reroll_ms(params)
+    full_w = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(
+        (params["groups"], params["rem"])))
+    eq4 = A.overlapped_schedule_time(
+        [full_w // CFG.n_layers] * CFG.n_layers, A.TPU_V5E.net_bw,
+        t_sync=0.0)
+    print(f"layer_span_live,reroll,{CFG.n_layers},{full_w},"
+          f"{eq4 * 1e3:.4f},{ms:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,9 @@ import argparse
 import sys
 import time
 
-from . import (bench_attention, bench_migration, bench_orchestrator,
-               bench_paged_handoff, bench_pipeline, bench_scheduler,
-               bench_throughput, bench_utilization)
+from . import (bench_attention, bench_layer_span, bench_migration,
+               bench_orchestrator, bench_paged_handoff, bench_pipeline,
+               bench_scheduler, bench_throughput, bench_utilization)
 
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
@@ -20,6 +20,7 @@ ALL = {
     "scheduler": bench_scheduler,     # Fig. 2a (simulator)
     "orchestrator": bench_orchestrator,  # Fig. 2a on live engines
     "paged_handoff": bench_paged_handoff,  # block moves vs row surgery
+    "layer_span": bench_layer_span,   # span move vs whole-instance re-roll
     "utilization": bench_utilization, # Fig. 2b
     "attention": bench_attention,     # kernels
     "throughput": bench_throughput,   # Fig. 8-11

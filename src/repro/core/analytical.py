@@ -163,6 +163,32 @@ def migration_cost(n_modules: int, t_transfer: float, t_sync: float = 2e-3,
     return n_modules * (t_transfer + t_sync + t_realloc)   # Eq. 28
 
 
+def span_transfer_schedule(cfg: ModelConfig, n_span_layers: int,
+                           kv_tokens: int, dtype_bytes: int = 2
+                           ) -> "Sequence[int]":
+    """Ordered per-layer byte schedule of a §4.1 layer-span migration:
+    each migrated layer ships its weight shard ``W_l`` plus its share of
+    the resident serving state ``KV_l`` (Eq. 5).  Cost the schedule with
+    ``overlapped_schedule_time`` — layer *i*'s payload streams while layer
+    *i−1* re-materializes on the destination — so the move is billed per
+    migrated layer, never per stack."""
+    w_layer = cfg.param_count() / max(cfg.n_layers, 1) * dtype_bytes
+    kv_layer = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens \
+        / max(cfg.n_layers, 1)
+    return [int(w_layer + kv_layer)] * max(n_span_layers, 0)
+
+
+def span_migration_time(cfg: ModelConfig, n_span_layers: int,
+                        kv_tokens: int, hw: HardwareProfile,
+                        t_layer_compute: float = 0.0,
+                        overlapped: bool = True) -> float:
+    """Eq. 4/11 cost of moving a contiguous span of ``n_span_layers``
+    layers (weights + per-slot KV) — scales with the SPAN, not the stack."""
+    sched = span_transfer_schedule(cfg, n_span_layers, kv_tokens)
+    fn = overlapped_schedule_time if overlapped else serial_schedule_time
+    return fn(sched, hw.net_bw, t_layer_compute)
+
+
 # ---------------------------------------------------------------------------
 # Ordered per-layer transfer schedules (paged hand-off / migration payloads)
 # ---------------------------------------------------------------------------

@@ -53,12 +53,156 @@ def unstack_cache(cfg: ModelConfig, cache: Dict[str, Any]
     return out
 
 
+def restack_layers(cfg: ModelConfig,
+                   layers: Sequence[Tuple[BlockKind, Dict[str, Any]]]
+                   ) -> Dict[str, Any]:
+    """Inverse of ``unstack_layers``: an ordered per-layer list back into the
+    grouped/stacked layout (``{"groups": ..., "rem": ...}``) of ``cfg``.
+    ``restack_layers(cfg, unstack_layers(cfg, params))`` is the identity on
+    the layer part of ``params`` (property-tested)."""
+    pat, n_rep, rem = T._group_shapes(cfg)
+    assert len(layers) == cfg.n_layers, (len(layers), cfg.n_layers)
+    for i, (kind, _) in enumerate(layers):
+        want = pat[i % len(pat)] if i < n_rep * len(pat) \
+            else pat[i - n_rep * len(pat)]
+        assert kind == want, f"layer {i}: {kind} != pattern {want}"
+    groups = []
+    for g in range(len(pat)):
+        per_rep = [layers[r * len(pat) + g][1] for r in range(n_rep)]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+                      if per_rep else None)
+    return {
+        "groups": tuple(g for g in groups if g is not None),
+        "rem": tuple(layers[n_rep * len(pat) + i][1] for i in range(rem)),
+    }
+
+
+def restack_cache(cfg: ModelConfig,
+                  states: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Inverse of ``unstack_cache`` (layer part only — callers re-attach
+    ``lengths``/``length`` and friends)."""
+    pat, n_rep, rem = T._group_shapes(cfg)
+    assert len(states) == cfg.n_layers, (len(states), cfg.n_layers)
+    groups = []
+    for g in range(len(pat)):
+        per_rep = [states[r * len(pat) + g] for r in range(n_rep)]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+                      if per_rep else None)
+    return {
+        "groups": tuple(g for g in groups if g is not None),
+        "rem": tuple(states[n_rep * len(pat) + i] for i in range(rem)),
+    }
+
+
 def layer_state_bytes(state: Dict[str, Any]) -> int:
     return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(state))
 
 
 def layer_param_bytes(p: Dict[str, Any]) -> int:
     return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# Layer spans: partial-stack configs, params and request-state split/merge
+# ---------------------------------------------------------------------------
+
+def even_spans(n_layers: int, k: int) -> List[Tuple[int, int]]:
+    """Partition [0, n_layers) into ``k`` contiguous near-equal spans."""
+    assert 1 <= k <= n_layers, (k, n_layers)
+    cuts = [round(i * n_layers / k) for i in range(k + 1)]
+    return [(cuts[i], cuts[i + 1]) for i in range(k)]
+
+
+def span_config(cfg: ModelConfig, start: int, end: int) -> ModelConfig:
+    """A ModelConfig describing layers [start, end) of ``cfg``'s stack.
+
+    The span's block pattern is the exact slice of the full stack's block
+    kinds (one repeat, no remainder), so every grouped-layout consumer —
+    ``transformer.init_cache``/``init_paged_cache``/``apply``, the paged
+    kvcache surgery — works on the span unchanged.  Embedding/unembedding
+    stay in the config; partial-stack execution skips them via
+    ``apply(..., hidden_in/hidden_out)``."""
+    assert 0 <= start < end <= cfg.n_layers, (start, end, cfg.n_layers)
+    blocks = cfg.blocks()[start:end]
+    return dataclasses.replace(
+        cfg, name=f"{cfg.name}[{start}:{end}]", n_layers=end - start,
+        block_pattern=tuple(blocks))
+
+
+def span_params(cfg: ModelConfig, params: Dict[str, Any], start: int,
+                end: int) -> Dict[str, Any]:
+    """Parameters for the [start, end) span in the span config's grouped
+    layout.  Embedding/out-norm (and unembedding) ride along on every span —
+    they are the shared head/tail the first/last span applies; per-layer
+    weights are only the span's own (the migration payload)."""
+    scfg = span_config(cfg, start, end)
+    out: Dict[str, Any] = {"embed": params["embed"],
+                           "out_norm": params["out_norm"]}
+    if "unembed" in params:
+        out["unembed"] = params["unembed"]
+    out.update(restack_layers(scfg, unstack_layers(cfg, params)[start:end]))
+    return out
+
+
+def _layers_n_blocks(layers: Sequence[Dict[str, Any]]) -> Optional[int]:
+    """Pages carried by a per-layer state list, or None if every layer is
+    dense.  A per-layer attention state's ``pos`` leaf is ``(clen,)`` in
+    the dense layout and ``(n_blocks, block_size)`` in the paged wire
+    format — the rank disambiguates without any config plumbing."""
+    for ls in layers:
+        if isinstance(ls, dict) and "pos" in ls and ls["pos"].ndim == 2:
+            return int(ls["pos"].shape[0])
+    return None
+
+
+def _base_config(cfg: ModelConfig,
+                 base: Tuple[int, int]) -> ModelConfig:
+    return cfg if base == (0, cfg.n_layers) else span_config(cfg, *base)
+
+
+def split_state_spans(cfg: ModelConfig, st: Dict[str, Any],
+                      bounds: Sequence[Tuple[int, int]],
+                      base: Optional[Tuple[int, int]] = None
+                      ) -> List[Dict[str, Any]]:
+    """Split one request state (dense or paged wire format) into per-span
+    states matching each span config's grouped layout.  ``bounds`` are
+    absolute layer indices; ``base`` names the span ``st`` itself covers
+    (default: the whole stack).  ``length`` is copied onto every part;
+    ``n_blocks`` only onto parts that actually carry paged leaves (a
+    pure-recurrent or ring-only span ships dense)."""
+    base = (0, cfg.n_layers) if base is None else tuple(base)
+    layers = unstack_cache(_base_config(cfg, base), st)
+    parts: List[Dict[str, Any]] = []
+    for a, b in bounds:
+        span_layers = layers[a - base[0]:b - base[0]]
+        part = restack_cache(span_config(cfg, a, b), span_layers)
+        part["length"] = st["length"]
+        nb = _layers_n_blocks(span_layers)
+        if nb is not None:
+            part["n_blocks"] = nb
+        parts.append(part)
+    return parts
+
+
+def merge_state_spans(cfg: ModelConfig, parts: Sequence[Dict[str, Any]],
+                      bounds: Sequence[Tuple[int, int]]) -> Dict[str, Any]:
+    """Inverse of ``split_state_spans``: per-span request states back into
+    one state covering the contiguous union of ``bounds`` (the whole stack
+    when the bounds partition it — the universal hand-off wire format), so
+    span fleets interoperate with monolithic engines."""
+    assert len(parts) == len(bounds)
+    for (_, b0), (a1, _) in zip(bounds, bounds[1:]):
+        assert b0 == a1, f"bounds not contiguous: {bounds}"
+    layers: List[Dict[str, Any]] = []
+    for part, (a, b) in zip(parts, bounds):
+        layers.extend(unstack_cache(span_config(cfg, a, b), part))
+    out = restack_cache(_base_config(cfg, (bounds[0][0], bounds[-1][1])),
+                        layers)
+    out["length"] = parts[0]["length"]
+    nb = _layers_n_blocks(layers)
+    if nb is not None:
+        out["n_blocks"] = nb
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -49,12 +49,16 @@ class LoadReport:
 
     ``compute_frac``/``memory_frac`` are the C/C_max and M/M_max terms;
     ``cached_prefix_tokens`` (leading-block hash -> cached tokens) is the
-    locality signal the prefix-aware baseline router keys on."""
+    locality signal the prefix-aware baseline router keys on.
+    ``layer_span`` identifies a partial-stack (layer-span) engine — its
+    fractions are already scaled by the span's share of the stack, so span
+    stages and full instances compare on one utilization axis (§4.1)."""
     compute_frac: float
     memory_frac: float
     queue_len: int
     cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
         default_factory=dict)
+    layer_span: Optional[Tuple[int, int]] = None
 
     @property
     def load(self) -> float:               # Eq. 37
@@ -153,3 +157,12 @@ def load_skew(instances: Sequence[InstanceLoad]) -> float:
     """max−min utilization gap — the imbalance metric of Fig. 2a."""
     loads = [p.load for p in instances]
     return max(loads) - min(loads)
+
+
+def utilization_gap(utils: Dict[str, float]) -> float:
+    """max−min over a device→utilization snapshot — the Δ the Algorithm 1
+    controller drives down (Eq. 33/35).  0 for degenerate fleets."""
+    if len(utils) < 2:
+        return 0.0
+    vals = list(utils.values())
+    return max(vals) - min(vals)

@@ -461,12 +461,15 @@ def paged_state_to_dense(ps: RequestState, block_size: int,
     }
 
 
-def layer_transfer_schedule(st: RequestState) -> List[Tuple[int, int]]:
+def layer_transfer_schedule(st: RequestState,
+                            base_layer: int = 0) -> List[Tuple[int, int]]:
     """Ordered per-layer (layer_index, nbytes) transfer schedule of a
     hand-off payload, in stack execution order (scan over repeats, pattern
     positions within a repeat, remainder layers last).  This is the wire
     schedule of the §4.2 layer-wise overlapped transmission; cost it with
-    ``core.analytical.overlapped_schedule_time``."""
+    ``core.analytical.overlapped_schedule_time``.  ``base_layer`` offsets
+    the indices for *span* states (layer_migration.split_state_spans), so
+    a migrated span's schedule reports absolute stack positions."""
     sched: List[Tuple[int, int]] = []
     groups = tuple(st["groups"])
     n_rep = 0
@@ -478,8 +481,8 @@ def layer_transfer_schedule(st: RequestState) -> List[Tuple[int, int]]:
                  // max(n_rep, 1) for g in groups]
         for r in range(n_rep):
             for gi, nbytes in enumerate(per_g):
-                sched.append((r * len(groups) + gi, nbytes))
-    base = n_rep * len(groups)
+                sched.append((base_layer + r * len(groups) + gi, nbytes))
+    base = base_layer + n_rep * len(groups)
     for i, g in enumerate(st["rem"]):
         sched.append((base + i, sum(a.size * a.dtype.itemsize
                                     for a in jax.tree.leaves(g)

@@ -281,6 +281,8 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
           logits_slice: str = "all",
           logits_at: Optional[jax.Array] = None,
           paged_kernel: bool = False,
+          hidden_in: bool = False,
+          hidden_out: bool = False,
           ) -> Tuple[jax.Array, Optional[Cache], Dict[str, jax.Array]]:
     """Run the stack.
 
@@ -292,9 +294,18 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     (models.kvcache): decode gathers KV pages through the tables and
     scatters the new token into its page (paged_kernel=True routes the
     gathered pages through the split-KV Pallas kernel).
+
+    Partial-stack (layer-span) execution: ``hidden_in=True`` means
+    ``tokens`` is the (B, S, d_model) residual stream handed off by the
+    previous span — embedding (and the hybrid-family embed scaling) is
+    skipped.  ``hidden_out=True`` returns the raw residual stream
+    (B, S, d_model) in the logits slot — no out-norm / unembedding, and
+    ``logits_slice``/``logits_at`` are ignored — so the next span can
+    resume exactly where this one stopped.  Chaining spans that partition
+    the stack reproduces the monolithic forward op-for-op.
     """
     pat, n_rep, rem = _group_shapes(cfg)
-    b, s = tokens.shape
+    b, s = tokens.shape[:2]
     block_tables = None
     if cache is not None and "block_tables" in cache:
         assert mode == "decode", "paged caches serve the decode path only"
@@ -306,10 +317,14 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
                                      (b, s))
     compute_dtype = params["out_norm"].dtype    # norms are never quantized
-    embed = Q.dequant(params["embed"], compute_dtype)
-    x = embed[tokens].astype(embed.dtype)
-    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.family.value in (
-        "hybrid",) else x  # gemma-style embedding scaling for recurrentgemma
+    if hidden_in:
+        x = tokens.astype(compute_dtype)        # upstream span's residual
+    else:
+        embed = Q.dequant(params["embed"], compute_dtype)
+        x = embed[tokens].astype(embed.dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) \
+            if cfg.family.value in ("hybrid",) else x
+        # gemma-style embedding scaling for recurrentgemma
 
     loads = []
 
@@ -379,16 +394,19 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
         new_rem_states.append(ns if ns is not None else {})
         loads.append(rl)
 
-    x = L.rms_norm(x, params["out_norm"], cfg.rms_eps)
-    if logits_slice == "last":
-        x = x[:, -1, :] if logits_at is None \
-            else x[jnp.arange(b), logits_at, :]
-    if cfg.tie_embeddings:
-        logits = jnp.einsum("...d,vd->...v", x,
-                            Q.dequant(params["embed"], compute_dtype))
+    if hidden_out:
+        logits = x          # raw residual stream for the next span
     else:
-        logits = jnp.einsum("...d,dv->...v", x,
-                            Q.dequant(params["unembed"], compute_dtype))
+        x = L.rms_norm(x, params["out_norm"], cfg.rms_eps)
+        if logits_slice == "last":
+            x = x[:, -1, :] if logits_at is None \
+                else x[jnp.arange(b), logits_at, :]
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", x,
+                                Q.dequant(params["embed"], compute_dtype))
+        else:
+            logits = jnp.einsum("...d,dv->...v", x,
+                                Q.dequant(params["unembed"], compute_dtype))
 
     new_cache = None
     if cache is not None:

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import analytical as A
+from ..core import layer_migration as LM
 from ..core.kvstore import GlobalKVStore, chain_hashes
 from ..core.scheduling import LoadReport
 from ..models import kvcache as KC
@@ -94,19 +95,36 @@ def _paged_page_len(cfg: ModelConfig, ecfg: EngineConfig) -> Optional[int]:
 
 @functools.lru_cache(maxsize=None)
 def _jit_apply(cfg: ModelConfig, mode: str, prefix_aware: bool,
-               paged_kernel: bool = False):
+               paged_kernel: bool = False, hidden_in: bool = False,
+               hidden_out: bool = False):
     """Jitted forward shared across engine instances.
 
     Keyed on the (hashable, frozen) ModelConfig so re-rolling an instance
     between the prefill and decode roles reuses compiled executables instead
-    of paying a fresh trace+compile per engine object.  The cache is
-    donated: decode updates its pools in place instead of copying them
-    every step (callers never reuse the cache they pass in)."""
+    of paying a fresh trace+compile per engine object.  Span engines key on
+    their span config plus the partial-stack direction flags (``hidden_in``
+    consumes the previous span's residual stream, ``hidden_out`` emits one
+    for the next).  The cache is donated: decode updates its pools in place
+    instead of copying them every step (callers never reuse the cache they
+    pass in)."""
     return jax.jit(functools.partial(T.apply, cfg, mode=mode,
                                      logits_slice="last",
                                      prefix_aware=prefix_aware,
-                                     paged_kernel=paged_kernel),
+                                     paged_kernel=paged_kernel,
+                                     hidden_in=hidden_in,
+                                     hidden_out=hidden_out),
                    donate_argnames=("cache",))
+
+
+def _span_view(cfg: ModelConfig, params,
+               layer_span: Optional[Tuple[int, int]]):
+    """(span, span_cfg, span_params): identity for a full-stack engine, a
+    span-sliced config + restacked per-layer weights otherwise."""
+    span = (0, cfg.n_layers) if layer_span is None else tuple(layer_span)
+    if span == (0, cfg.n_layers):
+        return span, cfg, params
+    return span, LM.span_config(cfg, *span), LM.span_params(cfg, params,
+                                                            *span)
 
 
 # Jitted page movers shared by every engine: XLA specializes per
@@ -120,15 +138,30 @@ _page_reset = jax.jit(KC.reset_page_positions,
 
 
 class PrefillEngine:
-    """One prefill instance."""
+    """One prefill instance.
+
+    ``layer_span=(a, b)`` makes this a *partial-stack* instance hosting
+    layers [a, b): params, caches and the jitted forward are span-sliced,
+    and a chain of span engines covering the stack (serving/span.py's
+    ``PrefillPipeline``) reproduces the monolithic prefill exactly.  Pad /
+    bucket / wire-format decisions always follow the FULL stack so chained
+    stages agree and the hand-off state stays in the universal format.
+    Span engines hold no store (store payloads are full-stack)."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 store: Optional[GlobalKVStore] = None, name: str = "prefill0"):
+                 store: Optional[GlobalKVStore] = None, name: str = "prefill0",
+                 layer_span: Optional[Tuple[int, int]] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
-        self.store = store if KC.prefix_cacheable(cfg) else None
+        self.layer_span, self.scfg, self.sparams = \
+            _span_view(cfg, params, layer_span)
+        full = self.layer_span == (0, cfg.n_layers)
+        self.store = store if full and KC.prefix_cacheable(cfg) else None
         self.name = name
+        # set by PrefillPipeline: downstream span engines this one chains
+        # its residual stream into (wave by wave, inside run_batch)
+        self._followers: List["PrefillEngine"] = []
         self.queue: Deque[Request] = deque()   # routed, not yet prefilled
         self.tokens_prefilled = 0         # suffix tokens actually computed
         self.n_prefilled = 0
@@ -150,8 +183,17 @@ class PrefillEngine:
             A.prefill_time(cfg, ecfg.block_size, ecfg.hw)
             / max(cfg.n_layers, 1) if ecfg.hw is not None else None)
         self.fetch_latency_s = 0.0    # modelled (overlapped when hw set)
-        self._prefill = _jit_apply(cfg, "prefill", False)
-        self._prefill_inc = _jit_apply(cfg, "prefill", True)
+        self._prefill = _jit_apply(self.scfg, "prefill", False)
+        self._prefill_inc = _jit_apply(self.scfg, "prefill", True)
+
+    def rebase_span(self, layer_span: Tuple[int, int]) -> None:
+        """Re-slice this prefill stage to a different contiguous span
+        (layer-level migration).  Prefill holds no resident serving state,
+        so only the span weights and jitted forwards rebuild."""
+        self.layer_span, self.scfg, self.sparams = \
+            _span_view(self.cfg, self.params, layer_span)
+        self._prefill = _jit_apply(self.scfg, "prefill", False)
+        self._prefill_inc = _jit_apply(self.scfg, "prefill", True)
 
     # -- queue / load ----------------------------------------------------
     def enqueue(self, req: Request) -> None:
@@ -167,7 +209,8 @@ class PrefillEngine:
         queued = sum(r.prompt_len for r in self.queue)
         return LoadReport(compute_frac=min(queued / budget, 1.0),
                           memory_frac=0.0, queue_len=len(self.queue),
-                          cached_prefix_tokens=dict(self._leading))
+                          cached_prefix_tokens=dict(self._leading),
+                          layer_span=self.layer_span)
 
     # -- prefill ---------------------------------------------------------
     def _match(self, tokens: np.ndarray,
@@ -270,8 +313,13 @@ class PrefillEngine:
 
         Returns ``[(request_state, last_logits_row)]`` aligned with
         ``reqs`` — request states in the paged wire format when the arch
-        supports it (see models.kvcache).
+        supports it (see models.kvcache).  With chained followers (span
+        pipeline) every wave's residual stream flows through each span in
+        turn and the per-span states merge back into the full-stack wire
+        format, so callers never see the partitioning.
         """
+        assert self.layer_span[0] == 0, \
+            "mid-stack span engines run only as PrefillPipeline followers"
         for req in reqs:
             req.advance(Phase.PREFILL)
         toks = [np.asarray(r.prompt, np.int32) for r in reqs]
@@ -321,7 +369,7 @@ class PrefillEngine:
                                   + wave_frames.shape[1:],
                                   wave_frames.dtype)])
                 n_rows = padded_rows
-            cache = T.init_cache(self.cfg, n_rows, self.ecfg.max_len,
+            cache = T.init_cache(self.scfg, n_rows, self.ecfg.max_len,
                                  dtype=self.params["embed"].dtype)
             matched_of: Dict[int, int] = {}
             for row, i in enumerate(chosen):
@@ -341,13 +389,34 @@ class PrefillEngine:
                 s_i = toks[i][matched_of[i]:]
                 suffix[row, : len(s_i)] = s_i
                 slens[row] = len(s_i)
-            fn = self._prefill_inc if hit else self._prefill
             self.prefill_shapes.add((n_rows, blen, hit))
-            logits, cache, _ = fn(self.params, jnp.asarray(suffix),
-                                  cache=cache, frames=wave_frames,
-                                  logits_at=jnp.asarray(slens - 1))
+            chain = [self] + self._followers
+            caches = [cache] + [
+                T.init_cache(e.scfg, n_rows, self.ecfg.max_len,
+                             dtype=e.params["embed"].dtype)
+                for e in self._followers]
+            la = jnp.asarray(slens - 1)
+            x: jax.Array = jnp.asarray(suffix)
+            for k, e in enumerate(chain):
+                if len(chain) == 1:
+                    fn = self._prefill_inc if hit else self._prefill
+                else:
+                    # partial-stack wave: stage k consumes the previous
+                    # span's residual stream and (except the last) emits one
+                    fn = _jit_apply(e.scfg, "prefill", False, False,
+                                    hidden_in=k > 0,
+                                    hidden_out=k < len(chain) - 1)
+                x, caches[k], _ = fn(e.sparams, x, cache=caches[k],
+                                     frames=wave_frames, logits_at=la)
+            logits = x
             for row, i in enumerate(chosen):
-                st = KC.extract_request_state(cache, row)
+                if len(chain) == 1:
+                    st = KC.extract_request_state(caches[0], row)
+                else:
+                    st = LM.merge_state_spans(
+                        self.cfg,
+                        [KC.extract_request_state(c, row) for c in caches],
+                        [e.layer_span for e in chain])
                 # the cache advanced by the padded length; the request's
                 # true length is what decode must resume from
                 st["length"] = jnp.asarray(
@@ -381,20 +450,41 @@ class PrefillEngine:
 
 class DecodeEngine:
     """One decode instance: slot-based continuous batching over the paged
-    block pool (dense row fallback for archs with no pageable KV)."""
+    block pool (dense row fallback for archs with no pageable KV).
+
+    ``layer_span=(a, b)`` makes this a *partial-stack* stage hosting layers
+    [a, b): its cache / block pool / jitted step cover only the span, and a
+    ``serving/span.py`` ``DecodePipeline`` chains stages so the batch's
+    residual stream flows through the whole stack each step.  A stage can
+    be live-re-sliced to a different span (``rebase_span``) — the execution
+    half of §4.1 layer-level migration."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 name: str = "decode0"):
+                 name: str = "decode0",
+                 layer_span: Optional[Tuple[int, int]] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.name = name
-        self.page_len = _paged_page_len(cfg, ecfg)
+        self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
+        self.next_token = np.zeros((ecfg.max_batch,), np.int32)
+        # host-side mirror of active rows' cache lengths: keeps the hot
+        # hand-off/control paths free of device syncs
+        self._slot_len = np.zeros((ecfg.max_batch,), np.int64)
+        self.tokens_decoded = 0
+        self._set_span(layer_span)
+
+    def _set_span(self, layer_span: Optional[Tuple[int, int]]) -> None:
+        """(Re-)derive span machinery + blank serving state for the span."""
+        ecfg = self.ecfg
+        self.layer_span, self.scfg, self.sparams = \
+            _span_view(self.cfg, self.params, layer_span)
+        self.page_len = _paged_page_len(self.scfg, ecfg)
         self.paged = self.page_len is not None
         if self.paged:
-            self.cache = T.init_paged_cache(cfg, ecfg.max_batch,
+            self.cache = T.init_paged_cache(self.scfg, ecfg.max_batch,
                                             ecfg.max_len, ecfg.block_size,
-                                            dtype=params["embed"].dtype)
+                                            dtype=self.params["embed"].dtype)
             self._nb_slot = self.page_len // ecfg.block_size
             n_phys = 1 + ecfg.max_batch * self._nb_slot
             # host-side mirrors: block tables + free list (block 0 is the
@@ -406,16 +496,19 @@ class DecodeEngine:
             self._slot_blocks: List[List[int]] = \
                 [[] for _ in range(ecfg.max_batch)]
         else:
-            self.cache = T.init_cache(cfg, ecfg.max_batch, ecfg.max_len,
-                                      dtype=params["embed"].dtype)
-        self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
-        self.next_token = np.zeros((ecfg.max_batch,), np.int32)
-        # host-side mirror of active rows' cache lengths: keeps the hot
-        # hand-off/control paths free of device syncs
-        self._slot_len = np.zeros((ecfg.max_batch,), np.int64)
-        self.tokens_decoded = 0
-        self._step = _jit_apply(cfg, "decode", False,
+            self.cache = T.init_cache(self.scfg, ecfg.max_batch, ecfg.max_len,
+                                      dtype=self.params["embed"].dtype)
+        self._step = _jit_apply(self.scfg, "decode", False,
                                 ecfg.decode_kernel and self.paged)
+
+    def rebase_span(self, layer_span: Tuple[int, int]) -> None:
+        """Re-slice this stage to a different contiguous span (layer-level
+        migration).  The serving state does not survive the re-slice — the
+        DecodePipeline drains every slot first and re-adopts the split
+        states afterwards, so the call itself only rebuilds weights, blank
+        pools and the jitted step for the new span."""
+        assert self.active == 0, "drain slots before re-slicing the span"
+        self._set_span(layer_span)
 
     # ------------------------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -437,13 +530,25 @@ class DecodeEngine:
         """Resident KV across active slots (host-side, no device sync)."""
         return int(self._slot_len.sum())
 
+    @property
+    def span_frac(self) -> float:
+        """This stage's share of the stack — 1.0 for full-stack engines."""
+        a, b = self.layer_span
+        return (b - a) / max(self.cfg.n_layers, 1)
+
     def load_report(self) -> LoadReport:
         """Occupancy as C/C_max (every step touches every active slot) and
-        resident KV against the full cache footprint as M/M_max."""
+        resident KV against the full cache footprint as M/M_max.  Span
+        stages scale both by their share of the stack (Eq. 23–26: per-layer
+        compute and KV footprints are additive in hosted layers), so a
+        stage hosting more layers reads hotter than its siblings and the
+        Algorithm 1 controller can rebalance the boundary."""
         cap = max(self.ecfg.max_batch, 1)
         mem = self.kv_tokens / max(self.ecfg.max_batch * self.ecfg.max_len, 1)
-        return LoadReport(compute_frac=self.active / cap,
-                          memory_frac=min(mem, 1.0), queue_len=self.active)
+        return LoadReport(compute_frac=self.active / cap * self.span_frac,
+                          memory_frac=min(mem, 1.0) * self.span_frac,
+                          queue_len=self.active,
+                          layer_span=self.layer_span)
 
     # -- slot transfer ---------------------------------------------------
     def _release_blocks(self, slot: int) -> None:
@@ -456,13 +561,16 @@ class DecodeEngine:
         self._bt_dirty = True
 
     def adopt(self, req: Request, state: Dict[str, Any],
-              next_token: int) -> int:
+              next_token: int, slot: Optional[int] = None) -> int:
         """Place an in-flight request's state into a free slot (migration
         receive path: no token is emitted by the move itself).  Paged
         states land as per-layer page copies into freshly allocated
-        blocks; dense states are converted first."""
-        slot = self.free_slot()
-        assert slot is not None, "decode engine full"
+        blocks; dense states are converted first.  ``slot`` pins the
+        target row — pipeline stages must keep identical slot layouts."""
+        if slot is None:
+            slot = self.free_slot()
+        assert slot is not None and self.slots[slot] is None, \
+            "decode engine full"
         if self.paged:
             if "n_blocks" not in state:
                 state = KC.dense_state_to_paged(state, self.ecfg.block_size)
@@ -517,39 +625,53 @@ class DecodeEngine:
                 if s is not None]
 
     # -- decode ----------------------------------------------------------
-    def step(self) -> List[Tuple[Request, int]]:
-        """One decode iteration for all active slots.  Returns finished."""
-        if self.active == 0:
-            return []
-        if self.paged:
-            # lazy page allocation: make sure every active slot owns the
-            # block its next token lands in (ring wraps reuse old pages)
-            fresh: List[int] = []
-            for i, s in enumerate(self.slots):
-                if s is None:
-                    continue
-                j = (int(self._slot_len[i]) % self.page_len) \
-                    // self.ecfg.block_size
-                if self._bt[i, j] < 0:
-                    assert self._free, "decode block pool exhausted"
-                    pb = self._free.pop()
-                    self._bt[i, j] = pb
-                    self._slot_blocks[i].append(pb)
-                    fresh.append(pb)
-            if fresh:
-                # recycled blocks carry the previous owner's positions —
-                # invalidate them (in place, donated) before anything
-                # gathers through them
-                self.cache = _page_reset(
-                    self.cache, jnp.asarray(np.asarray(fresh, np.int32)),
-                    block_size=self.ecfg.block_size)
-            if fresh or self._bt_dirty:
-                self.cache["block_tables"] = jnp.asarray(self._bt)
-                self._bt_dirty = False
-        toks = jnp.asarray(self.next_token[:, None])
-        logits, self.cache, _ = self._step(self.params, toks,
-                                           cache=self.cache)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    def _prepare_pages(self) -> None:
+        """Pre-forward page bookkeeping: make sure every active slot owns
+        the block its next token lands in (ring wraps reuse old pages) and
+        the device block table is fresh."""
+        if not self.paged:
+            return
+        fresh: List[int] = []
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            j = (int(self._slot_len[i]) % self.page_len) \
+                // self.ecfg.block_size
+            if self._bt[i, j] < 0:
+                assert self._free, "decode block pool exhausted"
+                pb = self._free.pop()
+                self._bt[i, j] = pb
+                self._slot_blocks[i].append(pb)
+                fresh.append(pb)
+        if fresh:
+            # recycled blocks carry the previous owner's positions —
+            # invalidate them (in place, donated) before anything
+            # gathers through them
+            self.cache = _page_reset(
+                self.cache, jnp.asarray(np.asarray(fresh, np.int32)),
+                block_size=self.ecfg.block_size)
+        if fresh or self._bt_dirty:
+            self.cache["block_tables"] = jnp.asarray(self._bt)
+            self._bt_dirty = False
+
+    def _forward_step(self, x: jax.Array, *, hidden_in: bool = False,
+                      hidden_out: bool = False) -> jax.Array:
+        """One jitted forward over this stage's span.  ``x`` is the token
+        column (first stage) or the upstream stage's residual stream;
+        returns last-token logits, or the residual stream when
+        ``hidden_out`` (pipeline hand-off to the next stage)."""
+        if hidden_in or hidden_out:
+            fn = _jit_apply(self.scfg, "decode", False,
+                            self.ecfg.decode_kernel and self.paged,
+                            hidden_in=hidden_in, hidden_out=hidden_out)
+        else:
+            fn = self._step
+        out, self.cache, _ = fn(self.sparams, x, cache=self.cache)
+        return out
+
+    def commit(self, nxt: np.ndarray) -> List[Tuple[Request, int]]:
+        """Post-forward bookkeeping: append sampled tokens, retire finished
+        requests, free their pages.  Returns finished (request, slot)."""
         finished = []
         for i, req in enumerate(self.slots):
             if req is None:
@@ -579,3 +701,29 @@ class DecodeEngine:
                 if self.paged:
                     self._release_blocks(i)
         return finished
+
+    def follow_commit(self, nxt: np.ndarray,
+                      finished_slots: Set[int]) -> None:
+        """Mirror a pipeline lead's ``commit`` on a follower stage: same
+        per-slot advancement and slot retirement, but no Request mutation —
+        the lead owns the request lifecycle and token streams."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if i in finished_slots:
+                self.slots[i] = None
+                self._slot_len[i] = 0
+                if self.paged:
+                    self._release_blocks(i)
+                continue
+            self.next_token[i] = int(nxt[i])
+            self._slot_len[i] += 1
+
+    def step(self) -> List[Tuple[Request, int]]:
+        """One decode iteration for all active slots.  Returns finished."""
+        if self.active == 0:
+            return []
+        self._prepare_pages()
+        logits = self._forward_step(jnp.asarray(self.next_token[:, None]))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        return self.commit(nxt)

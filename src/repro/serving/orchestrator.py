@@ -13,11 +13,17 @@ wires the paper's three mechanisms together:
   (the ``live_instance_loads`` adapter), then prefilled in dense batches.
 * **Algorithm 1 migration (§4.4.1)** — every ``control_interval`` steps the
   per-instance ``DeviceLoad``s feed ``core.migration.MigrationController``;
-  an emitted LAYER action *re-rolls* an underloaded instance into the
-  overloaded tier's role (the executable form of Fig. 3 — all layers of the
-  starved role's replica materialize on the idle device), evacuating any
-  resident decode KV to peers first.  KV_HEADS actions rebalance in-flight
-  requests' KV between decode instances (attention-level migration).
+  an emitted LAYER action between two stages of a span-partitioned decode
+  pipeline (``decode_split > 1``) moves just ``amount`` boundary layers —
+  weights plus the active slots' per-layer KV pages — between the stages
+  (the true §4.1 span migration, Eq. 5), costed per migrated layer with
+  the Eq. 4/11 overlapped schedule.  Between full-stack members a LAYER
+  action falls back to *re-rolling* the underloaded instance into the
+  overloaded tier's role (the whole-instance approximation of Fig. 3),
+  evacuating any resident decode KV to peers first.  KV_HEADS actions
+  rebalance in-flight requests' KV between decode instances
+  (attention-level migration) — across pipelines too, since every
+  hand-off speaks the full-stack wire format.
 
 Per-step order: route pending → batched prefill + KV hand-off into decode
 slots → decode step on every decode instance → (periodically) control
@@ -37,15 +43,17 @@ import jax.numpy as jnp
 
 from ..core import analytical as A
 from ..core.kvstore import GlobalKVStore, leading_block_key
+from ..core.layer_migration import even_spans
 from ..core.migration import (ControllerConfig, DeviceLoad, MigrationAction,
                               MigrationController, MigrationKind)
 from ..core.scheduling import (LoadAwareRouter, PrefixAwareRouter,
                                RequestInfo, RoundRobinRouter,
-                               live_instance_loads)
+                               live_instance_loads, utilization_gap)
 from ..models import kvcache as KC
 from ..models.config import ModelConfig
 from .engine import DecodeEngine, EngineConfig, PrefillEngine
 from .request import Metrics, Phase, Request
+from .span import DecodePipeline
 
 ROLE_PREFILL = "prefill"
 ROLE_DECODE = "decode"
@@ -76,12 +84,20 @@ class OrchestratorConfig:
     prefill_chunk: int = 4         # max requests prefilled per member/step
     min_prefill: int = 1           # role floors: the serving path must exist
     min_decode: int = 1
+    # layer-span partitioning of the decode tier: each of the n_decode
+    # logical decode instances becomes a pipeline of this many span stages
+    # (one fleet member per stage).  LAYER actions between adjacent stages
+    # move boundary layers instead of re-rolling whole instances.
+    decode_split: int = 1
 
 
 class _Member:
     """One fleet slot: a named device currently playing one role.
 
     Exactly one of ``prefill``/``decode`` is live; a re-roll swaps them.
+    A member may also be one *stage* of a span-partitioned decode pipeline
+    (``pipe``/``stage`` set): it then hosts a partial-stack engine and
+    LAYER migrations re-slice its span rather than its role.
     Token counters live here (not on the engine) so they survive re-rolls.
     """
 
@@ -90,6 +106,8 @@ class _Member:
         self.role = role
         self.prefill: Optional[PrefillEngine] = None
         self.decode: Optional[DecodeEngine] = None
+        self.pipe: Optional[DecodePipeline] = None
+        self.stage: int = 0
         self.rerolled = False          # role changed at least once
         self.tokens_prefilled = 0
         self.n_prefilled = 0
@@ -99,6 +117,12 @@ class _Member:
     @property
     def engine(self):
         return self.prefill if self.role == ROLE_PREFILL else self.decode
+
+    @property
+    def unit(self):
+        """The schedulable decode unit this member contributes to: its
+        pipeline when span-partitioned, else its own engine."""
+        return self.pipe if self.pipe is not None else self.decode
 
     def load_report(self):
         return self.engine.load_report()
@@ -123,15 +147,37 @@ class Orchestrator:
         self.store = (GlobalKVStore(block_size=self.ecfg.block_size)
                       if ocfg.global_store else None)
         self.router = _make_router(ocfg.router)
+        if ocfg.decode_split < 1 or ocfg.decode_split > cfg.n_layers:
+            raise ValueError(f"decode_split {ocfg.decode_split} must be in "
+                             f"[1, {cfg.n_layers}]")
         self.members: List[_Member] = []
         for i in range(ocfg.n_prefill):
             m = _Member(f"prefill{i}", ROLE_PREFILL)
             m.prefill = self._new_prefill(m.name)
             self.members.append(m)
+        self.decode_pipes: List[DecodePipeline] = []
         for i in range(ocfg.n_decode):
-            m = _Member(f"decode{i}", ROLE_DECODE)
-            m.decode = DecodeEngine(cfg, params, self.ecfg, name=m.name)
-            self.members.append(m)
+            if ocfg.decode_split == 1:
+                m = _Member(f"decode{i}", ROLE_DECODE)
+                m.decode = DecodeEngine(cfg, params, self.ecfg, name=m.name)
+                self.members.append(m)
+                continue
+            # one pipeline of decode_split span stages, one member each
+            bounds = even_spans(cfg.n_layers, ocfg.decode_split)
+            stages = []
+            for j, span in enumerate(bounds):
+                m = _Member(f"decode{i}.{j}", ROLE_DECODE)
+                m.decode = DecodeEngine(cfg, params, self.ecfg,
+                                        name=m.name, layer_span=span)
+                m.stage = j
+                stages.append(m)
+                self.members.append(m)
+            pipe = DecodePipeline(cfg, params, self.ecfg, bounds,
+                                  name=f"decode{i}",
+                                  engines=[m.decode for m in stages])
+            for m in stages:
+                m.pipe = pipe
+            self.decode_pipes.append(pipe)
         self._by_name = {m.name: m for m in self.members}
         self.controller = (MigrationController(ocfg.controller,
                                                self._migration_cost)
@@ -140,6 +186,10 @@ class Orchestrator:
         self.metrics = Metrics()
         self.migration_log: List[MigrationAction] = []
         self.util_trace: List[Dict[str, float]] = []
+        # (gap_before, gap_after) per control cycle that applied actions —
+        # the hot-tier Δ the controller is supposed to drive down (Eq. 35)
+        self.control_trace: List[tuple] = []
+        self.span_move_log: List[Dict[str, int]] = []
         # per-layer overlapped transfer schedule accounting: modelled
         # hand-off seconds with and without §4.2 layer-wise overlap
         self.n_handoffs = 0
@@ -161,6 +211,25 @@ class Orchestrator:
     def decode_members(self) -> List[_Member]:
         return [m for m in self.members if m.role == ROLE_DECODE]
 
+    def decode_units(self) -> List:
+        """Schedulable decode targets: span pipelines count once (their
+        stages share one slot layout), full-stack engines count as
+        themselves."""
+        units, seen = [], set()
+        for m in self.decode_members():
+            u = m.unit
+            if id(u) not in seen:
+                seen.add(id(u))
+                units.append(u)
+        return units
+
+    def _unit_member(self, unit) -> _Member:
+        """The member that owns a unit's counters (a pipeline's lead
+        stage, or the engine's own member)."""
+        name = unit.lead.name if isinstance(unit, DecodePipeline) \
+            else unit.name
+        return self._by_name[name]
+
     @property
     def fleet(self) -> Dict[str, str]:
         return {m.name: m.role for m in self.members}
@@ -168,7 +237,7 @@ class Orchestrator:
     def in_flight(self) -> int:
         return (len(self.pending)
                 + sum(len(m.prefill.queue) for m in self.prefill_members())
-                + sum(m.decode.active for m in self.decode_members()))
+                + sum(u.active for u in self.decode_units()))
 
     def _now(self) -> float:
         if self._t0 is None:
@@ -226,7 +295,7 @@ class Orchestrator:
         self._route_pending()
         # prefill is admission-controlled by free decode slots: never
         # produce KV that has nowhere to land
-        free = sum(m.decode.free_slots for m in self.decode_members())
+        free = sum(u.free_slots for u in self.decode_units())
         for m in self.prefill_members():
             if free <= 0:
                 break
@@ -237,14 +306,13 @@ class Orchestrator:
             for req, st, logits in m.prefill.run_queued(n):
                 req.t_prefill_start = req.t_prefill_start or now
                 req.advance(Phase.TRANSFER)
-                # ties broken by member name so target selection is
+                # ties broken by unit name so target selection is
                 # deterministic across re-rolls and fleet orderings
-                tgt = min((d for d in self.decode_members()
-                           if d.decode.free_slots > 0),
-                          key=lambda d: (d.decode.active, d.decode.kv_tokens,
-                                         d.name))
+                tgt = min((u for u in self.decode_units()
+                           if u.free_slots > 0),
+                          key=lambda u: (u.active, u.kv_tokens, u.name))
                 self._account_handoff(req, st)
-                tgt.decode.insert(req, st, int(jnp.argmax(logits)))
+                tgt.insert(req, st, int(jnp.argmax(logits)))
                 req.t_first_token = self._now()
                 free -= 1
             # counters accumulate on the member (engines don't survive
@@ -253,13 +321,14 @@ class Orchestrator:
             m.n_prefilled += m.prefill.n_prefilled - before_n
             m.fetch_latency_s += m.prefill.fetch_latency_s - before_fetch
         finished: List[Request] = []
-        for m in self.decode_members():
-            before = m.decode.tokens_decoded
-            for req, _slot in m.decode.step():
+        for u in self.decode_units():
+            m = self._unit_member(u)
+            before = u.tokens_decoded
+            for req, _slot in u.step():
                 req.t_done = self._now()
                 self.metrics.record(req)
                 finished.append(req)
-            m.tokens_decoded += m.decode.tokens_decoded - before
+            m.tokens_decoded += u.tokens_decoded - before
         self._step_i += 1
         if self.controller is not None and \
                 self._step_i % self.ocfg.control_interval == 0:
@@ -296,22 +365,40 @@ class Orchestrator:
 
     def _control(self) -> List[MigrationAction]:
         loads = self._device_loads()
-        self.util_trace.append({d.device: d.utilization for d in loads})
+        utils = {d.device: d.utilization for d in loads}
+        self.util_trace.append(utils)
         acts = self.controller.plan(loads)
-        return [a for a in acts if self.apply_action(a)]
+        applied = [a for a in acts if self.apply_action(a)]
+        if applied:
+            after = {d.device: d.utilization
+                     for d in self._device_loads()}
+            self.control_trace.append((utilization_gap(utils),
+                                       utilization_gap(after)))
+        return applied
+
+    def _span_pair(self, src: _Member, dst: _Member
+                   ) -> Optional[DecodePipeline]:
+        """The pipeline owning src/dst iff they are adjacent span stages
+        of the same one (the only topology a live span move can serve)."""
+        if (src.pipe is not None and src.pipe is dst.pipe
+                and abs(src.stage - dst.stage) == 1):
+            return src.pipe
+        return None
 
     def _can_reroll(self, member: _Member, new_role: str) -> bool:
+        if member.pipe is not None:
+            return False       # pipeline stages re-slice spans, not roles
         if member.role == new_role:
             return False
         if member.role == ROLE_PREFILL and \
                 len(self.prefill_members()) <= self.ocfg.min_prefill:
             return False
         if member.role == ROLE_DECODE:
-            if len(self.decode_members()) <= self.ocfg.min_decode:
+            if len(self.decode_units()) <= self.ocfg.min_decode:
                 return False
             # resident KV must fit on the remaining decode peers
-            spare = sum(d.decode.free_slots for d in self.decode_members()
-                        if d is not member)
+            spare = sum(u.free_slots for u in self.decode_units()
+                        if u is not member.unit)
             if member.decode.active > spare:
                 return False
         return True
@@ -326,34 +413,67 @@ class Orchestrator:
         dst = self._by_name[d_u.device]
         gap = d_o.utilization - d_u.utilization
         if kind == MigrationKind.LAYER:
+            pipe = self._span_pair(src, dst)
+            if pipe is not None:
+                # true span move: bill only the boundary layers' weights +
+                # resident KV, layer-wise overlapped (Eq. 4/11)
+                a, b = src.decode.layer_span
+                n = min(amount, (b - a) - 1)
+                t_layer = A.decode_time_per_token(
+                    self.cfg, self.ecfg.max_len, self.ocfg.hw) \
+                    / max(self.cfg.n_layers, 1)
+                cost = max(A.span_migration_time(
+                    self.cfg, max(n, 1), kv_tokens=src.decode.kv_tokens,
+                    hw=self.ocfg.hw, t_layer_compute=t_layer), 1e-6)
+                if n <= 0:
+                    return 0.0, cost
+                # moving n layers closes ~n/span of the stage gap
+                return gap * n / max(b - a, 1), cost
             kv = dst.decode.kv_tokens if dst.role == ROLE_DECODE else 0
             cost = max(A.layer_migration_time(self.cfg, self.cfg.n_layers,
                                               kv_tokens=kv, hw=self.ocfg.hw),
                        1e-6)
-            if not self._can_reroll(dst, src.role):
+            # span stages never trade roles with anything outside their
+            # pipeline — pricing such a pair as a re-roll would make the
+            # controller plan actions apply_action must refuse
+            if src.pipe is not None or not self._can_reroll(dst, src.role):
                 return 0.0, cost
             return gap / 2.0, cost
-        # KV_HEADS: rebalance in-flight decode KV between two decoders
+        # KV_HEADS: rebalance in-flight decode KV between two decode units
+        su = src.unit if src.role == ROLE_DECODE else None
+        du = dst.unit if dst.role == ROLE_DECODE else None
         cost = max(A.attention_migration_time(
             self.cfg, amount,
-            kv_tokens=src.decode.kv_tokens if src.role == ROLE_DECODE else 0,
+            kv_tokens=su.kv_tokens if su is not None else 0,
             hw=self.ocfg.hw), 1e-6)
-        if (src.role != ROLE_DECODE or dst.role != ROLE_DECODE
-                or src.decode.active <= dst.decode.active + 1
-                or dst.decode.free_slots <= 0):
+        if (su is None or du is None or su is du
+                or su.active <= du.active + 1 or du.free_slots <= 0):
             return 0.0, cost
         return gap / 4.0, cost
 
     # -- action execution -------------------------------------------------
     def apply_action(self, act: MigrationAction) -> bool:
         """Execute one controller action against the live fleet.  Public so
-        hosts/tests can force a migration.  Returns True if applied."""
+        hosts/tests can force a migration.  Returns True if applied.
+
+        LAYER between adjacent stages of one decode pipeline = live span
+        move of ``act.amount`` boundary layers; LAYER between full-stack
+        members = whole-instance role re-roll."""
         src = self._by_name.get(act.src)
         dst = self._by_name.get(act.dst)
         if src is None or dst is None:
             return False
         if act.kind == MigrationKind.LAYER:
-            ok = self._reroll(dst, src.role)
+            pipe = self._span_pair(src, dst)
+            if pipe is not None:
+                res = pipe.move_span(src.stage, dst.stage, act.amount)
+                ok = res is not None
+                if ok:
+                    self.span_move_log.append(res)
+            elif src.pipe is None and dst.pipe is None:
+                ok = self._reroll(dst, src.role)
+            else:
+                ok = False     # span stages never trade roles with others
         else:
             ok = self._rebalance_decode(src, dst)
         if ok:
@@ -377,10 +497,10 @@ class Orchestrator:
             # decode -> prefill: evacuate resident KV to decode peers first
             # (the migrated layers' serving state moves with them)
             for req, st, tok in member.decode.drain():
-                tgt = min((d for d in self.decode_members()
-                           if d is not member and d.decode.free_slots > 0),
-                          key=lambda d: (d.decode.active, d.name))
-                tgt.decode.adopt(req, st, tok)
+                tgt = min((u for u in self.decode_units()
+                           if u is not member.unit and u.free_slots > 0),
+                          key=lambda u: (u.active, u.name))
+                tgt.adopt(req, st, tok)
             member.decode = None
             member.prefill = self._new_prefill(member.name)
         member.role = new_role
@@ -388,21 +508,26 @@ class Orchestrator:
         return True
 
     def _rebalance_decode(self, src: _Member, dst: _Member) -> bool:
-        """Attention-level migration: move half the slot excess src→dst."""
+        """Attention-level migration: move half the slot excess src→dst.
+        Units speak the full-stack wire format, so slots move freely
+        between pipelines (even with different span boundaries) and
+        full-stack engines."""
         if src.role != ROLE_DECODE or dst.role != ROLE_DECODE:
             return False
-        n = min((src.decode.active - dst.decode.active) // 2,
-                dst.decode.free_slots)
+        su, du = src.unit, dst.unit
+        if su is du:
+            return False
+        n = min((su.active - du.active) // 2, du.free_slots)
         if n <= 0:
             return False
         moved = 0
-        for slot, s in enumerate(src.decode.slots):
+        for slot, s in enumerate(su.slots):
             if moved >= n:
                 break
             if s is None:
                 continue
-            req, st, tok = src.decode.extract_slot(slot)
-            dst.decode.adopt(req, st, tok)
+            req, st, tok = su.extract_slot(slot)
+            du.adopt(req, st, tok)
             moved += 1
         return moved > 0
 
@@ -413,6 +538,19 @@ class Orchestrator:
         s["global_store"] = self.ocfg.global_store
         s["migrations"] = len(self.migration_log)
         s["fleet"] = self.fleet
+        s["span_moves"] = len(self.span_move_log)
+        s["span_bytes_moved"] = sum(r["weight_bytes"] + r["kv_bytes"]
+                                    for r in self.span_move_log)
+        if self.decode_pipes:
+            s["span_bounds"] = {p.name: [tuple(b) for b in p.bounds]
+                                for p in self.decode_pipes}
+        if self.control_trace:
+            s["util_gap_before"] = float(
+                sum(g for g, _ in self.control_trace)
+                / len(self.control_trace))
+            s["util_gap_after"] = float(
+                sum(g for _, g in self.control_trace)
+                / len(self.control_trace))
         s["handoffs"] = self.n_handoffs
         s["handoff_serial_s"] = self.handoff_serial_s
         s["handoff_overlap_s"] = self.handoff_overlap_s

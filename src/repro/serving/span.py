@@ -1,0 +1,312 @@
+"""Span-partitioned serving: pipelined partial-stack engines (§4.1).
+
+A *span pipeline* hosts one logical serving instance across several
+partial-stack stages: stage *k* owns a contiguous layer span (weights +
+that span's paged KV pool) and the batch's residual stream flows stage to
+stage each forward, so outputs are token-identical to a monolithic engine
+(asserted by tests/test_layer_span.py).  This is the execution substrate
+of the paper's layer-level migration (Eq. 5, Fig. 3): moving the boundary
+between two adjacent stages re-slices their weight shards and moves only
+the boundary layers' per-slot KV pages — cost scales with the moved span,
+never the stack.
+
+* ``PrefillPipeline`` — chained prefill.  The lead stage runs the normal
+  bucketed wave loop (serving/engine.py) and hands each wave's residual
+  stream down the chain; per-span states merge back into the universal
+  full-stack wire format, so a span-partitioned prefill hands off to ANY
+  decode instance (span or monolithic) unchanged.
+* ``DecodePipeline`` — chained continuous-batching decode.  All stages
+  keep identical slot layouts (the lead owns request lifecycles, the
+  followers mirror its commits), inserts split the wire state per span,
+  extracts merge it back, and ``move_span`` executes a live
+  ``MigrationKind.LAYER`` action between adjacent stages.
+
+States cross stage boundaries in *canonical* form: a leaf is paged iff
+its cache length equals the full stack's page length (the wire contract
+of models/kvcache.py); stages whose own page space is smaller (ring-only
+spans) page internally and de-page on exit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import layer_migration as LM
+from ..models import kvcache as KC
+from ..models.config import ModelConfig
+from .engine import (DecodeEngine, EngineConfig, PrefillEngine,
+                     _paged_page_len)
+from .request import Phase, Request
+
+
+def _check_bounds(bounds: Sequence[Tuple[int, int]], n_layers: int) -> None:
+    assert bounds and bounds[0][0] == 0 and bounds[-1][1] == n_layers, \
+        f"bounds {bounds} must partition [0, {n_layers})"
+    for (_, b0), (a1, _) in zip(bounds, bounds[1:]):
+        assert b0 == a1, f"bounds not contiguous: {bounds}"
+    assert all(b > a for a, b in bounds), f"empty span in {bounds}"
+
+
+class PrefillPipeline:
+    """A prefill instance partitioned into chained layer-span stages.
+
+    Presents the ``PrefillEngine`` surface the orchestrator and tests use
+    (enqueue / run / run_batch / run_queued / load_report); the lead stage
+    does the bucketing and drives the chain wave by wave."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 bounds: Sequence[Tuple[int, int]], name: str = "pp0"):
+        _check_bounds(bounds, cfg.n_layers)
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.name = name
+        self.engines = [
+            PrefillEngine(cfg, params, ecfg, None,
+                          name=f"{name}.{k}", layer_span=span)
+            for k, span in enumerate(bounds)]
+        self.engines[0]._followers = self.engines[1:]
+
+    @property
+    def bounds(self) -> List[Tuple[int, int]]:
+        return [e.layer_span for e in self.engines]
+
+    @property
+    def lead(self) -> PrefillEngine:
+        return self.engines[0]
+
+    @property
+    def queue(self):
+        return self.lead.queue
+
+    def enqueue(self, req: Request) -> None:
+        self.lead.enqueue(req)
+        req.prefill_instance = self.name
+
+    def load_report(self):
+        return self.lead.load_report()
+
+    def run_batch(self, reqs, frames=None):
+        return self.lead.run_batch(reqs, frames=frames)
+
+    def run(self, req: Request, frames=None):
+        return self.lead.run(req, frames=frames)
+
+    def run_queued(self, max_reqs: int, frames=None):
+        return self.lead.run_queued(max_reqs, frames=frames)
+
+    def move_span(self, src: int, dst: int, n: int) -> Optional[int]:
+        """Shift ``n`` boundary layers from stage ``src`` to adjacent
+        stage ``dst``.  Prefill stages hold no resident serving state, so
+        only the weight shards re-slice; returns moved layer count."""
+        assert abs(src - dst) == 1, "span moves are between adjacent stages"
+        ei, ej = self.engines[src], self.engines[dst]
+        (a, b) = ei.layer_span
+        n = min(n, (b - a) - 1)
+        if n <= 0:
+            return None
+        if dst == src + 1:           # tail of src -> head of dst
+            ei.rebase_span((a, b - n))
+            ej.rebase_span((b - n, ej.layer_span[1]))
+        else:                        # head of src -> tail of dst
+            ei.rebase_span((a + n, b))
+            ej.rebase_span((ej.layer_span[0], a + n))
+        return n
+
+
+class DecodePipeline:
+    """A decode instance partitioned into chained layer-span stages.
+
+    All stages share one slot layout: the lead stage owns request
+    lifecycles and token streams; followers mirror its commits.  The
+    pipeline speaks the universal wire format at its edges (insert /
+    extract / drain), so span pipelines, monolithic engines and pipelines
+    with *different* boundaries interoperate freely."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 bounds: Sequence[Tuple[int, int]], name: str = "dp0",
+                 engines: Optional[Sequence[DecodeEngine]] = None):
+        _check_bounds(bounds, cfg.n_layers)
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.name = name
+        if engines is None:
+            engines = [DecodeEngine(cfg, params, ecfg, name=f"{name}.{k}",
+                                    layer_span=span)
+                       for k, span in enumerate(bounds)]
+        self.engines: List[DecodeEngine] = list(engines)
+        assert [tuple(e.layer_span) for e in self.engines] == \
+            [tuple(b) for b in bounds]
+        # the wire contract: leaves are paged iff their cache length equals
+        # the FULL stack's page space (None -> wire states are dense)
+        self._wire_plen = _paged_page_len(cfg, ecfg)
+        self.span_moves: List[Tuple[int, int, int]] = []  # (src, dst, n)
+
+    # -- lead-delegated views --------------------------------------------
+    @property
+    def bounds(self) -> List[Tuple[int, int]]:
+        return [e.layer_span for e in self.engines]
+
+    @property
+    def lead(self) -> DecodeEngine:
+        return self.engines[0]
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return self.lead.slots
+
+    @property
+    def active(self) -> int:
+        return self.lead.active
+
+    @property
+    def free_slots(self) -> int:
+        return self.lead.free_slots
+
+    @property
+    def kv_tokens(self) -> int:
+        return self.lead.kv_tokens
+
+    @property
+    def tokens_decoded(self) -> int:
+        return self.lead.tokens_decoded
+
+    def free_slot(self) -> Optional[int]:
+        return self.lead.free_slot()
+
+    # -- wire-format edges -----------------------------------------------
+    def _canon_state(self, e: DecodeEngine, st: Dict[str, Any]
+                     ) -> Dict[str, Any]:
+        """De-page a stage's state when its own page space differs from
+        the wire's (ring-only spans page internally at the window)."""
+        if "n_blocks" in st and e.page_len != self._wire_plen:
+            st = KC.paged_state_to_dense(st, self.ecfg.block_size,
+                                         e.page_len)
+        return st
+
+    def adopt(self, req: Request, state: Dict[str, Any],
+              next_token: int, slot: Optional[int] = None) -> int:
+        """Migration receive path: split the wire state at this pipeline's
+        boundaries and land each part on its stage, same slot everywhere."""
+        if slot is None:
+            slot = self.lead.free_slot()
+        assert slot is not None, "decode pipeline full"
+        parts = LM.split_state_spans(self.cfg, state, self.bounds)
+        for e, part in zip(self.engines, parts):
+            e.adopt(req, part, next_token, slot=slot)
+        req.decode_instance = self.name
+        return slot
+
+    def insert(self, req: Request, state: Dict[str, Any],
+               first_token: int) -> int:
+        """KV transfer: place a prefilled request into a decode slot."""
+        slot = self.adopt(req, state, int(first_token))
+        req.generated.append(int(first_token))
+        req.advance(Phase.DECODE)
+        return slot
+
+    def extract_slot(self, slot: int
+                     ) -> Tuple[Request, Dict[str, Any], int]:
+        """Pull a slot off every stage and merge back into the wire format
+        (migration send path)."""
+        parts, req, tok = [], None, 0
+        for e in self.engines:
+            req, st, tok = e.extract_slot(slot)
+            parts.append(self._canon_state(e, st))
+        merged = LM.merge_state_spans(self.cfg, parts, self.bounds)
+        return req, merged, tok
+
+    def drain(self) -> List[Tuple[Request, Dict[str, Any], int]]:
+        return [self.extract_slot(i) for i, s in enumerate(self.lead.slots)
+                if s is not None]
+
+    # -- pipelined decode -------------------------------------------------
+    def step(self) -> List[Tuple[Request, int]]:
+        """One decode iteration: the token column enters stage 0, the
+        residual stream chains through every span, logits exit the last
+        stage; the lead commits and followers mirror."""
+        if self.active == 0:
+            return []
+        for e in self.engines:
+            e._prepare_pages()
+        x = jnp.asarray(self.lead.next_token[:, None])
+        last = len(self.engines) - 1
+        for k, e in enumerate(self.engines):
+            x = e._forward_step(x, hidden_in=k > 0, hidden_out=k < last)
+        nxt = np.asarray(jnp.argmax(x, axis=-1), np.int32)
+        finished = self.lead.commit(nxt)
+        done_slots = {s for _, s in finished}
+        for e in self.engines[1:]:
+            e.follow_commit(nxt, done_slots)
+        return finished
+
+    # -- layer-span migration ---------------------------------------------
+    def move_span(self, src: int, dst: int, n: int
+                  ) -> Optional[Dict[str, int]]:
+        """Live §4.1 span move: shift ``n`` boundary layers (weights + the
+        active slots' per-layer KV) from stage ``src`` to adjacent stage
+        ``dst`` without perturbing any token stream.
+
+        Returns ``{"layers": moved, "weight_bytes": …, "kv_bytes": …,
+        "schedule": [(abs_layer, nbytes), …]}`` — the ordered per-layer
+        payload ``analytical.overlapped_schedule_time`` bills (Eq. 4/11)
+        — or None if the move is infeasible (stages not adjacent in span
+        order, or it would empty ``src``)."""
+        assert abs(src - dst) == 1, "span moves are between adjacent stages"
+        ei, ej = self.engines[src], self.engines[dst]
+        a, b = ei.layer_span
+        n = min(n, (b - a) - 1)
+        if n <= 0:
+            return None
+        moved = (b - n, b) if dst == src + 1 else (a, a + n)
+        union = (min(a, ej.layer_span[0]), max(b, ej.layer_span[1]))
+        old_pair = [ei.layer_span, ej.layer_span] if dst == src + 1 \
+            else [ej.layer_span, ei.layer_span]
+        if dst == src + 1:
+            new_pair = [(a, b - n), (b - n, ej.layer_span[1])]
+        else:
+            new_pair = [(ej.layer_span[0], a + n), (a + n, b)]
+
+        # snapshot every active slot's state across BOTH stages (other
+        # stages keep serving theirs untouched), merged over the union span
+        lo, hi = (ei, ej) if dst == src + 1 else (ej, ei)
+        snap: List[Tuple[int, Request, int, Dict[str, Any]]] = []
+        for s in range(self.ecfg.max_batch):
+            if ei.slots[s] is None:
+                continue
+            parts = []
+            req, tok = None, 0
+            for e in (lo, hi):
+                req, st, tok = e.extract_slot(s)
+                parts.append(self._canon_state(e, st))
+            snap.append((s, req, tok,
+                         LM.merge_state_spans(self.cfg, parts, old_pair)))
+
+        # account the migrated payload: the moved layers' weight shard +
+        # their share of every resident slot's serving state, as the
+        # ordered per-layer schedule Eq. 4/11 bills (absolute indices)
+        payload_layers = LM.unstack_layers(self.cfg, self.lead.params)
+        per_layer = {l: LM.layer_param_bytes(payload_layers[l][1])
+                     for l in range(moved[0], moved[1])}
+        w_bytes = sum(per_layer.values())
+        kv_bytes = 0
+        for _, _, _, merged in snap:
+            mv = LM.split_state_spans(self.cfg, merged, [moved],
+                                      base=union)[0]
+            for l, nbytes in KC.layer_transfer_schedule(
+                    mv, base_layer=moved[0]):
+                per_layer[l] += nbytes
+                kv_bytes += nbytes
+        schedule = sorted(per_layer.items())
+
+        lo.rebase_span(new_pair[0])
+        hi.rebase_span(new_pair[1])
+        for s, req, tok, merged in snap:
+            new_parts = LM.split_state_spans(self.cfg, merged, new_pair,
+                                             base=union)
+            lo.adopt(req, new_parts[0], tok, slot=s)
+            hi.adopt(req, new_parts[1], tok, slot=s)
+        self.span_moves.append((src, dst, n))
+        return {"layers": n, "weight_bytes": int(w_bytes),
+                "kv_bytes": int(kv_bytes), "schedule": schedule}

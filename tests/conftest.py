@@ -1,0 +1,89 @@
+"""Shared session-scoped fixtures: tiny models, greedy references and
+workload factories.
+
+Model params are initialized once per (config, seed) for the whole
+session (``model_zoo``), and greedy reference rollouts are memoized per
+(config, prompt) prefix (``greedy_reference``) — the two costs every
+serving test used to pay per module.  Engines stay per-test (they are
+stateful), but their compiled forwards are shared process-wide through
+the engine jit cache keyed on the frozen config, so fresh engines over
+zoo configs are cheap after first touch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.serving.engine import EngineConfig
+from repro.serving.workload import WorkloadConfig, generate
+
+# The shared tiny stack: 4 layers so layer spans are interesting, page-
+# compatible cache sizes.  Reused by the span / scenario suites so their
+# engines share one compiled-forward set.
+TINY = ModelConfig(name="tiny4", family=Family.DENSE, n_layers=4,
+                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                   vocab_size=128)
+TINY_ECFG = EngineConfig(max_len=96, max_batch=3, block_size=8)
+
+
+@pytest.fixture(scope="session")
+def model_zoo():
+    """``zoo(cfg, seed=0) -> params``, initialized once per session."""
+    cache = {}
+
+    def get(cfg: ModelConfig, seed: int = 0):
+        key = (cfg, seed)
+        if key not in cache:
+            cache[key] = T.init(cfg, jax.random.PRNGKey(seed))
+        return cache[key]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def tiny_params(model_zoo):
+    return model_zoo(TINY)
+
+
+@pytest.fixture(scope="session")
+def greedy_reference():
+    """``ref(cfg, params, prompt, n) -> [token, ...]`` — the monolithic
+    un-jitted greedy rollout every exactness test compares against,
+    memoized per (config, params, prompt) so asking for more tokens of a
+    seen prompt only extends the cached stream."""
+    memo = {}
+
+    def ref(cfg: ModelConfig, params, prompt, n: int):
+        key = (cfg, id(params), np.asarray(prompt, np.int32).tobytes())
+        out = memo.setdefault(key, [])
+        if len(out) < n:
+            toks = jnp.asarray(
+                np.concatenate([np.asarray(prompt, np.int32),
+                                np.asarray(out, np.int32)]))[None]
+            while len(out) < n:
+                logits, _, _ = T.apply(cfg, params, toks, mode="train")
+                nxt = int(jnp.argmax(logits[0, -1]))
+                out.append(nxt)
+                toks = jnp.concatenate(
+                    [toks, jnp.asarray([[nxt]], jnp.int32)], 1)
+        return list(out[:n])
+
+    return ref
+
+
+@pytest.fixture
+def make_workload():
+    """Fresh request lists (Requests are mutated by runs) over the tiny
+    vocab; keyword overrides reach WorkloadConfig directly."""
+
+    def make(n: int, seed: int = 3, max_new: int = 6, **kw):
+        base = dict(kind="synthetic", rps=1000.0, n_requests=n,
+                    vocab_size=TINY.vocab_size, max_new_tokens=max_new,
+                    prefix_share=0.5, n_prefix_groups=2, seed=seed,
+                    prompt_len_lo=16, prompt_len_hi=48)
+        base.update(kw)
+        return generate(WorkloadConfig(**base))
+
+    return make

@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.core.migration import MigrationAction, MigrationKind
-from repro.models import transformer as T
 from repro.models.config import Family, ModelConfig
 from repro.serving.engine import DecodeEngine, EngineConfig, PrefillEngine
 from repro.serving.orchestrator import (ROLE_DECODE, ROLE_PREFILL,
@@ -20,19 +19,16 @@ ECFG = EngineConfig(max_len=96, max_batch=3, block_size=8)
 
 
 @pytest.fixture(scope="module")
-def params():
-    return T.init(CFG, jax.random.PRNGKey(0))
+def params(model_zoo):
+    return model_zoo(CFG)
 
 
-def _reference_rollout(params, prompt, n):
-    toks = jnp.asarray(prompt, jnp.int32)[None]
-    out = []
-    for _ in range(n):
-        logits, _ = T.forward_train(CFG, params, toks)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        out.append(nxt)
-        toks = jnp.concatenate([toks, jnp.asarray([[nxt]], jnp.int32)], 1)
-    return out
+@pytest.fixture
+def _reference_rollout(params, greedy_reference):
+    """Module-local shim over the session-memoized greedy reference."""
+    def ref(_params, prompt, n):
+        return greedy_reference(CFG, params, prompt, n)
+    return ref
 
 
 def _single_engine_rollout(params, req: Request):
@@ -96,7 +92,7 @@ def test_batched_prefill_matches_single(params):
     assert breqs[1].cached_tokens == 24
 
 
-def test_single_token_budget_emits_exactly_one(params):
+def test_single_token_budget_emits_exactly_one(params, _reference_rollout):
     """max_new_tokens=1: the first (prefill-argmax) token is the output."""
     pe = PrefillEngine(CFG, params, ECFG, None)
     de = DecodeEngine(CFG, params, ECFG)
@@ -140,7 +136,7 @@ def test_batched_prefill_shares_uncached_prefix_within_chunk(params):
 # Orchestrator round trip
 # ---------------------------------------------------------------------------
 
-def test_round_trip_matches_reference(params):
+def test_round_trip_matches_reference(params, _reference_rollout):
     """Full fleet (2 prefill + 2 decode, shared store, migration on):
     every request's greedy decode equals the monolithic rollout."""
     orch = Orchestrator(CFG, params, OrchestratorConfig(

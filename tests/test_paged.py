@@ -21,19 +21,16 @@ ECFG = EngineConfig(max_len=64, max_batch=3, block_size=8)
 
 
 @pytest.fixture(scope="module")
-def params():
-    return T.init(CFG, jax.random.PRNGKey(0))
+def params(model_zoo):
+    return model_zoo(CFG)
 
 
-def _reference_rollout(params, prompt, n):
-    toks = jnp.asarray(prompt, jnp.int32)[None]
-    out = []
-    for _ in range(n):
-        logits, _ = T.forward_train(CFG, params, toks)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        out.append(nxt)
-        toks = jnp.concatenate([toks, jnp.asarray([[nxt]], jnp.int32)], 1)
-    return out
+@pytest.fixture
+def _reference_rollout(params, greedy_reference):
+    """Module-local shim over the session-memoized greedy reference."""
+    def ref(_params, prompt, n):
+        return greedy_reference(CFG, params, prompt, n)
+    return ref
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +102,7 @@ def test_handoff_state_scales_with_request_blocks(params):
 # Migration under load on the paged path
 # ---------------------------------------------------------------------------
 
-def test_migration_under_load_token_exact(params):
+def test_migration_under_load_token_exact(params, _reference_rollout):
     """Mid-flight extract -> adopt (page moves between pools) plus slot
     churn reusing freed blocks never perturbs any token stream."""
     pe = PrefillEngine(CFG, params, ECFG, None)
@@ -136,7 +133,7 @@ def test_migration_under_load_token_exact(params):
     assert len(d1._free) == len(d2._free) == 3 * (64 // 8)  # all returned
 
 
-def test_adopt_accepts_dense_wire_format(params):
+def test_adopt_accepts_dense_wire_format(params, _reference_rollout):
     """A dense row state (legacy wire format) lands on the paged pool."""
     pe = PrefillEngine(CFG, params, ECFG, None)
     de = DecodeEngine(CFG, params, ECFG)

@@ -183,6 +183,94 @@ def test_paged_state_round_trip_matches_extract(length, seed):
 
 
 # ---------------------------------------------------------------------------
+# Layer spans: unstack/restack and span split/merge are exact inverses
+# ---------------------------------------------------------------------------
+
+from repro.core import layer_migration as LM
+
+
+def _rand_mixed_cfg(pat, extra, max_len):
+    pat = list(pat)
+    if BlockKind.ATTENTION not in pat:   # keep something pageable
+        pat.append(BlockKind.ATTENTION)
+    return ModelConfig(name="prop-span", family=Family.DENSE,
+                       n_layers=len(pat) + extra, d_model=16, n_heads=2,
+                       n_kv_heads=2, d_ff=32, vocab_size=32,
+                       block_pattern=tuple(pat), local_window=max_len)
+
+
+def _rand_fill(tree, rng):
+    def rnd(a):
+        if a.dtype == jnp.int32:
+            return jnp.asarray(rng.integers(-1, 30, a.shape), a.dtype)
+        return jnp.asarray(rng.normal(size=a.shape), a.dtype)
+    return jax.tree.map(rnd, tree)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.sampled_from(_ALL_KINDS), min_size=1, max_size=3),
+       st.integers(0, 2), st.integers(0, 10_000))
+def test_restack_unstack_layers_roundtrip(pat, extra, seed):
+    """restack(unstack) == id on the layer part of params, bitwise, for
+    every BlockKind mix and remainder shape."""
+    cfg = _rand_mixed_cfg(pat, extra, 8)
+    params = T.init(cfg, jax.random.PRNGKey(seed % 2**31))
+    back = LM.restack_layers(cfg, LM.unstack_layers(cfg, params))
+    ref = {"groups": params["groups"], "rem": params["rem"]}
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.sampled_from(_ALL_KINDS), min_size=1, max_size=3),
+       st.integers(0, 2),
+       st.integers(1, 24),             # request length
+       st.data())
+def test_span_split_merge_roundtrip_dense_and_paged(pat, extra, length,
+                                                    data):
+    """split_state_spans . merge_state_spans == id for ARBITRARY request
+    states — dense and paged wire formats — across every BlockKind mix
+    and every random contiguous span partition."""
+    bs, max_len = 4, 24
+    cfg = _rand_mixed_cfg(pat, extra, max_len)
+    cache = _rand_fill(T.init_cache(cfg, 1, max_len),
+                       np.random.default_rng(7))
+    cache["lengths"] = jnp.asarray([length], jnp.int32)
+    st_ = KC.extract_request_state(cache, 0)
+    if data.draw(st.booleans(), label="paged_wire"):
+        st_ = KC.dense_state_to_paged(st_, bs)
+    # random contiguous partition of [0, n_layers)
+    n = cfg.n_layers
+    n_cuts = data.draw(st.integers(0, n - 1), label="n_cuts")
+    cuts = sorted(data.draw(
+        st.lists(st.integers(1, max(n - 1, 1)), min_size=n_cuts,
+                 max_size=n_cuts, unique=True), label="cuts"))
+    edges = [0] + cuts + [n]
+    bounds = list(zip(edges, edges[1:]))
+    parts = LM.split_state_spans(cfg, st_, bounds)
+    back = LM.merge_state_spans(cfg, parts, bounds)
+    assert st_.get("n_blocks") == back.get("n_blocks")
+    ref_leaves = jax.tree.leaves({k: v for k, v in st_.items()
+                                  if k != "n_blocks"})
+    back_leaves = jax.tree.leaves({k: v for k, v in back.items()
+                                   if k != "n_blocks"})
+    for a, b in zip(ref_leaves, back_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 6))
+def test_even_spans_partition(n_layers, k):
+    k = min(k, n_layers)
+    bounds = LM.even_spans(n_layers, k)
+    assert bounds[0][0] == 0 and bounds[-1][1] == n_layers
+    assert all(b > a for a, b in bounds)
+    assert all(b0 == a1 for (_, b0), (a1, _) in zip(bounds, bounds[1:]))
+    sizes = [b - a for a, b in bounds]
+    assert max(sizes) - min(sizes) <= 1
+
+
+# ---------------------------------------------------------------------------
 # Scheduler invariants
 # ---------------------------------------------------------------------------
 

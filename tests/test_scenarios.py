@@ -1,0 +1,98 @@
+"""Scenario matrix: the live orchestrator under bursty, prefill-heavy,
+decode-heavy and prefix-skewed traffic (P/D-Serve-style shape coverage).
+
+Every scenario asserts (a) token-exactness against the monolithic greedy
+reference for every request and (b) that when the Algorithm 1 controller
+acted, it reduced the hot-tier utilization gap it acted on.  The heavier
+runs — bigger matrices and the span-partitioned (decode_split) variants —
+carry the ``slow`` marker and run in CI's second job."""
+import numpy as np
+import pytest
+
+from conftest import TINY, TINY_ECFG
+from repro.core.migration import MigrationKind
+from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
+from repro.serving.request import Phase
+
+# name -> (workload overrides, fleet overrides)
+SCENARIOS = {
+    # everything lands at once; routing has to spread a thundering herd
+    "bursty": (dict(rps=1e6, prompt_len_lo=12, prompt_len_hi=48,
+                    max_new_tokens=4, prefix_share=0.3),
+               dict(n_prefill=2, n_decode=2)),
+    # long prompts, short generations: the prefill tier saturates
+    "prefill_heavy": (dict(rps=50.0, prompt_len_lo=56, prompt_len_hi=80,
+                           max_new_tokens=3, prefix_share=0.2),
+                      dict(n_prefill=1, n_decode=2)),
+    # short prompts, long generations: decode slots are the bottleneck
+    "decode_heavy": (dict(rps=1000.0, prompt_len_lo=8, prompt_len_hi=16,
+                          max_new_tokens=10, prefix_share=0.2),
+                     dict(n_prefill=3, n_decode=1, control_interval=2)),
+    # two hot prefixes dominate: the store + router must not skew load
+    "prefix_skewed": (dict(rps=500.0, prompt_len_lo=24, prompt_len_hi=48,
+                           max_new_tokens=4, prefix_share=0.95,
+                           n_prefix_groups=2, prefix_zipf=2.0),
+                      dict(n_prefill=2, n_decode=2)),
+}
+
+
+def _run(name, tiny_params, make_workload, greedy_reference, n_requests,
+         seed=13, **fleet_extra):
+    wl_kw, fleet_kw = SCENARIOS[name]
+    fleet_kw = {**fleet_kw, **fleet_extra}
+    wl_kw = dict(wl_kw)
+    max_new = wl_kw.pop("max_new_tokens")
+    reqs = make_workload(n_requests, seed=seed, max_new=max_new, **wl_kw)
+    orch = Orchestrator(TINY, tiny_params, OrchestratorConfig(
+        engine=TINY_ECFG, **fleet_kw))
+    s = orch.run(reqs)
+    assert s["n_requests"] == n_requests
+    for r in reqs:
+        assert r.phase == Phase.DONE
+        assert r.generated == greedy_reference(TINY, tiny_params, r.prompt,
+                                               r.max_new_tokens), \
+            (name, r.rid)
+    # when the controller acted, the acted-on utilization gap went down
+    if orch.control_trace:
+        assert s["util_gap_after"] <= s["util_gap_before"] + 1e-9, \
+            (name, orch.control_trace)
+    return orch, s
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_token_exact_and_balanced(name, tiny_params,
+                                           make_workload,
+                                           greedy_reference):
+    orch, s = _run(name, tiny_params, make_workload, greedy_reference,
+                   n_requests=6)
+    if name == "decode_heavy":
+        # decode pressure on a 3p/1d fleet must trigger Algorithm 1
+        assert s["migrations"] >= 1
+        assert any(a.kind == MigrationKind.LAYER
+                   for a in orch.migration_log)
+        assert len(orch.decode_members()) > 1
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.slow
+def test_scenario_matrix_large(name, tiny_params, make_workload,
+                               greedy_reference):
+    """The heavy sweep: more requests, longer generations."""
+    _run(name, tiny_params, make_workload, greedy_reference,
+         n_requests=14, seed=29)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.slow
+def test_scenario_matrix_span_fleet(name, tiny_params, make_workload,
+                                    greedy_reference):
+    """Every traffic shape again on a span-partitioned decode tier
+    (decode_split=2): pipelined partial-stack execution must be invisible
+    under all of them."""
+    wl_kw, fleet_kw = SCENARIOS[name]
+    extra = {"decode_split": 2}
+    if fleet_kw.get("n_decode", 2) * 2 + fleet_kw.get("n_prefill", 2) > 6:
+        extra["n_prefill"] = 2       # keep the fleet small on CPU
+    orch, s = _run(name, tiny_params, make_workload, greedy_reference,
+                   n_requests=8, seed=31, **extra)
+    assert orch.decode_pipes
