@@ -84,6 +84,18 @@ def decode_time_per_token(cfg: ModelConfig, context: int, hw: HardwareProfile,
     return max(t_comp, t_mem)
 
 
+def decode_iter_time(cfg: ModelConfig, context: int, hw: HardwareProfile,
+                     batch: int = 1, n_chips: int = 1,
+                     efficiency: float = 0.8) -> float:
+    """One continuous-batching decode iteration: every one of ``batch``
+    active slots advances one token.  This is the virtual-clock cost both
+    event loops charge per decode event — ``decode_time_per_token`` already
+    models the whole batched step (weights stream once, per-slot KV adds),
+    so the alias exists to make call sites read as what they bill."""
+    return decode_time_per_token(cfg, context, hw, batch=batch,
+                                 n_chips=n_chips, efficiency=efficiency)
+
+
 def kv_transfer_time(cfg: ModelConfig, n_tokens: int, hw: HardwareProfile,
                      dtype_bytes: int = 2) -> float:
     """T_x of Eq. 21: move a request's KV prefill→decode over the fabric."""

@@ -21,6 +21,9 @@ class InstanceLoad:
     name: str
     load: float                # U_p = C/C_max + M/M_max  (Eq. 37)
     queue_len: int
+    # modelled seconds until this instance's queue drains — the virtual-
+    # clock queue-delay signal TTFT-aware routing keys on
+    queue_delay_s: float = 0.0
     # baseline-router signal only:
     cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
         default_factory=dict)
@@ -32,6 +35,7 @@ class RequestInfo:
     prompt_len: int
     est_load: float            # EstimateLoad(req)
     prefix_key: Optional[bytes] = None   # leading block hash (for baseline)
+    est_time_s: float = 0.0    # modelled service seconds (queue-delay bump)
 
 
 class Router(Protocol):
@@ -52,10 +56,13 @@ class LoadReport:
     locality signal the prefix-aware baseline router keys on.
     ``layer_span`` identifies a partial-stack (layer-span) engine — its
     fractions are already scaled by the span's share of the stack, so span
-    stages and full instances compare on one utilization axis (§4.1)."""
+    stages and full instances compare on one utilization axis (§4.1).
+    ``queue_delay_s`` is the engine's modelled backlog-drain time (virtual
+    seconds) — the TTFT term queue-delay-aware routing minimizes."""
     compute_frac: float
     memory_frac: float
     queue_len: int
+    queue_delay_s: float = 0.0
     cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
         default_factory=dict)
     layer_span: Optional[Tuple[int, int]] = None
@@ -83,12 +90,18 @@ def live_instance_loads(engines: Sequence[ReportsLoad]) -> List[InstanceLoad]:
         r = e.load_report()
         out.append(InstanceLoad(
             name=e.name, load=r.load, queue_len=r.queue_len,
+            queue_delay_s=r.queue_delay_s,
             cached_prefix_tokens=dict(r.cached_prefix_tokens)))
     return out
 
 
 class LoadAwareRouter:
-    """Algorithm 2: least-loaded first; past δ_L, lowest queue length."""
+    """Algorithm 2: least-loaded first; past δ_L, lowest queue delay.
+
+    Queue-delay awareness: ties in utilization break on the modelled
+    backlog-drain time (then queue length), and each dispatch bumps the
+    target's ``queue_delay_s`` by the request's modelled service time —
+    so a burst spreads by *expected TTFT*, not just by request count."""
 
     def __init__(self, load_threshold: float = 1.6):
         self.delta_l = load_threshold
@@ -96,15 +109,19 @@ class LoadAwareRouter:
     def dispatch(self, reqs: Sequence[RequestInfo],
                  instances: List[InstanceLoad]) -> Dict[int, str]:
         plan: Dict[int, str] = {}
-        # Step 2: sort by (load, queue)
-        cands = sorted(instances, key=lambda p: (p.load, p.queue_len))
+        # Step 2: sort by (load, queue delay, queue)
+        cands = sorted(instances,
+                       key=lambda p: (p.load, p.queue_delay_s, p.queue_len))
         for req in reqs:                      # Step 3: dispatch loop
-            cands.sort(key=lambda p: (p.load, p.queue_len))
+            cands.sort(key=lambda p: (p.load, p.queue_delay_s, p.queue_len))
             target = cands[0]
             if target.load >= self.delta_l:
-                target = min(cands, key=lambda p: p.queue_len)
+                # every candidate saturated: minimize added queueing delay
+                target = min(cands,
+                             key=lambda p: (p.queue_delay_s, p.queue_len))
             plan[req.rid] = target.name
             target.load += req.est_load
+            target.queue_delay_s += req.est_time_s
             target.queue_len += 1
         return plan
 

@@ -26,8 +26,6 @@ system-level effect of Fig. 3 without simulating per-layer pipelines.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -41,7 +39,8 @@ from ..core.scheduling import (InstanceLoad, LoadAwareRouter,
                                PrefixAwareRouter, RequestInfo,
                                RoundRobinRouter)
 from ..models.config import ModelConfig
-from .request import Metrics, Request
+from .clock import VirtualClock
+from .request import SLO, Metrics, Request
 from .workload import WorkloadConfig, generate
 
 
@@ -60,6 +59,7 @@ class SimConfig:
     efficiency: float = 0.5            # MFU for prefill compute
     local_cache_groups: int = 2        # per-instance prefix cache capacity
     util_window: float = 1.0           # utilization EMA window (s)
+    slo: Optional[SLO] = None          # TTFT/TPOT targets (goodput/attain)
 
     @staticmethod
     def preset(model: ModelConfig, system: str, n_instances: int = 4,
@@ -130,10 +130,10 @@ class ClusterSim:
         self.cfg = cfg
         self.wcfg = workload
         self.model = cfg.model
-        self.metrics = Metrics()
-        self.events: List[Tuple[float, int, str, object]] = []
-        self._seq = 0
-        self.now = 0.0
+        self.metrics = Metrics(slo=cfg.slo)
+        # the shared virtual clock (serving/clock.py) — same event-loop
+        # substrate as the live orchestrator
+        self.clock = VirtualClock()
         self.migration_log: List[Tuple[float, MigrationAction]] = []
         self.util_trace: List[Tuple[float, Dict[str, float]]] = []
 
@@ -180,9 +180,12 @@ class ClusterSim:
         self._layer_dir_t = -1e9
 
     # ------------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.clock.now
+
     def _push(self, t: float, kind: str, payload=None):
-        self._seq += 1
-        heapq.heappush(self.events, (t, self._seq, kind, payload))
+        self.clock.push(t, kind, payload)
 
     # -- cost models -----------------------------------------------------
     def _prefill_time(self, inst: _Instance, req: Request,
@@ -389,10 +392,15 @@ class ClusterSim:
             inst.decay_util(self.now, self.cfg.util_window)
             mem = min(inst.kv_tokens * kv_bytes_tok * 8
                       / self.cfg.hw.hbm_bytes, 1.0)
+            backlog = sum(
+                A.prefill_time(self.model, r.prompt_len, self.cfg.hw,
+                               efficiency=self.cfg.efficiency)
+                for r in inst.prefill_queue) / max(inst.prefill_cap, 0.05)
             il = InstanceLoad(inst.name,
                               load=inst.compute_frac(
                                   self.now, self.cfg.util_window) + mem,
-                              queue_len=len(inst.prefill_queue))
+                              queue_len=len(inst.prefill_queue),
+                              queue_delay_s=backlog)
             il.cached_prefix_tokens = {
                 bytes([gid % 256]): ln
                 for gid, ln in inst.local_prefix.items()}
@@ -417,7 +425,10 @@ class ClusterSim:
             pkey = bytes([req.prefix_id % 256])
         info = RequestInfo(req.rid, req.prompt_len,
                            est_load=min(req.prompt_len / 4096, 1.0),
-                           prefix_key=pkey)
+                           prefix_key=pkey,
+                           est_time_s=A.prefill_time(
+                               self.model, req.prompt_len, self.cfg.hw,
+                               efficiency=self.cfg.efficiency))
         plan = self.router.dispatch([info], loads)
         inst = self.by_name[plan[req.rid]]
         req.prefill_instance = inst.name
@@ -435,7 +446,10 @@ class ClusterSim:
             loads = self._instance_loads(idle)
             req = self.pending.pop(0)
             info = RequestInfo(req.rid, req.prompt_len,
-                               est_load=min(req.prompt_len / 4096, 1.0))
+                               est_load=min(req.prompt_len / 4096, 1.0),
+                               est_time_s=A.prefill_time(
+                                   self.model, req.prompt_len, self.cfg.hw,
+                                   efficiency=self.cfg.efficiency))
             plan = self.router.dispatch([info], loads)
             inst = self.by_name[plan[req.rid]]
             req.prefill_instance = inst.name
@@ -495,6 +509,7 @@ class ClusterSim:
             t_x = A.kv_transfer_time(self.model, req.prompt_len, self.cfg.hw)
         req.decode_instance = dec.name
         req.t_first_token = self.now + t_x
+        req.t_tokens.append(req.t_first_token)
         req.generated.append(0)
         dec.decode_slots.append(
             _DecodeSlot(req, max(req.max_new_tokens - 1, 0),
@@ -528,6 +543,8 @@ class ClusterSim:
         finished = []
         for slot in inst.decode_slots:
             slot.req.generated.append(0)
+            last = slot.req.t_tokens[-1] if slot.req.t_tokens else self.now
+            slot.req.t_tokens.append(max(self.now, last))
             slot.remaining -= 1
             slot.context += 1
             inst.kv_tokens += 1
@@ -592,7 +609,7 @@ class ClusterSim:
         self.util_trace.append((self.now, {
             i.name: i.compute_frac(self.now, self.cfg.util_window)
             for i in self.instances}))
-        if self.events:
+        if self.clock:
             self._push(self.now + self.cfg.control_interval, "control")
 
     # ------------------------------------------------------------------
@@ -602,9 +619,9 @@ class ClusterSim:
             self._push(r.arrival, "arrival", r)
         self._push(self.cfg.control_interval, "control")
         n_done = 0
-        while self.events and n_done < len(reqs):
-            t, _, kind, payload = heapq.heappop(self.events)
-            self.now = t
+        while self.clock and n_done < len(reqs):
+            ev = self.clock.pop()
+            kind, payload = ev.kind, ev.payload
             if kind == "arrival":
                 self._on_arrival(payload)
             elif kind == "prefill_done":

@@ -59,6 +59,7 @@ class EngineConfig:
     # when set, store fetches are billed as the §4.2 layer-wise overlapped
     # transmission against this hardware's per-layer prefill compute
     hw: Optional[A.HardwareProfile] = None
+    efficiency: float = 0.5       # prefill MFU for the analytical billings
 
 
 def _pow2_ceil(n: int) -> int:
@@ -204,11 +205,22 @@ class PrefillEngine:
     def load_report(self) -> LoadReport:
         """Backlog-normalized utilization: queued prompt tokens against one
         full engine's worth of work (max_batch·max_len).  Prefill holds no
-        resident KV — it is handed off — so memory_frac is 0."""
+        resident KV — it is handed off — so memory_frac is 0.  With a
+        hardware profile configured, ``queue_delay_s`` is the analytical
+        time to drain the queued prompt tokens — the TTFT signal
+        queue-delay-aware routing minimizes."""
         budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
         queued = sum(r.prompt_len for r in self.queue)
+        # per-request sum (not one concatenated sequence: the quadratic
+        # attention term would overstate a deep queue), same efficiency the
+        # router's est_time_s bumps use — one scale end to end
+        delay = (sum(A.prefill_time(self.cfg, r.prompt_len, self.ecfg.hw,
+                                    efficiency=self.ecfg.efficiency)
+                     for r in self.queue)
+                 if self.ecfg.hw is not None else 0.0)
         return LoadReport(compute_frac=min(queued / budget, 1.0),
                           memory_frac=0.0, queue_len=len(self.queue),
+                          queue_delay_s=delay,
                           cached_prefix_tokens=dict(self._leading),
                           layer_span=self.layer_span)
 
@@ -295,31 +307,48 @@ class PrefillEngine:
                 "n_shapes": len(self.prefill_shapes),
                 "bound": self.prefill_shape_bound()}
 
-    def run_batch(self, reqs: List[Request],
-                  frames: Optional[jax.Array] = None
-                  ) -> List[Tuple[Dict[str, Any], jax.Array]]:
-        """Prefill several requests in as few dense forwards as possible.
+    def prefill_waves(self, reqs: List[Request],
+                      frames: Optional[jax.Array] = None,
+                      chunk_tokens: Optional[int] = None):
+        """Generator form of the prefill wave loop: one dense forward per
+        ``next()``.
 
-        Wave loop: requests are bucketed by (padded suffix length,
-        prefix-hit) and one bucket runs per wave as a dense forward; blocks
-        it publishes can turn later requests' misses into hits, so the rest
-        re-match and re-bucket each wave.  Within a wave, miss-requests
-        sharing a leading block with an already-chosen one are deferred —
-        their shared prefix will be in the store by their turn.  Suffixes
-        and row counts pad to power-of-two buckets so the compiled-shape
-        set stays bounded (see ``compile_report``); each row's true last
-        token drives its logits and the padded tail is masked junk the
-        decoder overwrites in place.
+        Requests are bucketed by (padded suffix length, prefix-hit) and one
+        bucket runs per wave as a dense forward; blocks it publishes can
+        turn later requests' misses into hits, so the rest re-match and
+        re-bucket each wave.  Within a wave, miss-requests sharing a
+        leading block with an already-chosen one are deferred — their
+        shared prefix will be in the store by their turn.  Suffixes and
+        row counts pad to power-of-two buckets so the compiled-shape set
+        stays bounded (see ``compile_report``); each row's true last token
+        drives its logits and the padded tail is masked junk the decoder
+        overwrites in place.
 
-        Returns ``[(request_state, last_logits_row)]`` aligned with
-        ``reqs`` — request states in the paged wire format when the arch
-        supports it (see models.kvcache).  With chained followers (span
-        pipeline) every wave's residual stream flows through each span in
-        turn and the per-span states merge back into the full-stack wire
-        format, so callers never see the partitioning.
+        **Chunked prefill** (``chunk_tokens``): a row never computes more
+        than ``chunk_tokens`` prompt tokens per wave.  A longer prompt
+        carries its partial request state across waves — the next wave
+        resumes it through the prefix-aware (incremental) forward, exactly
+        the store-hit path, so the final state and logits are bit-equal to
+        the one-shot prefill.  This is what lets the event-driven
+        orchestrator interleave decode iterations between the micro-chunks
+        of a long prefill instead of stalling decode behind it
+        (DynaServe-style micro-chunking).
+
+        Yields one record per wave::
+
+            {"rows": padded row count, "padded_len": padded suffix length,
+             "tokens": prompt tokens actually computed this wave,
+             "done": [(index into reqs, request_state, last_logits_row)]}
+
+        Request states in ``done`` are in the paged wire format when the
+        arch supports it (see models.kvcache).  With chained followers
+        (span pipeline) every wave's residual stream flows through each
+        span in turn and the per-span states merge back into the
+        full-stack wire format, so callers never see the partitioning.
         """
         assert self.layer_span[0] == 0, \
             "mid-stack span engines run only as PrefillPipeline followers"
+        chunk = max(int(chunk_tokens), 1) if chunk_tokens else None
         for req in reqs:
             req.advance(Phase.PREFILL)
         toks = [np.asarray(r.prompt, np.int32) for r in reqs]
@@ -328,15 +357,26 @@ class PrefillEngine:
         # disable the shared-prefix deferral below.
         keys_of = [chain_hashes(t, self.ecfg.block_size)
                    if self.store is not None else [] for t in toks]
-        out: List[Optional[Tuple[Dict[str, Any], jax.Array]]] = \
-            [None] * len(reqs)
+        partials: Dict[int, Dict[str, Any]] = {}  # chunked rows mid-prompt
+        progress: Dict[int, int] = {}             # tokens resident in partial
+        store_matched: Dict[int, int] = {}        # store hit (for publish)
+        published: Dict[int, int] = {}            # block-aligned publish mark
         remaining = list(range(len(reqs)))
         while remaining:
-            tlen = {i: self._match_len(toks[i], keys_of[i])
+            tlen = {i: progress[i] if i in partials
+                    else self._match_len(toks[i], keys_of[i])
                     for i in remaining}
             buckets: Dict[Tuple[int, bool], List[int]] = {}
             for i in remaining:
                 slen = len(toks[i]) - tlen[i]
+                if chunk is not None and slen > chunk:
+                    # mid-prompt chunk wave: EXACT length, never padded —
+                    # pad junk would land at positions the next resume
+                    # wave's prefix attention still reads (only decode
+                    # masks/overwrites future-position junk).  chunk is a
+                    # constant, so the shape set stays bounded.
+                    buckets.setdefault((chunk, tlen[i] > 0), []).append(i)
+                    continue
                 buckets.setdefault((self._bucket_len(slen, tlen[i]),
                                     tlen[i] > 0), []).append(i)
             (blen, hit), idxs = max(buckets.items(),
@@ -369,32 +409,48 @@ class PrefillEngine:
                                   + wave_frames.shape[1:],
                                   wave_frames.dtype)])
                 n_rows = padded_rows
-            cache = T.init_cache(self.scfg, n_rows, self.ecfg.max_len,
-                                 dtype=self.params["embed"].dtype)
+            chain = [self] + self._followers
+            caches = [T.init_cache(e.scfg, n_rows, self.ecfg.max_len,
+                                   dtype=e.params["embed"].dtype)
+                      for e in chain]
             matched_of: Dict[int, int] = {}
             for row, i in enumerate(chosen):
+                if i in partials:
+                    # resume a chunked row: its partial (full-stack) state
+                    # IS the cache — split per span when chained
+                    matched_of[i] = progress[i]
+                    part = partials.pop(i)
+                    if len(chain) == 1:
+                        caches[0] = KC.insert_request_state(caches[0], row,
+                                                            part)
+                    else:
+                        for k, p_k in enumerate(LM.split_state_spans(
+                                self.cfg, part,
+                                [e.layer_span for e in chain])):
+                            caches[k] = KC.insert_request_state(
+                                caches[k], row, p_k)
+                    continue
                 matched, payloads = self._match(toks[i], keys_of[i])
-                matched_of[i] = matched
+                matched_of[i] = store_matched[i] = matched
                 if matched > 0:
+                    # store payloads are full-stack; span chains hold no
+                    # store (engine.__init__), so this is lead-only
                     reqs[i].cached_tokens = matched
-                    st = KC.extract_request_state(cache, row)
+                    st = KC.extract_request_state(caches[0], row)
                     off = 0
                     for p in payloads:
                         st = KC.merge_prefix_kv(st, p, off)
                         off += self.ecfg.block_size
-                    cache = KC.insert_request_state(cache, row, st)
+                    caches[0] = KC.insert_request_state(caches[0], row, st)
             suffix = np.zeros((n_rows, blen), np.int32)
             slens = np.ones((n_rows,), np.int32)   # dummy rows read pos 0
             for row, i in enumerate(chosen):
                 s_i = toks[i][matched_of[i]:]
+                if chunk is not None:
+                    s_i = s_i[:chunk]
                 suffix[row, : len(s_i)] = s_i
                 slens[row] = len(s_i)
             self.prefill_shapes.add((n_rows, blen, hit))
-            chain = [self] + self._followers
-            caches = [cache] + [
-                T.init_cache(e.scfg, n_rows, self.ecfg.max_len,
-                             dtype=e.params["embed"].dtype)
-                for e in self._followers]
             la = jnp.asarray(slens - 1)
             x: jax.Array = jnp.asarray(suffix)
             for k, e in enumerate(chain):
@@ -403,12 +459,14 @@ class PrefillEngine:
                 else:
                     # partial-stack wave: stage k consumes the previous
                     # span's residual stream and (except the last) emits one
-                    fn = _jit_apply(e.scfg, "prefill", False, False,
+                    fn = _jit_apply(e.scfg, "prefill", hit, False,
                                     hidden_in=k > 0,
                                     hidden_out=k < len(chain) - 1)
                 x, caches[k], _ = fn(e.sparams, x, cache=caches[k],
                                      frames=wave_frames, logits_at=la)
             logits = x
+            done_wave: List[Tuple[int, Dict[str, Any], jax.Array]] = []
+            wave_tokens = 0
             for row, i in enumerate(chosen):
                 if len(chain) == 1:
                     st = KC.extract_request_state(caches[0], row)
@@ -419,16 +477,51 @@ class PrefillEngine:
                         [e.layer_span for e in chain])
                 # the cache advanced by the padded length; the request's
                 # true length is what decode must resume from
-                st["length"] = jnp.asarray(
-                    matched_of[i] + int(slens[row]), jnp.int32)
-                self._publish(toks[i], st, matched_of[i], keys_of[i])
-                self.tokens_prefilled += len(toks[i]) - matched_of[i]
+                new_len = matched_of[i] + int(slens[row])
+                st["length"] = jnp.asarray(new_len, jnp.int32)
+                self.tokens_prefilled += int(slens[row])
+                wave_tokens += int(slens[row])
+                # publish freshly completed FULL blocks at every chunk
+                # boundary (not just prompt completion): a shared prefix
+                # computed by chunk 1 serves sibling requests' waves while
+                # this prompt is still mid-chunk — same hit pattern as
+                # one-shot prefill
+                pub_from = published.get(i, store_matched.get(i, 0))
+                keys_part = keys_of[i][: new_len // self.ecfg.block_size]
+                if len(keys_part) * self.ecfg.block_size > pub_from:
+                    self._publish(toks[i], st, pub_from, keys_part)
+                    published[i] = len(keys_part) * self.ecfg.block_size
+                if new_len < len(toks[i]):
+                    # chunk boundary: park the partial state, stay remaining
+                    partials[i] = st
+                    progress[i] = new_len
+                    continue
                 self.n_prefilled += 1
                 if self._page_len is not None:
                     st = KC.dense_state_to_paged(st, self.ecfg.block_size)
-                out[i] = (st, logits[row])
-            done = set(chosen)
+                done_wave.append((i, st, logits[row]))
+            done = {i for i, _, _ in done_wave}
             remaining = [i for i in remaining if i not in done]
+            yield {"rows": n_rows, "padded_len": blen,
+                   "tokens": wave_tokens, "done": done_wave}
+
+    def run_batch(self, reqs: List[Request],
+                  frames: Optional[jax.Array] = None,
+                  chunk_tokens: Optional[int] = None
+                  ) -> List[Tuple[Dict[str, Any], jax.Array]]:
+        """Prefill several requests in as few dense forwards as possible
+        (drains ``prefill_waves``; see there for the wave/chunk semantics).
+
+        Returns ``[(request_state, last_logits_row)]`` aligned with
+        ``reqs``.  With ``chunk_tokens`` set, long prompts prefill in
+        successive partial waves — same final states and logits, asserted
+        by tests/test_slo_metrics.py."""
+        out: List[Optional[Tuple[Dict[str, Any], jax.Array]]] = \
+            [None] * len(reqs)
+        for wave in self.prefill_waves(reqs, frames=frames,
+                                       chunk_tokens=chunk_tokens):
+            for i, st, lg in wave["done"]:
+                out[i] = (st, lg)
         return out  # type: ignore[return-value]
 
     def run(self, req: Request, frames: Optional[jax.Array] = None
@@ -437,14 +530,16 @@ class PrefillEngine:
         return self.run_batch([req], frames=frames)[0]
 
     def run_queued(self, max_reqs: int,
-                   frames: Optional[jax.Array] = None
+                   frames: Optional[jax.Array] = None,
+                   chunk_tokens: Optional[int] = None
                    ) -> List[Tuple[Request, Dict[str, Any], jax.Array]]:
         """Prefill up to ``max_reqs`` from the head of the routed queue."""
         n = min(max_reqs, len(self.queue))
         if n <= 0:
             return []
         batch = [self.queue.popleft() for _ in range(n)]
-        results = self.run_batch(batch, frames=frames)
+        results = self.run_batch(batch, frames=frames,
+                                 chunk_tokens=chunk_tokens)
         return [(r, st, lg) for r, (st, lg) in zip(batch, results)]
 
 

@@ -1,43 +1,49 @@
-"""Live disaggregated orchestrator: route + migrate over real engines.
+"""Live disaggregated orchestrator: an event-driven virtual-clock loop
+over real engines.
 
 This is the executable counterpart of the discrete-event simulator
-(``serving/cluster.py``): one step-driven control loop that owns a fleet of
-``PrefillEngine`` / ``DecodeEngine`` instances over the *real* JAX model and
-wires the paper's three mechanisms together:
+(``serving/cluster.py``) — and since this refactor the two share the same
+substrate: a ``serving/clock.py`` ``VirtualClock`` (heap event queue +
+virtual ``now``) drives a fleet of ``PrefillEngine`` / ``DecodeEngine``
+instances over the *real* JAX model.  Tokens are exact (every forward
+really runs); *time* is virtual — each event's duration is charged from
+the §4.3 analytical model (``core/analytical.py``) for the real batch
+shapes the engines executed, so TTFT/TPOT/goodput and SLO attainment are
+well-defined, deterministic under a fixed workload seed, and directly
+comparable with the simulator's (one summary schema, see docs/serving.md).
 
-* **Global KV Cache Store (§4.2)** — one ``GlobalKVStore`` shared by every
-  prefill instance (``global_store=True``), or per-instance private stores
-  for the locality-constrained baseline A/B.
-* **Algorithm 2 routing (§4.4.2)** — incoming requests are dispatched
-  through ``core.scheduling`` routers over live ``InstanceLoad`` snapshots
-  (the ``live_instance_loads`` adapter), then prefilled in dense batches.
-* **Algorithm 1 migration (§4.4.1)** — every ``control_interval`` steps the
-  per-instance ``DeviceLoad``s feed ``core.migration.MigrationController``;
-  an emitted LAYER action between two stages of a span-partitioned decode
-  pipeline (``decode_split > 1``) moves just ``amount`` boundary layers —
-  weights plus the active slots' per-layer KV pages — between the stages
-  (the true §4.1 span migration, Eq. 5), costed per migrated layer with
-  the Eq. 4/11 overlapped schedule.  Between full-stack members a LAYER
-  action falls back to *re-rolling* the underloaded instance into the
-  overloaded tier's role (the whole-instance approximation of Fig. 3),
-  evacuating any resident decode KV to peers first.  KV_HEADS actions
-  rebalance in-flight requests' KV between decode instances
-  (attention-level migration) — across pipelines too, since every
-  hand-off speaks the full-stack wire format.
+Event loop (each instance steps independently when it has work):
 
-Per-step order: route pending → batched prefill + KV hand-off into decode
-slots → decode step on every decode instance → (periodically) control
-cycle.  Every hand-off and migration is exact pytree surgery
-(``models.kvcache``), so orchestrated greedy decode is token-identical to a
-single-engine rollout — asserted by tests/test_orchestrator.py and
-examples/serve_disaggregated.py.
+* ``arrival`` — a workload request reaches the central queue at its
+  Poisson timestamp; Algorithm 2 (§4.4.2) routes the queue over live
+  ``InstanceLoad`` snapshots (now queue-delay-aware: the router minimizes
+  modelled backlog seconds, not just utilization).
+* ``prefill`` / ``prefill_done`` — an idle prefill member picks up to
+  ``prefill_chunk`` requests (admission-controlled by *reserved* decode
+  slots) and runs ONE dense prefill wave per event.  With
+  ``chunk_tokens`` set, long prompts split into successive partial-prefill
+  micro-chunks (KV accumulated across waves, exactness preserved — the
+  DynaServe insight), so decode events interleave with a long prefill in
+  virtual time instead of stalling behind it.
+* ``decode_kick`` / ``decode_done`` — a decode unit (engine or span
+  pipeline) runs one continuous-batching iteration per event; completed
+  hand-offs kick it after their §4.2 overlapped transfer latency.
+* ``control`` — every ``control_interval`` virtual seconds (not step
+  counts) the Algorithm 1 controller (§4.4.1) plans over per-member
+  ``DeviceLoad``s: LAYER actions between adjacent span stages move
+  boundary layers live; between full-stack members they re-roll roles
+  (Fig. 3); KV_HEADS actions rebalance in-flight KV between decode units.
+
+Every hand-off and migration is exact pytree surgery (``models.kvcache``),
+so orchestrated greedy decode is token-identical to a single-engine
+rollout — asserted by tests/test_orchestrator.py, the tests/test_scenarios
+matrix (with chunked prefill on), and examples/serve_disaggregated.py.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Set
 
 import jax.numpy as jnp
 
@@ -51,8 +57,9 @@ from ..core.scheduling import (LoadAwareRouter, PrefixAwareRouter,
                                live_instance_loads, utilization_gap)
 from ..models import kvcache as KC
 from ..models.config import ModelConfig
+from .clock import VirtualClock
 from .engine import DecodeEngine, EngineConfig, PrefillEngine
-from .request import Metrics, Phase, Request
+from .request import SLO, Metrics, Phase, Request
 from .span import DecodePipeline
 
 ROLE_PREFILL = "prefill"
@@ -77,11 +84,18 @@ class OrchestratorConfig:
     global_store: bool = True      # shared store vs per-instance caches
     engine: EngineConfig = EngineConfig()
     migration: bool = True
-    control_interval: int = 4      # orchestrator steps per control cycle
+    # Algorithm 1 cadence in VIRTUAL SECONDS (the clock interval, not a
+    # step count); None derives ~2 decode iterations for the fleet's model
+    # and hardware, so the controller keeps pace at any model scale
+    control_interval: Optional[float] = None
     controller: ControllerConfig = ControllerConfig(
         delta_up=0.5, delta_down=0.25, rho=0.5, max_actions_per_cycle=2)
     hw: A.HardwareProfile = A.TPU_V5E
-    prefill_chunk: int = 4         # max requests prefilled per member/step
+    prefill_chunk: int = 4         # max requests per prefill batch
+    # chunked prefill: max prompt tokens one row computes per wave (None =
+    # one-shot).  Smaller chunks -> decode interleaves sooner behind long
+    # prompts; exactness is preserved at any value.
+    chunk_tokens: Optional[int] = None
     min_prefill: int = 1           # role floors: the serving path must exist
     min_decode: int = 1
     # layer-span partitioning of the decode tier: each of the n_decode
@@ -89,6 +103,9 @@ class OrchestratorConfig:
     # (one fleet member per stage).  LAYER actions between adjacent stages
     # move boundary layers instead of re-rolling whole instances.
     decode_split: int = 1
+    slo: Optional[SLO] = None      # TTFT/TPOT targets for goodput accounting
+    efficiency: float = 0.5        # prefill MFU for event costs (Eq. 20)
+    trace_events: bool = False     # keep the clock's per-event (t, kind) log
 
 
 class _Member:
@@ -113,6 +130,10 @@ class _Member:
         self.n_prefilled = 0
         self.tokens_decoded = 0
         self.fetch_latency_s = 0.0
+        self.busy = False              # a prefill wave's event is in flight
+        self._wavegen = None           # resumable prefill_waves generator
+        self._batch: List[Request] = []  # requests the generator is serving
+        self._wave_left = 0            # batch requests not yet handed off
 
     @property
     def engine(self):
@@ -129,7 +150,8 @@ class _Member:
 
 
 class Orchestrator:
-    """Owns the fleet; drives route → prefill → hand-off → decode → control."""
+    """Owns the fleet; the virtual clock drives route → chunked prefill →
+    hand-off → decode → control as independently-timed events."""
 
     def __init__(self, cfg: ModelConfig, params,
                  ocfg: OrchestratorConfig = OrchestratorConfig()):
@@ -140,9 +162,12 @@ class Orchestrator:
         self.cfg = cfg
         self.params = params
         self.ocfg = ocfg
-        # engines bill Global-KV-Store fetches as §4.2 overlapped
-        # transmission on the fleet's hardware profile
-        self.ecfg = (dataclasses.replace(ocfg.engine, hw=ocfg.hw)
+        # engines bill Global-KV-Store fetches and queue-delay reports on
+        # the fleet's hardware profile + prefill MFU (one scale with the
+        # router's est_time_s bumps); an explicitly hw-configured engine
+        # config is taken as-is
+        self.ecfg = (dataclasses.replace(ocfg.engine, hw=ocfg.hw,
+                                         efficiency=ocfg.efficiency)
                      if ocfg.engine.hw is None else ocfg.engine)
         self.store = (GlobalKVStore(block_size=self.ecfg.block_size)
                       if ocfg.global_store else None)
@@ -182,8 +207,14 @@ class Orchestrator:
         self.controller = (MigrationController(ocfg.controller,
                                                self._migration_cost)
                            if ocfg.migration else None)
+        self.clock = VirtualClock(trace=ocfg.trace_events)
+        self.control_interval = (
+            float(ocfg.control_interval) if ocfg.control_interval is not None
+            else 2.0 * A.decode_iter_time(cfg, self.ecfg.max_len, ocfg.hw,
+                                          batch=max(self.ecfg.max_batch, 1)))
+        self._control_armed = False
         self.pending: Deque[Request] = deque()  # submitted, not yet routed
-        self.metrics = Metrics()
+        self.metrics = Metrics(slo=ocfg.slo)
         self.migration_log: List[MigrationAction] = []
         self.util_trace: List[Dict[str, float]] = []
         # (gap_before, gap_after) per control cycle that applied actions —
@@ -195,8 +226,13 @@ class Orchestrator:
         self.n_handoffs = 0
         self.handoff_serial_s = 0.0
         self.handoff_overlap_s = 0.0
-        self._step_i = 0
-        self._t0: Optional[float] = None
+        # decode slots reserved by prefill batches in flight: prefill never
+        # produces KV that has nowhere to land, even across chunk waves
+        self._reserved = 0
+        self._unit_busy: Set[str] = set()   # decode iteration in flight
+        # stale-event fencing: a re-roll bumps its member's epoch so
+        # decode completions scheduled for the old engine are discarded
+        self._epoch: Dict[str, int] = {}
 
     # -- fleet views -----------------------------------------------------
     def _new_prefill(self, name: str) -> PrefillEngine:
@@ -230,6 +266,12 @@ class Orchestrator:
             else unit.name
         return self._by_name[name]
 
+    def _unit_by_name(self, name: str):
+        for u in self.decode_units():
+            if u.name == name:
+                return u
+        return None
+
     @property
     def fleet(self) -> Dict[str, str]:
         return {m.name: m.role for m in self.members}
@@ -237,119 +279,253 @@ class Orchestrator:
     def in_flight(self) -> int:
         return (len(self.pending)
                 + sum(len(m.prefill.queue) for m in self.prefill_members())
+                + self._reserved
                 + sum(u.active for u in self.decode_units()))
 
-    def _now(self) -> float:
-        if self._t0 is None:
-            self._t0 = time.monotonic()
-        return time.monotonic() - self._t0
+    def _free_capacity(self) -> int:
+        """Decode slots available for NEW prefill admissions."""
+        return sum(u.free_slots for u in self.decode_units()) \
+            - self._reserved
 
     # -- submission / routing --------------------------------------------
     def submit(self, req: Request) -> None:
-        """Accept a request; arrival is re-stamped to orchestrator time so
-        live TTFT/E2E metrics are well defined."""
-        req.arrival = self._now()
-        self.pending.append(req)
+        """Accept a request live: arrival is stamped to the virtual clock
+        (workload-driven runs keep their own arrival times via ``run``)."""
+        req.arrival = self.clock.now
+        self.clock.push(self.clock.now, "arrival", req)
+        self._arm_control()
 
     def _prefix_key(self, req: Request) -> Optional[bytes]:
         return leading_block_key(req.prompt, self.ecfg.block_size)
 
-    def _account_handoff(self, req: Request, st: Dict) -> None:
+    def _account_handoff(self, req: Request, st: Dict) -> float:
         """Cost the KV hand-off's ordered per-layer transfer schedule with
         and without §4.2 layer-wise overlap (Eq. 4/11 on ``ocfg.hw``): the
-        overlap partner is the destination's per-layer decode compute."""
+        overlap partner is the destination's per-layer decode compute.
+        Returns the overlapped seconds — the latency the request's first
+        token actually pays."""
         sched = KC.layer_transfer_schedule(st)
         if not sched:
-            return
+            return 0.0
         t_layer = A.decode_time_per_token(
             self.cfg, req.prompt_len, self.ocfg.hw) / max(len(sched), 1)
         nbytes = [b for _, b in sched]
         self.n_handoffs += 1
+        # t_sync=0: a per-request page stream has no global sync barrier
+        # (that term belongs to migration ops, Eq. 28) — with it, every
+        # hand-off would carry a constant floor that swamps small models
         self.handoff_serial_s += A.serial_schedule_time(
-            nbytes, self.ocfg.hw.net_bw, t_layer)
-        self.handoff_overlap_s += A.overlapped_schedule_time(
-            nbytes, self.ocfg.hw.net_bw, t_layer)
+            nbytes, self.ocfg.hw.net_bw, t_layer, t_sync=0.0)
+        t_ov = A.overlapped_schedule_time(nbytes, self.ocfg.hw.net_bw,
+                                          t_layer, t_sync=0.0)
+        self.handoff_overlap_s += t_ov
+        return t_ov
 
-    def _route_pending(self) -> None:
+    def _dispatch(self) -> None:
         """Algorithm 2 over the central queue: dispatch every pending
-        request onto a prefill member's queue using live load snapshots."""
-        if not self.pending:
-            return
-        members = self.prefill_members()
-        loads = live_instance_loads([m.prefill for m in members])
-        budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
-        infos = [RequestInfo(r.rid, r.prompt_len,
-                             est_load=min(r.prompt_len / budget, 1.0),
-                             prefix_key=self._prefix_key(r))
-                 for r in self.pending]
-        plan = self.router.dispatch(infos, loads)
-        for req in self.pending:
-            self._by_name[plan[req.rid]].prefill.enqueue(req)
-        self.pending.clear()
+        request onto a prefill member's queue using live load snapshots
+        (queue-delay-aware), then kick idle members that have work."""
+        if self.pending:
+            members = self.prefill_members()
+            loads = live_instance_loads([m.prefill for m in members])
+            budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
+            infos = [RequestInfo(
+                r.rid, r.prompt_len,
+                est_load=min(r.prompt_len / budget, 1.0),
+                prefix_key=self._prefix_key(r),
+                est_time_s=A.prefill_time(self.cfg, r.prompt_len,
+                                          self.ocfg.hw,
+                                          efficiency=self.ocfg.efficiency))
+                for r in self.pending]
+            plan = self.router.dispatch(infos, loads)
+            for req in self.pending:
+                self._by_name[plan[req.rid]].prefill.enqueue(req)
+            self.pending.clear()
+        self._kick_prefills()
 
-    # -- one orchestration tick ------------------------------------------
-    def step(self) -> List[Request]:
-        """Route → prefill + hand-off → decode → control.  Returns the
-        requests that finished during this tick."""
-        now = self._now()
-        self._route_pending()
-        # prefill is admission-controlled by free decode slots: never
-        # produce KV that has nowhere to land
-        free = sum(u.free_slots for u in self.decode_units())
+    def _kick_prefills(self) -> None:
         for m in self.prefill_members():
-            if free <= 0:
-                break
-            n = min(self.ocfg.prefill_chunk, free)
-            before_tok = m.prefill.tokens_prefilled
-            before_n = m.prefill.n_prefilled
-            before_fetch = m.prefill.fetch_latency_s
-            for req, st, logits in m.prefill.run_queued(n):
-                req.t_prefill_start = req.t_prefill_start or now
-                req.advance(Phase.TRANSFER)
-                # ties broken by unit name so target selection is
-                # deterministic across re-rolls and fleet orderings
-                tgt = min((u for u in self.decode_units()
-                           if u.free_slots > 0),
-                          key=lambda u: (u.active, u.kv_tokens, u.name))
-                self._account_handoff(req, st)
-                tgt.insert(req, st, int(jnp.argmax(logits)))
-                req.t_first_token = self._now()
-                free -= 1
-            # counters accumulate on the member (engines don't survive
-            # re-rolls), fed by engine deltas — one source of truth
-            m.tokens_prefilled += m.prefill.tokens_prefilled - before_tok
-            m.n_prefilled += m.prefill.n_prefilled - before_n
-            m.fetch_latency_s += m.prefill.fetch_latency_s - before_fetch
-        finished: List[Request] = []
-        for u in self.decode_units():
-            m = self._unit_member(u)
-            before = u.tokens_decoded
-            for req, _slot in u.step():
-                req.t_done = self._now()
-                self.metrics.record(req)
-                finished.append(req)
-            m.tokens_decoded += u.tokens_decoded - before
-        self._step_i += 1
-        if self.controller is not None and \
-                self._step_i % self.ocfg.control_interval == 0:
-            self._control()
+            if not m.busy and (m._wavegen is not None or m.prefill.queue):
+                self.clock.push(self.clock.now, "prefill", m.name)
+
+    def _kick_decode(self, unit) -> None:
+        """Schedule one continuous-batching iteration for ``unit`` if it
+        has work and none is in flight; cost = the analytical iteration
+        time for the real batch shape (Eq. 22)."""
+        if unit is None or unit.name in self._unit_busy or unit.active == 0:
+            return
+        ctx = unit.kv_tokens // max(unit.active, 1)
+        cost = A.decode_iter_time(self.cfg, max(ctx, 1), self.ocfg.hw,
+                                  batch=unit.active)
+        self._unit_busy.add(unit.name)
+        self.clock.push_in(cost, "decode_done",
+                           (unit.name, self._epoch.get(unit.name, 0)))
+
+    def _arm_control(self) -> None:
+        if self.controller is not None and not self._control_armed:
+            self.clock.push_in(self.control_interval, "control")
+            self._control_armed = True
+
+    # -- event handlers ---------------------------------------------------
+    def _handle(self, ev) -> List[Request]:
+        if ev.kind == "arrival":
+            self.pending.append(ev.payload)
+            self._dispatch()
+        elif ev.kind == "prefill":
+            self._on_prefill(ev.payload)
+        elif ev.kind == "prefill_done":
+            self._on_prefill_done(*ev.payload)
+        elif ev.kind == "decode_kick":
+            self._kick_decode(self._unit_by_name(ev.payload))
+        elif ev.kind == "decode_done":
+            return self._on_decode_done(*ev.payload)
+        elif ev.kind == "control":
+            self._on_control()
+        else:
+            raise ValueError(f"unknown event kind {ev.kind!r}")
+        return []
+
+    def _on_prefill(self, name: str) -> None:
+        """One prefill wave: pick up a batch if idle, run the next dense
+        forward (one chunk per row at most), charge its analytical cost."""
+        m = self._by_name.get(name)
+        if m is None or m.role != ROLE_PREFILL or m.busy:
+            return
+        if m._wavegen is None:
+            n = min(self.ocfg.prefill_chunk, len(m.prefill.queue),
+                    self._free_capacity())
+            if n <= 0:
+                return
+            batch = [m.prefill.queue.popleft() for _ in range(n)]
+            for r in batch:
+                r.t_prefill_start = r.t_prefill_start or self.clock.now
+            self._reserved += n
+            m._wave_left = n
+            m._batch = batch
+            m._wavegen = m.prefill.prefill_waves(
+                batch, chunk_tokens=self.ocfg.chunk_tokens)
+        # counters accumulate on the member (engines don't survive
+        # re-rolls), fed by engine deltas — one source of truth
+        before = (m.prefill.tokens_prefilled, m.prefill.n_prefilled,
+                  m.prefill.fetch_latency_s)
+        wave = next(m._wavegen, None)
+        m.tokens_prefilled += m.prefill.tokens_prefilled - before[0]
+        m.n_prefilled += m.prefill.n_prefilled - before[1]
+        m.fetch_latency_s += m.prefill.fetch_latency_s - before[2]
+        if wave is None:                      # defensive: empty generator
+            m._wavegen = None
+            m._batch = []
+            return
+        done = [(m._batch[i], st, lg) for i, st, lg in wave["done"]]
+        m._wave_left -= len(done)
+        if m._wave_left <= 0:
+            m._wavegen = None
+            m._batch = []
+        cost = A.prefill_time(self.cfg, wave["padded_len"], self.ocfg.hw,
+                              batch=wave["rows"],
+                              efficiency=self.ocfg.efficiency)
+        m.busy = True
+        self.clock.push_in(cost, "prefill_done", (name, done))
+
+    def _on_prefill_done(self, name: str, done) -> None:
+        m = self._by_name.get(name)
+        if m is not None:
+            m.busy = False
+        for req, st, logits in done:
+            req.advance(Phase.TRANSFER)
+            # ties broken by unit name so target selection is
+            # deterministic across re-rolls and fleet orderings
+            tgt = min((u for u in self.decode_units()
+                       if u.free_slots > 0),
+                      key=lambda u: (u.active, u.kv_tokens, u.name))
+            t_ov = self._account_handoff(req, st)
+            tgt.insert(req, st, int(jnp.argmax(logits)))
+            self._reserved -= 1
+            # the first token becomes visible once its KV hand-off's
+            # overlapped per-layer schedule completes
+            req.t_first_token = self.clock.now + t_ov
+            req.t_tokens.append(req.t_first_token)
+            self.clock.push_in(t_ov, "decode_kick", tgt.name)
+        if m is not None and m.role == ROLE_PREFILL and \
+                (m._wavegen is not None or m.prefill.queue):
+            self.clock.push(self.clock.now, "prefill", m.name)
+
+    def _on_decode_done(self, name: str, epoch: int) -> List[Request]:
+        self._unit_busy.discard(name)
+        if epoch != self._epoch.get(name, 0):
+            return []                      # unit re-rolled mid-iteration
+        unit = self._unit_by_name(name)
+        if unit is None:
+            return []
+        m = self._unit_member(unit)
+        before_tok = unit.tokens_decoded
+        snapshot = [(r, len(r.generated))
+                    for r in unit.slots if r is not None]
+        finished = [req for req, _slot in unit.step()]
+        now = self.clock.now
+        for req, n0 in snapshot:
+            if len(req.generated) > n0:
+                # per-token stamp, kept monotonic per request (a hand-off's
+                # transfer latency may overlap this iteration)
+                last = req.t_tokens[-1] if req.t_tokens else now
+                req.t_tokens.append(max(now, last))
+        for req in finished:
+            req.t_done = req.t_tokens[-1] if req.t_tokens else now
+            self.metrics.record(req)
+        m.tokens_decoded += unit.tokens_decoded - before_tok
+        if unit.active:
+            self._kick_decode(unit)
+        if finished:
+            self._kick_prefills()          # freed slots -> admit more
         return finished
 
-    def run(self, reqs: Sequence[Request], max_steps: int = 100_000) -> dict:
-        """Drive ``reqs`` to completion; returns the summary dict."""
-        for r in sorted(reqs, key=lambda r: r.arrival):
-            self.submit(r)
-        target = self.metrics.n_requests + len(reqs)
-        for _ in range(max_steps):
-            self.step()
-            if self.metrics.n_requests >= target:
-                break
+    def _on_control(self) -> None:
+        self._control_armed = False
+        if self.controller is not None:
+            self._control()
+        if self.in_flight() > 0 or self.clock:
+            self._arm_control()
+
+    # -- public drive ------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Advance the virtual clock through events until the next compute
+        completion (a prefill wave or decode iteration) has been handled.
+        Returns the requests that finished.  Idle fleets return []."""
+        if not self.clock:
             if self.in_flight() == 0:
-                raise RuntimeError("orchestrator lost requests: nothing in "
-                                   f"flight but only {self.metrics.n_requests}"
-                                   f"/{target} done")
-        else:
-            raise RuntimeError(f"not done after {max_steps} steps")
+                return []
+            raise RuntimeError("orchestrator stalled: work in flight but "
+                               "no scheduled events")
+        finished: List[Request] = []
+        while True:
+            ev = self.clock.pop()
+            if ev is None:
+                break
+            finished += self._handle(ev)
+            if ev.kind in ("prefill_done", "decode_done"):
+                break
+        return finished
+
+    def run(self, reqs: Sequence[Request],
+            max_events: int = 1_000_000) -> dict:
+        """Inject ``reqs`` as timed arrival events (their workload Poisson
+        timestamps ARE the virtual arrival times) and drive the event loop
+        to completion; returns the summary dict."""
+        for r in sorted(reqs, key=lambda r: r.arrival):
+            self.clock.push(max(r.arrival, self.clock.now), "arrival", r)
+        self._arm_control()
+        target = self.metrics.n_requests + len(reqs)
+        n_ev = 0
+        while self.metrics.n_requests < target:
+            ev = self.clock.pop()
+            if ev is None:
+                raise RuntimeError(
+                    "orchestrator lost requests: nothing scheduled but "
+                    f"only {self.metrics.n_requests}/{target} done")
+            self._handle(ev)
+            n_ev += 1
+            if n_ev > max_events:
+                raise RuntimeError(f"not done after {max_events} events")
         return self.summary()
 
     # -- Algorithm 1: control cycle --------------------------------------
@@ -390,15 +566,18 @@ class Orchestrator:
             return False       # pipeline stages re-slice spans, not roles
         if member.role == new_role:
             return False
-        if member.role == ROLE_PREFILL and \
-                len(self.prefill_members()) <= self.ocfg.min_prefill:
-            return False
+        if member.role == ROLE_PREFILL:
+            if len(self.prefill_members()) <= self.ocfg.min_prefill:
+                return False
+            if member.busy or member._wavegen is not None:
+                return False   # a prefill batch is mid-flight on it
         if member.role == ROLE_DECODE:
             if len(self.decode_units()) <= self.ocfg.min_decode:
                 return False
-            # resident KV must fit on the remaining decode peers
+            # resident KV must fit on the remaining decode peers, net of
+            # slots already reserved by in-flight prefill batches
             spare = sum(u.free_slots for u in self.decode_units()
-                        if u is not member.unit)
+                        if u is not member.unit) - self._reserved
             if member.decode.active > spare:
                 return False
         return True
@@ -478,16 +657,23 @@ class Orchestrator:
             ok = self._rebalance_decode(src, dst)
         if ok:
             self.migration_log.append(act)
+            # re-plumb the event flow around the new topology: requeued
+            # requests re-route, adopters and the new capacity get kicked
+            self._dispatch()
+            for u in self.decode_units():
+                self._kick_decode(u)
         return ok
 
     def _reroll(self, member: _Member, new_role: str) -> bool:
         """Fig. 3 executable: repurpose ``member`` into ``new_role``."""
         if not self._can_reroll(member, new_role):
             return False
+        self._epoch[member.name] = self._epoch.get(member.name, 0) + 1
+        self._unit_busy.discard(member.name)
         if new_role == ROLE_DECODE:
             # prefill -> decode: queued (unstarted) requests go back to the
             # front of the central queue; Algorithm 2 re-routes them next
-            # step (extendleft reverses, so feed it the reversed queue)
+            # dispatch (extendleft reverses, so feed it the reversed queue)
             self.pending.extendleft(reversed(member.prefill.queue))
             member.prefill.queue.clear()
             member.prefill = None
@@ -538,6 +724,9 @@ class Orchestrator:
         s["global_store"] = self.ocfg.global_store
         s["migrations"] = len(self.migration_log)
         s["fleet"] = self.fleet
+        s["virtual_time_s"] = self.clock.now
+        s["events"] = self.clock.n_processed
+        s["chunk_tokens"] = self.ocfg.chunk_tokens
         s["span_moves"] = len(self.span_move_log)
         s["span_bytes_moved"] = sum(r["weight_bytes"] + r["kv_bytes"]
                                     for r in self.span_move_log)

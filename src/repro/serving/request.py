@@ -1,4 +1,11 @@
-"""Request lifecycle and per-request metrics (TTFT / TPOT / E2E)."""
+"""Request lifecycle and per-request metrics (TTFT / TPOT / E2E / SLO).
+
+Timestamps are *virtual-clock* seconds (``serving/clock.py``) on both
+serving paths — the simulator and the live orchestrator stamp the same
+fields and aggregate through the same ``Metrics``, so their summaries
+share one schema (documented in docs/serving.md §Clock, chunked prefill,
+and SLOs).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -25,7 +32,7 @@ _PHASE_ORDER = {p: i for i, p in enumerate(Phase)}
 @dataclasses.dataclass
 class Request:
     rid: int
-    arrival: float                    # seconds (sim or wall clock)
+    arrival: float                    # seconds (virtual clock)
     prompt: np.ndarray                # token ids (int32)
     max_new_tokens: int
     prefix_id: Optional[int] = None   # shared-prefix group (workload metadata)
@@ -42,6 +49,9 @@ class Request:
     t_prefill_start: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    # per-token emission times (first token included) — the TBT stream
+    # SLO-aware scheduling reasons about (Mooncake-style)
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
 
     def advance(self, phase: Phase) -> None:
         """Move the lifecycle forward; backwards transitions are bugs."""
@@ -69,42 +79,102 @@ class Request:
         return (self.t_done - self.t_first_token) / n
 
     @property
+    def tbts(self) -> List[float]:
+        """Inter-token gaps (time-between-tokens) from the per-token
+        timestamp stream; empty when fewer than two stamps exist."""
+        return [b - a for a, b in zip(self.t_tokens, self.t_tokens[1:])]
+
+    @property
     def e2e(self) -> Optional[float]:
         return None if self.t_done is None else self.t_done - self.arrival
 
 
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request service-level objective: TTFT and TPOT ceilings.
+
+    A completed request *attains* the SLO iff both bounds hold; goodput
+    counts only attaining requests' tokens (the paper's "under SLOs"
+    framing of the Fig. 8–11 comparisons)."""
+    ttft_s: float
+    tpot_s: float
+
+    def attained(self, r: Request) -> bool:
+        ttft, tpot = r.ttft, r.tpot
+        if ttft is None or tpot is None:
+            return False
+        return ttft <= self.ttft_s and tpot <= self.tpot_s
+
+
+def _mean(xs: List[float]) -> float:
+    return float(np.mean(xs)) if xs else float("nan")
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(xs, q)) if xs else float("nan")
+
+
 @dataclasses.dataclass
 class Metrics:
-    """Aggregates over completed requests."""
+    """Aggregates over completed requests — one schema for both the
+    simulator and the live orchestrator."""
+    slo: Optional[SLO] = None
     ttfts: List[float] = dataclasses.field(default_factory=list)
     tpots: List[float] = dataclasses.field(default_factory=list)
+    tbts: List[float] = dataclasses.field(default_factory=list)
     e2es: List[float] = dataclasses.field(default_factory=list)
+    arrivals: List[float] = dataclasses.field(default_factory=list)
     tokens_out: int = 0
     n_requests: int = 0
+    n_slo_ok: int = 0
+    goodput_tokens: int = 0
     t_start: float = 0.0
     t_end: float = 0.0
 
     def record(self, r: Request):
         self.n_requests += 1
         self.tokens_out += len(r.generated)
+        self.arrivals.append(r.arrival)
         if r.ttft is not None:
             self.ttfts.append(r.ttft)
         if r.tpot is not None:
             self.tpots.append(r.tpot)
+        self.tbts.extend(r.tbts)
         if r.e2e is not None:
             self.e2es.append(r.e2e)
+        if self.slo is not None and self.slo.attained(r):
+            self.n_slo_ok += 1
+            self.goodput_tokens += len(r.generated)
         self.t_end = max(self.t_end, r.t_done or 0.0)
 
     def summary(self) -> dict:
         dur = max(self.t_end - self.t_start, 1e-9)
-        mean = lambda xs: float(np.mean(xs)) if xs else float("nan")
-        p99 = lambda xs: float(np.percentile(xs, 99)) if xs else float("nan")
-        return {
+        s = {
             "n_requests": self.n_requests,
             "throughput_tok_s": self.tokens_out / dur,
             "total_time_s": dur,
-            "mean_ttft_s": mean(self.ttfts),
-            "p99_ttft_s": p99(self.ttfts),
-            "mean_tpot_s": mean(self.tpots),
-            "mean_e2e_s": mean(self.e2es),
+            "mean_ttft_s": _mean(self.ttfts),
+            "p50_ttft_s": _pct(self.ttfts, 50),
+            "p99_ttft_s": _pct(self.ttfts, 99),
+            "mean_tpot_s": _mean(self.tpots),
+            "p50_tpot_s": _pct(self.tpots, 50),
+            "p99_tpot_s": _pct(self.tpots, 99),
+            "p99_tbt_s": _pct(self.tbts, 99),
+            "mean_e2e_s": _mean(self.e2es),
+            # observed offered load over the arrival span — what the
+            # workload actually asked for, vs throughput = what it got
+            "offered_rps": (
+                (self.n_requests - 1)
+                / max(max(self.arrivals) - min(self.arrivals), 1e-9)
+                if len(self.arrivals) > 1 else float("nan")),
         }
+        if self.slo is not None:
+            s["slo_ttft_s"] = self.slo.ttft_s
+            s["slo_tpot_s"] = self.slo.tpot_s
+            s["slo_attainment"] = (self.n_slo_ok / self.n_requests
+                                   if self.n_requests else float("nan"))
+            s["goodput_tok_s"] = self.goodput_tokens / dur
+        else:
+            s["slo_attainment"] = float("nan")
+            s["goodput_tok_s"] = float("nan")
+        return s

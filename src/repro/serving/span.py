@@ -87,14 +87,22 @@ class PrefillPipeline:
     def load_report(self):
         return self.lead.load_report()
 
-    def run_batch(self, reqs, frames=None):
-        return self.lead.run_batch(reqs, frames=frames)
+    def run_batch(self, reqs, frames=None, chunk_tokens=None):
+        return self.lead.run_batch(reqs, frames=frames,
+                                   chunk_tokens=chunk_tokens)
 
     def run(self, req: Request, frames=None):
         return self.lead.run(req, frames=frames)
 
-    def run_queued(self, max_reqs: int, frames=None):
-        return self.lead.run_queued(max_reqs, frames=frames)
+    def run_queued(self, max_reqs: int, frames=None, chunk_tokens=None):
+        return self.lead.run_queued(max_reqs, frames=frames,
+                                    chunk_tokens=chunk_tokens)
+
+    def prefill_waves(self, reqs, frames=None, chunk_tokens=None):
+        """Wave generator over the chained stages (see PrefillEngine):
+        each wave's residual stream flows through every span in turn."""
+        return self.lead.prefill_waves(reqs, frames=frames,
+                                       chunk_tokens=chunk_tokens)
 
     def move_span(self, src: int, dst: int, n: int) -> Optional[int]:
         """Shift ``n`` boundary layers from stage ``src`` to adjacent

@@ -2,6 +2,12 @@
 LongBench-like (long) prompt-length distributions plus shared-prefix
 structure (§5.1.2/5.1.3).
 
+Arrival timestamps are VIRTUAL-clock seconds (serving/clock.py): both the
+simulator and the live orchestrator inject them as timed events, so
+``rps`` is calibrated against the §4.3 analytical event costs of the
+model being served, not wall time — a smoke-sized model saturates around
+1e6–1e8 rps, a paper-sized one around 1–10 (see tests/test_scenarios.py).
+
 Alpaca: prompt lengths ~4–50 tokens (Fig. 7a).
 LongBench: ~2k–85k tokens, log-normal-ish (Fig. 7b).
 Output length capped at 512 (paper: "maximum output length is capped at

@@ -192,7 +192,7 @@ def test_controller_never_prices_stage_reroll(tiny_params, make_workload):
     from repro.core.migration import DeviceLoad
     orch = Orchestrator(TINY, tiny_params, OrchestratorConfig(
         n_prefill=2, n_decode=1, engine=TINY_ECFG, migration=True,
-        control_interval=1, decode_split=2))
+        decode_split=2))
     hot = DeviceLoad(device="decode0.0", compute_frac=1.0, memory_frac=1.0)
     cold = DeviceLoad(device="prefill0", compute_frac=0.0, memory_frac=0.0)
     benefit, _cost = orch._migration_cost(MigrationKind.LAYER, hot, cold, 2)

@@ -45,8 +45,11 @@ def _single_engine_rollout(params, req: Request):
 
 
 def _workload(n, seed=3, max_new=8):
+    # rps is VIRTUAL-clock arrivals/s: at 1e7 the tiny model saturates
+    # (inter-arrival ~0.1us vs ~us-scale event costs), matching the old
+    # lockstep tests' everything-at-once pressure
     return generate(WorkloadConfig(
-        kind="synthetic", rps=1000.0, n_requests=n, vocab_size=128,
+        kind="synthetic", rps=1e7, n_requests=n, vocab_size=128,
         max_new_tokens=max_new, prefix_share=0.6, n_prefix_groups=2,
         seed=seed, prompt_len_lo=16, prompt_len_hi=48))
 
@@ -137,10 +140,11 @@ def test_batched_prefill_shares_uncached_prefix_within_chunk(params):
 # ---------------------------------------------------------------------------
 
 def test_round_trip_matches_reference(params, _reference_rollout):
-    """Full fleet (2 prefill + 2 decode, shared store, migration on):
-    every request's greedy decode equals the monolithic rollout."""
+    """Full fleet (2 prefill + 2 decode, shared store, migration on,
+    chunked prefill): every request's greedy decode equals the monolithic
+    rollout under the event-driven virtual-clock loop."""
     orch = Orchestrator(CFG, params, OrchestratorConfig(
-        n_prefill=2, n_decode=2, engine=ECFG, control_interval=2))
+        n_prefill=2, n_decode=2, engine=ECFG, chunk_tokens=8))
     reqs = _workload(8, max_new=5)
     s = orch.run(reqs)
     assert s["n_requests"] == 8
@@ -177,9 +181,14 @@ def test_forced_migration_changes_fleet_and_stays_exact(params):
     reqs = _workload(6, seed=9, max_new=8)
     for r in reqs:
         orch.submit(r)
-    # a few steps so decode slots are occupied mid-flight
-    for _ in range(3):
+    # advance until decode slots are occupied mid-flight AND the prefill
+    # tier is idle (a re-roll refuses members with a batch in flight)
+    for _ in range(60):
         orch.step()
+        if sum(m.decode.active for m in orch.decode_members()) > 0 and \
+                all(not m.busy and m._wavegen is None
+                    for m in orch.prefill_members()):
+            break
     assert sum(m.decode.active for m in orch.decode_members()) > 0
     before = dict(orch.fleet)
 
@@ -221,7 +230,7 @@ def test_controller_migrates_under_decode_pressure(params):
     """Decode-heavy load on a 3p/1d fleet makes Algorithm 1 re-roll idle
     prefill capacity into the decode tier — live, not simulated."""
     orch = Orchestrator(CFG, params, OrchestratorConfig(
-        n_prefill=3, n_decode=1, engine=ECFG, control_interval=2))
+        n_prefill=3, n_decode=1, engine=ECFG))
     reqs = _workload(10, seed=5, max_new=10)
     orch.run(reqs)
     assert len(orch.migration_log) >= 1

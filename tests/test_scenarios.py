@@ -14,25 +14,29 @@ from repro.core.migration import MigrationKind
 from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
 from repro.serving.request import Phase
 
-# name -> (workload overrides, fleet overrides)
+# name -> (workload overrides, fleet overrides).  rps values are VIRTUAL
+# arrivals/s: event costs for the tiny model are ~us-scale, so saturating
+# shapes need 1e6–1e8 rps on the virtual clock.  Chunked prefill is on
+# everywhere (chunk_tokens) — the whole matrix asserts exactness with
+# micro-chunked prompts interleaving decode events.
 SCENARIOS = {
     # everything lands at once; routing has to spread a thundering herd
-    "bursty": (dict(rps=1e6, prompt_len_lo=12, prompt_len_hi=48,
+    "bursty": (dict(rps=1e8, prompt_len_lo=12, prompt_len_hi=48,
                     max_new_tokens=4, prefix_share=0.3),
-               dict(n_prefill=2, n_decode=2)),
+               dict(n_prefill=2, n_decode=2, chunk_tokens=16)),
     # long prompts, short generations: the prefill tier saturates
-    "prefill_heavy": (dict(rps=50.0, prompt_len_lo=56, prompt_len_hi=80,
+    "prefill_heavy": (dict(rps=2e6, prompt_len_lo=56, prompt_len_hi=80,
                            max_new_tokens=3, prefix_share=0.2),
-                      dict(n_prefill=1, n_decode=2)),
+                      dict(n_prefill=1, n_decode=2, chunk_tokens=16)),
     # short prompts, long generations: decode slots are the bottleneck
-    "decode_heavy": (dict(rps=1000.0, prompt_len_lo=8, prompt_len_hi=16,
+    "decode_heavy": (dict(rps=1e7, prompt_len_lo=8, prompt_len_hi=16,
                           max_new_tokens=10, prefix_share=0.2),
-                     dict(n_prefill=3, n_decode=1, control_interval=2)),
+                     dict(n_prefill=3, n_decode=1, chunk_tokens=8)),
     # two hot prefixes dominate: the store + router must not skew load
-    "prefix_skewed": (dict(rps=500.0, prompt_len_lo=24, prompt_len_hi=48,
+    "prefix_skewed": (dict(rps=5e6, prompt_len_lo=24, prompt_len_hi=48,
                            max_new_tokens=4, prefix_share=0.95,
                            n_prefix_groups=2, prefix_zipf=2.0),
-                      dict(n_prefill=2, n_decode=2)),
+                      dict(n_prefill=2, n_decode=2, chunk_tokens=16)),
 }
 
 
