@@ -34,6 +34,7 @@ import jax
 
 from repro.models import transformer as T
 from repro.models.config import Family, ModelConfig
+from repro.serving.api import Server
 from repro.serving.engine import EngineConfig
 from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
 from repro.serving.request import SLO
@@ -75,10 +76,12 @@ def main() -> dict:
     for mode, kw in MODES.items():
         s = None
         for _warm in (True, False):          # warmup shares the jit cache
-            orch = Orchestrator(CFG, params, OrchestratorConfig(
+            # backend-agnostic drive: every mode goes through the Server
+            # front door (the same surface the sim benches use)
+            server = Server(Orchestrator(CFG, params, OrchestratorConfig(
                 n_prefill=3, n_decode=3, engine=ecfg, migration=False,
-                chunk_tokens=16, slo=slo, **kw))
-            s = orch.run(generate(wl))
+                chunk_tokens=16, slo=slo, **kw)))
+            s = server.run(generate(wl))
         results[mode] = {k: s[k] for k in KEEP}
         print(f"fig2a_live,{mode},{s['throughput_tok_s']:.1f},"
               f"{s['p50_ttft_s'] * 1e6:.2f},{s['p99_ttft_s'] * 1e6:.2f},"

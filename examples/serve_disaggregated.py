@@ -1,20 +1,23 @@
-"""End-to-end disaggregated serving through the event-driven orchestrator.
+"""End-to-end disaggregated serving through the session-oriented front
+door (serving/api.py) over the event-driven live orchestrator.
 
 A gemma-family reduced model is served by a fleet of real prefill/decode
-engines on the virtual clock: workload arrivals are timed events,
-Algorithm 2 routes every request over live queue-delay-aware load
-snapshots, long prompts prefill in micro-chunks (decode interleaves
-instead of stalling), prefill KV is handed off into decode slots through
-exact pytree surgery, and the Algorithm 1 controller fires on clock
-intervals — the run starts deliberately decode-starved (3 prefill /
-1 decode), so the controller re-rolls idle prefill capacity into the
-decode tier while requests are in flight (the executable Fig. 3).
+engines on the virtual clock, driven the way production systems are
+driven: requests are *submitted* to a ``Server`` (open-loop — their
+workload Poisson stamps are the virtual arrival times), each submission
+returns a ``StreamHandle`` whose per-token events (token id + virtual
+commit timestamp) and phase transitions drain as they are committed, and
+one extra request is submitted mid-run while the fleet is busy to show
+open-loop admission.  The run starts deliberately decode-starved
+(3 prefill / 1 decode), so the Algorithm 1 controller re-rolls idle
+prefill capacity into the decode tier while requests are in flight (the
+executable Fig. 3).
 
 The run reports the paper's time-domain metrics — TTFT/TPOT percentiles,
 SLO attainment and goodput — and every generated sequence is then checked
 token-for-token against a single-engine reference rollout: disaggregation,
-chunked prefill and migration change *when and where* work runs, never
-*what* is computed.
+chunked prefill, migration and *streaming consumption* change when and
+where work runs, never what is computed.
 
     PYTHONPATH=src python examples/serve_disaggregated.py
 """
@@ -29,9 +32,10 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import analytical as A
 from repro.models import transformer as T
+from repro.serving.api import Server
 from repro.serving.engine import DecodeEngine, EngineConfig, PrefillEngine
 from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
-from repro.serving.request import SLO, Request
+from repro.serving.request import SLO, Outcome, Request
 from repro.serving.workload import WorkloadConfig, generate
 
 
@@ -50,7 +54,8 @@ def main():
     ocfg = OrchestratorConfig(n_prefill=3, n_decode=1, router="load_aware",
                               engine=ecfg, chunk_tokens=32, slo=slo, hw=hw)
     orch = Orchestrator(cfg, params, ocfg)
-    print(f"fleet: {orch.fleet}")
+    server = Server(orch)
+    print(f"fleet: {server.fleet}")
     print(f"control interval: {orch.control_interval * 1e6:.2f} us "
           f"(virtual); SLO: TTFT<={slo.ttft_s * 1e6:.1f}us "
           f"TPOT<={slo.tpot_s * 1e6:.2f}us")
@@ -60,7 +65,36 @@ def main():
                         prefix_share=0.7, n_prefix_groups=2, seed=1,
                         prompt_len_lo=24, prompt_len_hi=72)
     reqs = generate(wl)
-    s = orch.run(reqs)
+
+    # open-loop submission: every request's Poisson stamp IS its virtual
+    # arrival event; the handles stream tokens as they are committed
+    handles = [server.submit(r, at=r.arrival) for r in reqs]
+
+    # step the fleet a little, then submit one MORE request mid-run — the
+    # open-loop path routes it on the next dispatch like any other arrival
+    while server.now < reqs[6].arrival:
+        server.step()
+    rng_prompt = reqs[0].prompt[:32]
+    late = Request(rid=999, arrival=0.0, prompt=rng_prompt,
+                   max_new_tokens=12)
+    handles.append(server.submit(late))
+    print(f"\nsubmitted request 999 mid-run at t={server.now * 1e6:.2f}us "
+          f"({server.in_flight()} in flight)")
+
+    server.drain()
+    s = server.summary()
+
+    # streaming view: replay one handle's committed event stream
+    h0 = handles[0]
+    evs = h0.events()
+    print(f"\nstream of request {h0.rid} ({len(evs)} events):")
+    for ev in evs[:6]:
+        what = (f"phase={ev.phase.value}" if ev.kind == "phase"
+                else f"token={ev.token}")
+        print(f"  t={ev.t * 1e6:8.3f}us  {ev.kind:6s} {what}")
+    print(f"  ... terminal: {evs[-1].kind}")
+    assert evs[-1].kind == Outcome.COMPLETED.value
+    assert [e.token for e in evs if e.kind == "token"] == h0.tokens
 
     print("\nper-instance utilization (control cycles):")
     for i, snap in enumerate(orch.util_trace):
@@ -74,9 +108,10 @@ def main():
               f"cost {a.predicted_cost * 1e3:.3f} ms)")
     assert orch.migration_log, "expected at least one applied migration"
 
-    print(f"\nfinal fleet: {orch.fleet}")
+    print(f"\nfinal fleet: {server.fleet}")
     us = 1e6
-    print(f"served {s['n_requests']} requests in "
+    print(f"served {s['n_requests']} requests "
+          f"({s['n_submitted']} submitted) in "
           f"{s['virtual_time_s'] * us:.1f} virtual us "
           f"({s['events']} events), "
           f"{s['throughput_tok_s']:.0f} tok/s virtual throughput")
@@ -90,10 +125,11 @@ def main():
           f"({s['store_entries']} blocks resident), "
           f"prefill token skew {s['prefill_token_skew']:.2f}")
 
-    # --- exactness: orchestrated output == single-engine reference --------
+    # --- exactness: streamed output == single-engine reference ------------
     ref_pe = PrefillEngine(cfg, params, ecfg, None, name="ref_p")
     ref_de = DecodeEngine(cfg, params, ecfg, name="ref_d")
-    for r in reqs:
+    checked = reqs + [late]
+    for r in checked:
         ref = Request(rid=10_000 + r.rid, arrival=0.0, prompt=r.prompt,
                       max_new_tokens=r.max_new_tokens)
         st, logits = ref_pe.run(ref)
@@ -102,8 +138,8 @@ def main():
             ref_de.step()
         assert ref.generated == r.generated, (
             f"request {r.rid}: orchestrated decode diverged")
-    print(f"\nall {len(reqs)} outputs token-identical to the "
-          "single-engine reference (chunked prefill + migrations on) ✓")
+    print(f"\nall {len(checked)} streamed outputs (incl. the mid-run "
+          "submission) token-identical to the single-engine reference ✓")
 
 
 if __name__ == "__main__":

@@ -1,89 +1,146 @@
-"""Serving driver: a live disaggregated deployment on the host — prefill
-engine + Global KV Cache Store + decode engine, batched Poisson requests.
+"""Serving CLI: the session-oriented front door over either backend.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \\
-        --requests 24 --rps 8
+    # analytical cluster simulation (no model compute, paper-scale configs)
+    PYTHONPATH=src python -m repro.launch.serve --backend sim --smoke
+
+    # live disaggregated fleet over the real JAX model (virtual clock)
+    PYTHONPATH=src python -m repro.launch.serve --backend live --smoke \\
+        --arch gemma-7b --requests 12
+
+The pre-orchestrator wall-clock loop that used to live here (one
+prefill/decode pair, no routing, no migration) is retired: both backends
+are now driven through ``serving.api.Server`` — submit / stream / abort /
+drain — so this CLI exercises exactly the surface production drivers,
+benchmarks and the contract tests use.  ``--closed-loop K`` switches the
+workload from open-loop Poisson arrivals to ``K`` fixed-concurrency
+clients (each completion triggers the next submission);
+``--admission-limit M`` bounds in-flight requests, with overflow REJECTED
+and reported in the summary.
 """
 from __future__ import annotations
 
 import argparse
-import time
-from collections import deque
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from .. import configs
-from ..core.kvstore import GlobalKVStore
-from ..models import transformer as T
-from ..serving.engine import DecodeEngine, EngineConfig, PrefillEngine
-from ..serving.request import Metrics
-from ..serving.workload import WorkloadConfig, generate
+from ..serving.api import Server
+from ..serving.workload import ClosedLoopClients, WorkloadConfig, generate
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama-13b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--rps", type=float, default=8.0)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--prefix-share", type=float, default=0.6)
-    args = ap.parse_args()
+def _build_live(args):
+    import jax
+
+    from ..core import analytical as A
+    from ..models import transformer as T
+    from ..serving.engine import EngineConfig
+    from ..serving.orchestrator import Orchestrator, OrchestratorConfig
 
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    print(f"serving arch={cfg.name} params={cfg.param_count():,}")
+    print(f"live backend: arch={cfg.name} params={cfg.param_count():,}")
     params = T.init(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(max_len=args.max_len, max_batch=args.max_batch,
                         block_size=16)
-    store = GlobalKVStore(block_size=16)
-    pe = PrefillEngine(cfg, params, ecfg, store)
-    de = DecodeEngine(cfg, params, ecfg)
-
-    wl = WorkloadConfig(kind="synthetic", rps=args.rps,
-                        n_requests=args.requests,
-                        vocab_size=cfg.vocab_size,
+    hw = A.TPU_V5E
+    # --rps is in arrivals per decode-iteration time, so the offered load
+    # is meaningful at any model scale on the virtual clock
+    t_iter = A.decode_iter_time(cfg, args.max_len, hw, batch=args.max_batch)
+    wl = WorkloadConfig(kind="synthetic", rps=args.rps / t_iter,
+                        n_requests=args.requests, vocab_size=cfg.vocab_size,
                         max_new_tokens=args.max_new,
-                        prefix_share=args.prefix_share,
-                        n_prefix_groups=2,
+                        prefix_share=args.prefix_share, n_prefix_groups=2,
                         prompt_len_lo=16,
                         prompt_len_hi=min(64, args.max_len // 2))
-    reqs = generate(wl)
-    metrics = Metrics()
-    t0 = time.time()
-    frames = (jnp.zeros((1, cfg.n_frames, cfg.d_model))
-              if cfg.cross_attention else None)
+    orch = Orchestrator(cfg, params, OrchestratorConfig(
+        n_prefill=args.prefill, n_decode=args.decode, engine=ecfg, hw=hw,
+        chunk_tokens=32))
+    return orch, wl, 1e6  # report in virtual microseconds
 
-    pending = deque(reqs)
-    done = 0
-    while done < len(reqs):
-        # admit while slots are free (continuous batching)
-        while pending and de.free_slot() is not None:
-            r = pending.popleft()
-            r.t_prefill_start = time.time() - t0
-            st, logits = pe.run(r, frames=frames)
-            first = int(jnp.argmax(logits))
-            de.insert(r, st, first)
-            r.t_first_token = time.time() - t0
-        for r, _slot in de.step():
-            r.t_done = time.time() - t0
-            metrics.record(r)
-            done += 1
-            print(f"req {r.rid:3d} prompt={r.prompt_len:4d} "
-                  f"cached={r.cached_tokens:4d} out={len(r.generated):4d} "
-                  f"ttft={r.ttft:.3f}s tpot={(r.tpot or 0) * 1e3:.1f}ms")
-    s = metrics.summary()
-    print(f"\n== {s['n_requests']} requests  "
-          f"throughput={s['throughput_tok_s']:.1f} tok/s  "
-          f"mean_ttft={s['mean_ttft_s']:.3f}s  "
-          f"mean_tpot={s['mean_tpot_s'] * 1e3:.1f}ms")
-    print(f"store: {len(store)} blocks, hit_rate={store.stats.hit_rate:.2f}, "
-          f"fetched={store.stats.bytes_fetched / 1e6:.1f} MB")
+
+def _build_sim(args):
+    from ..serving.cluster import ClusterSim, SimConfig
+
+    model = configs.get(args.arch)
+    print(f"sim backend: system={args.system} model={model.name} "
+          f"({args.instances} instances)")
+    n = args.requests if not args.smoke else min(args.requests, 16)
+    wl = WorkloadConfig(kind=args.workload, rps=args.rps,
+                        n_requests=n, max_new_tokens=args.max_new,
+                        prefix_share=args.prefix_share)
+    sim = ClusterSim(SimConfig.preset(model, args.system,
+                                      n_instances=args.instances))
+    return sim, wl, 1.0    # report in seconds
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("live", "sim"), default="live")
+    ap.add_argument("--arch", default="llama-13b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-sized model (live) / shrunken workload (sim)")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rps", type=float, default=2.0,
+                    help="live: arrivals per decode-iteration time; "
+                         "sim: arrivals/s")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--prefix-share", type=float, default=0.6)
+    ap.add_argument("--prefill", type=int, default=2)
+    ap.add_argument("--decode", type=int, default=2)
+    ap.add_argument("--system", default="banaserve",
+                    choices=("banaserve", "distserve", "vllm"))
+    ap.add_argument("--workload", default="alpaca",
+                    choices=("alpaca", "longbench", "synthetic"))
+    ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--closed-loop", type=int, default=0, metavar="K",
+                    help="K fixed-concurrency clients instead of "
+                         "open-loop Poisson arrivals")
+    ap.add_argument("--admission-limit", type=int, default=None,
+                    help="max requests in flight; overflow is REJECTED")
+    args = ap.parse_args()
+
+    backend, wl, tscale = (_build_live if args.backend == "live"
+                           else _build_sim)(args)
+    server = Server(backend, admission_limit=args.admission_limit)
+    print(f"fleet: {server.fleet}")
+
+    def pump() -> None:
+        """Print each request's first-token and terminal stream events."""
+        for h in server.handles.values():
+            for ev in h.events():
+                r = h.request
+                if ev.kind == "token" and ev.index == 0:
+                    print(f"req {r.rid:3d} first token @ "
+                          f"{ev.t * tscale:10.2f} "
+                          f"(ttft {r.ttft * tscale:8.2f})")
+                elif ev.kind in ("completed", "aborted", "rejected"):
+                    print(f"req {r.rid:3d} {ev.kind:9s} prompt="
+                          f"{r.prompt_len:4d} out={len(r.generated):3d} "
+                          f"cached={r.cached_tokens:3d}")
+
+    if args.closed_loop:
+        clients = ClosedLoopClients(wl, n_clients=args.closed_loop)
+        s = server.run_closed_loop(clients)
+        pump()
+    else:
+        for r in generate(wl):
+            server.submit(r, at=r.arrival)
+        while server.in_flight() and server.backend.clock:
+            server.step()
+            pump()
+        server.drain()
+        pump()
+        s = server.summary()
+
+    unit = "us" if tscale == 1e6 else "s"
+    print(f"\n== {s['n_requests']} completed / {s['n_rejected']} rejected "
+          f"/ {s['n_aborted']} aborted of {s['n_submitted']} submitted")
+    print(f"throughput={s['throughput_tok_s']:.1f} tok/s  "
+          f"mean_ttft={s['mean_ttft_s'] * tscale:.2f}{unit}  "
+          f"p99_ttft={s['p99_ttft_s'] * tscale:.2f}{unit}  "
+          f"mean_tpot={s['mean_tpot_s'] * tscale:.3f}{unit}")
+    print(f"fleet now: {server.fleet}")
 
 
 if __name__ == "__main__":

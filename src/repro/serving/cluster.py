@@ -39,8 +39,9 @@ from ..core.scheduling import (InstanceLoad, LoadAwareRouter,
                                PrefixAwareRouter, RequestInfo,
                                RoundRobinRouter)
 from ..models.config import ModelConfig
+from .api import BackendBase
 from .clock import VirtualClock
-from .request import SLO, Metrics, Request
+from .request import SLO, Metrics, Phase, Request
 from .workload import WorkloadConfig, generate
 
 
@@ -125,8 +126,16 @@ class _Instance:
             self._last_util_t = now
 
 
-class ClusterSim:
-    def __init__(self, cfg: SimConfig, workload: WorkloadConfig):
+class ClusterSim(BackendBase):
+    """The analytical serving backend: the same ``ServingBackend``
+    surface — and the same ``api.BackendBase`` submit/step/abort/drain
+    code — as the live orchestrator, with event costs from the §4.3
+    model instead of real forwards.  ``workload`` is optional — it only
+    feeds the legacy ``run()`` convenience; open-loop drivers submit
+    their own requests."""
+
+    def __init__(self, cfg: SimConfig,
+                 workload: Optional[WorkloadConfig] = None):
         self.cfg = cfg
         self.wcfg = workload
         self.model = cfg.model
@@ -178,6 +187,9 @@ class ClusterSim:
         self._tier_rates = (0.0, 0.0)     # (prefill, decode) demand rates
         self._layer_dir: Optional[str] = None   # anti-thrash cooldown
         self._layer_dir_t = -1e9
+        self._control_armed = False
+        self._n_transit = 0     # mid-prefill or awaiting a decode slot
+        self._init_backend()    # _by_rid registry + admission_limit
 
     # ------------------------------------------------------------------
     @property
@@ -186,6 +198,80 @@ class ClusterSim:
 
     def _push(self, t: float, kind: str, payload=None):
         self.clock.push(t, kind, payload)
+
+    # -- the ServingBackend surface ---------------------------------------
+    @property
+    def fleet(self) -> Dict[str, str]:
+        """Instance name -> current role, by capacity split (migration
+        moves fractional capacity, so a partially-migrated instance reads
+        ``colocated``)."""
+        out = {}
+        for i in self.instances:
+            if i.prefill_cap > 0 and i.decode_cap > 0:
+                out[i.name] = "colocated"
+            elif i.prefill_cap > 0:
+                out[i.name] = "prefill"
+            elif i.decode_cap > 0:
+                out[i.name] = "decode"
+            else:
+                out[i.name] = "idle"
+        return out
+
+    def in_flight(self) -> int:
+        """Requests admitted and not yet terminal: queued centrally or on
+        an instance, mid-prefill/transfer, or holding a decode slot."""
+        return (len(self.pending)
+                + sum(len(i.prefill_queue) for i in self.instances)
+                + sum(len(i.decode_slots) for i in self.instances)
+                + self._n_transit)
+
+    def _arm_control(self) -> None:
+        if not self._control_armed:
+            self._push(self.now + self.cfg.control_interval, "control")
+            self._control_armed = True
+
+    # submit / step / step_until / drain come from api.BackendBase; only
+    # the structure-search half of ``abort`` is backend-specific.
+    def abort(self, rid: int) -> bool:
+        """Cancel a request wherever it lives: central queue, instance
+        prefill queue, a decode slot (its modelled KV frees immediately),
+        or mid-prefill (dropped at its hand-off event)."""
+        req = self._by_rid.get(rid)
+        if req is None or req.outcome is not None or req.phase == Phase.DONE:
+            return False
+        if req in self.pending:
+            self.pending.remove(req)
+            return self._finish_abort(req)
+        for inst in self.instances:
+            if req in inst.prefill_queue:
+                inst.prefill_queue.remove(req)
+                return self._finish_abort(req)
+            for slot in inst.decode_slots:
+                if slot.req is req:
+                    inst.decode_slots.remove(slot)
+                    inst.kv_tokens -= slot.context
+                    return self._finish_abort(req)
+        # mid-prefill or arrival still scheduled: the matching handler
+        # drops terminal requests when it fires
+        return self._finish_abort(req)
+
+    def _handle(self, ev) -> List[Request]:
+        kind, payload = ev.kind, ev.payload
+        if kind == "arrival":
+            if self._admit(payload):   # bounced: aborted or queue full
+                self._on_arrival(payload)
+        elif kind == "prefill_done":
+            name, req = payload
+            self._on_prefill_done(self.by_name[name], req)
+        elif kind == "decode_kick":
+            self._schedule_decode(self.by_name[payload])
+        elif kind == "decode_done":
+            return self._on_decode_done(self.by_name[payload])
+        elif kind == "control":
+            self._on_control()
+        else:
+            raise ValueError(f"unknown event kind {kind!r}")
+        return []
 
     # -- cost models -----------------------------------------------------
     def _prefill_time(self, inst: _Instance, req: Request,
@@ -432,6 +518,7 @@ class ClusterSim:
         plan = self.router.dispatch([info], loads)
         inst = self.by_name[plan[req.rid]]
         req.prefill_instance = inst.name
+        req.advance(Phase.ROUTED)
         inst.prefill_queue.append(req)
         self._try_start_prefill(inst)
 
@@ -453,6 +540,7 @@ class ClusterSim:
             plan = self.router.dispatch([info], loads)
             inst = self.by_name[plan[req.rid]]
             req.prefill_instance = inst.name
+            req.advance(Phase.ROUTED)
             inst.prefill_queue.append(req)
             self._try_start_prefill(inst)
 
@@ -472,6 +560,8 @@ class ClusterSim:
             return
         # colocated contention: prefill preempts — decode iters stall behind
         req = inst.prefill_queue.pop(0)
+        req.advance(Phase.PREFILL)
+        self._n_transit += 1
         cached = self._cached_tokens(inst, req)
         req.cached_tokens = cached
         req.t_prefill_start = self.now
@@ -482,6 +572,14 @@ class ClusterSim:
         self._push(self.now + dur, "prefill_done", (inst.name, req))
 
     def _on_prefill_done(self, inst: _Instance, req: Request):
+        if req.outcome is not None:
+            # aborted mid-prefill (or while waiting out a saturated decode
+            # tier): drop its KV, let the instance move on
+            self._n_transit -= 1
+            self._try_start_prefill(inst)
+            if self.cfg.mode == "banaserve":
+                self._dispatch_pending()
+            return
         # record cache contents
         if req.prefix_id is not None:
             if self.store is not None:
@@ -508,6 +606,10 @@ class ClusterSim:
         if dec is not inst:
             t_x = A.kv_transfer_time(self.model, req.prompt_len, self.cfg.hw)
         req.decode_instance = dec.name
+        if req.phase != Phase.TRANSFER:
+            req.advance(Phase.TRANSFER)
+        req.advance(Phase.DECODE)
+        self._n_transit -= 1          # now accounted by its decode slot
         req.t_first_token = self.now + t_x
         req.t_tokens.append(req.t_first_token)
         req.generated.append(0)
@@ -538,7 +640,7 @@ class ClusterSim:
         inst.note_busy(start, dur * (1.0 if self.cfg.mode == "colocated"
                                      else 0.4), self.cfg.util_window)
 
-    def _on_decode_done(self, inst: _Instance):
+    def _on_decode_done(self, inst: _Instance) -> List[Request]:
         inst.decode_iter_scheduled = False
         finished = []
         for slot in inst.decode_slots:
@@ -554,6 +656,7 @@ class ClusterSim:
             inst.decode_slots.remove(slot)
             inst.kv_tokens -= slot.context
             slot.req.t_done = self.now
+            slot.req.advance(Phase.DONE)
             self.metrics.record(slot.req)
         if self.cfg.mode == "colocated":
             self._try_start_prefill(inst)     # prefill priority (vLLM)
@@ -561,6 +664,7 @@ class ClusterSim:
                 and inst.decode_cap >= 0.5):
             self._steal_decode_work(inst)
         self._schedule_decode(inst)
+        return [slot.req for slot in finished]
 
     def _steal_decode_work(self, inst: _Instance):
         """Event-driven attention-level migration: an idle fast decoder
@@ -595,6 +699,7 @@ class ClusterSim:
                 0.0, t_mig)))
 
     def _on_control(self):
+        self._control_armed = False
         if self.cfg.mode == "banaserve":
             self._dispatch_pending()
         if self.controller is not None:
@@ -610,30 +715,24 @@ class ClusterSim:
             i.name: i.compute_frac(self.now, self.cfg.util_window)
             for i in self.instances}))
         if self.clock:
-            self._push(self.now + self.cfg.control_interval, "control")
+            self._arm_control()
 
     # ------------------------------------------------------------------
-    def run(self) -> Dict[str, object]:
-        reqs = generate(self.wcfg)
-        for r in reqs:
-            self._push(r.arrival, "arrival", r)
-        self._push(self.cfg.control_interval, "control")
-        n_done = 0
-        while self.clock and n_done < len(reqs):
-            ev = self.clock.pop()
-            kind, payload = ev.kind, ev.payload
-            if kind == "arrival":
-                self._on_arrival(payload)
-            elif kind == "prefill_done":
-                name, req = payload
-                self._on_prefill_done(self.by_name[name], req)
-            elif kind == "decode_kick":
-                self._schedule_decode(self.by_name[payload])
-            elif kind == "decode_done":
-                self._on_decode_done(self.by_name[payload])
-                n_done = self.metrics.n_requests
-            elif kind == "control":
-                self._on_control()
+    def run(self, reqs: Optional[List[Request]] = None
+            ) -> Dict[str, object]:
+        """Batch drive over the streaming surface: submit every request at
+        its workload arrival stamp, drain, summarize.  Without ``reqs``
+        the constructor's workload config generates them (legacy mode)."""
+        if reqs is None:
+            assert self.wcfg is not None, \
+                "ClusterSim.run() without requests needs a workload config"
+            reqs = generate(self.wcfg)
+        for r in sorted(reqs, key=lambda r: r.arrival):
+            self.submit(r, at=r.arrival)
+        self.drain()
+        return self.summary()
+
+    def summary(self) -> Dict[str, object]:
         summary = self.metrics.summary()
         summary["migrations"] = len(self.migration_log)
         summary["mode"] = self.cfg.mode

@@ -719,6 +719,19 @@ class DecodeEngine:
         return [self.extract_slot(i) for i, s in enumerate(self.slots)
                 if s is not None]
 
+    def release_slot(self, slot: int) -> Request:
+        """Free an active slot WITHOUT gathering its state — the abort
+        path.  The slot's paged blocks return to the free list
+        immediately; no token is emitted and no state crosses the wire."""
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} empty"
+        if self.paged:
+            self._release_blocks(slot)
+        self.slots[slot] = None
+        self._slot_len[slot] = 0
+        self.next_token[slot] = 0
+        return req
+
     # -- decode ----------------------------------------------------------
     def _prepare_pages(self) -> None:
         """Pre-forward page bookkeeping: make sure every active slot owns

@@ -57,6 +57,7 @@ from ..core.scheduling import (LoadAwareRouter, PrefixAwareRouter,
                                live_instance_loads, utilization_gap)
 from ..models import kvcache as KC
 from ..models.config import ModelConfig
+from .api import BackendBase
 from .clock import VirtualClock
 from .engine import DecodeEngine, EngineConfig, PrefillEngine
 from .request import SLO, Metrics, Phase, Request
@@ -149,9 +150,11 @@ class _Member:
         return self.engine.load_report()
 
 
-class Orchestrator:
+class Orchestrator(BackendBase):
     """Owns the fleet; the virtual clock drives route → chunked prefill →
-    hand-off → decode → control as independently-timed events."""
+    hand-off → decode → control as independently-timed events.  The
+    submit/step/abort/drain front door comes from ``api.BackendBase`` —
+    the same surface (and code) the simulator serves."""
 
     def __init__(self, cfg: ModelConfig, params,
                  ocfg: OrchestratorConfig = OrchestratorConfig()):
@@ -233,6 +236,7 @@ class Orchestrator:
         # stale-event fencing: a re-roll bumps its member's epoch so
         # decode completions scheduled for the old engine are discarded
         self._epoch: Dict[str, int] = {}
+        self._init_backend()     # _by_rid registry + admission_limit
 
     # -- fleet views -----------------------------------------------------
     def _new_prefill(self, name: str) -> PrefillEngine:
@@ -287,13 +291,36 @@ class Orchestrator:
         return sum(u.free_slots for u in self.decode_units()) \
             - self._reserved
 
-    # -- submission / routing --------------------------------------------
-    def submit(self, req: Request) -> None:
-        """Accept a request live: arrival is stamped to the virtual clock
-        (workload-driven runs keep their own arrival times via ``run``)."""
-        req.arrival = self.clock.now
-        self.clock.push(self.clock.now, "arrival", req)
-        self._arm_control()
+    # -- submission / routing (the ServingBackend surface) ----------------
+    # submit / step / step_until / drain come from api.BackendBase; only
+    # the fleet-structure search half of ``abort`` is backend-specific.
+    def abort(self, rid: int) -> bool:
+        """Cancel a request wherever it lives.  A decode-resident request
+        frees its slot and paged blocks immediately; a mid-prefill one is
+        dropped at its hand-off (its batch's dense waves are unaffected,
+        so batch-mates stay bit-exact).  Surviving token streams are
+        unperturbed — greedy decode rows are independent."""
+        req = self._by_rid.get(rid)
+        if req is None or req.outcome is not None or req.phase == Phase.DONE:
+            return False
+        if req in self.pending:                       # central queue
+            self.pending.remove(req)
+            return self._finish_abort(req)
+        for m in self.prefill_members():
+            if req in m.prefill.queue:                # routed, not started
+                m.prefill.queue.remove(req)
+                return self._finish_abort(req)
+        for u in self.decode_units():                 # decoding
+            for slot, s in enumerate(u.slots):
+                if s is req:
+                    u.release_slot(slot)
+                    ok = self._finish_abort(req)
+                    self._kick_prefills()     # freed capacity admits more
+                    return ok
+        # still mid-prefill (its reservation is released at hand-off time,
+        # where the aborted request's KV is dropped) or its arrival event
+        # has not popped yet (the arrival handler skips terminal requests)
+        return self._finish_abort(req)
 
     def _prefix_key(self, req: Request) -> Optional[bytes]:
         return leading_block_key(req.prompt, self.ecfg.block_size)
@@ -369,8 +396,9 @@ class Orchestrator:
     # -- event handlers ---------------------------------------------------
     def _handle(self, ev) -> List[Request]:
         if ev.kind == "arrival":
-            self.pending.append(ev.payload)
-            self._dispatch()
+            if self._admit(ev.payload):   # bounced: aborted or queue full
+                self.pending.append(ev.payload)
+                self._dispatch()
         elif ev.kind == "prefill":
             self._on_prefill(ev.payload)
         elif ev.kind == "prefill_done":
@@ -432,6 +460,9 @@ class Orchestrator:
         if m is not None:
             m.busy = False
         for req, st, logits in done:
+            self._reserved -= 1
+            if req.outcome is not None:
+                continue       # aborted mid-prefill: its KV is dropped here
             req.advance(Phase.TRANSFER)
             # ties broken by unit name so target selection is
             # deterministic across re-rolls and fleet orderings
@@ -440,7 +471,6 @@ class Orchestrator:
                       key=lambda u: (u.active, u.kv_tokens, u.name))
             t_ov = self._account_handoff(req, st)
             tgt.insert(req, st, int(jnp.argmax(logits)))
-            self._reserved -= 1
             # the first token becomes visible once its KV hand-off's
             # overlapped per-layer schedule completes
             req.t_first_token = self.clock.now + t_ov
@@ -487,45 +517,18 @@ class Orchestrator:
             self._arm_control()
 
     # -- public drive ------------------------------------------------------
-    def step(self) -> List[Request]:
-        """Advance the virtual clock through events until the next compute
-        completion (a prefill wave or decode iteration) has been handled.
-        Returns the requests that finished.  Idle fleets return []."""
-        if not self.clock:
-            if self.in_flight() == 0:
-                return []
-            raise RuntimeError("orchestrator stalled: work in flight but "
-                               "no scheduled events")
-        finished: List[Request] = []
-        while True:
-            ev = self.clock.pop()
-            if ev is None:
-                break
-            finished += self._handle(ev)
-            if ev.kind in ("prefill_done", "decode_done"):
-                break
-        return finished
-
     def run(self, reqs: Sequence[Request],
             max_events: int = 1_000_000) -> dict:
-        """Inject ``reqs`` as timed arrival events (their workload Poisson
-        timestamps ARE the virtual arrival times) and drive the event loop
-        to completion; returns the summary dict."""
+        """Batch drive, now a thin wrapper over the streaming surface:
+        each request is submitted at its workload Poisson timestamp (the
+        virtual arrival time) and the loop drains — event-for-event what
+        ``api.Server.run`` does, so the two paths are bit-identical."""
         for r in sorted(reqs, key=lambda r: r.arrival):
-            self.clock.push(max(r.arrival, self.clock.now), "arrival", r)
-        self._arm_control()
-        target = self.metrics.n_requests + len(reqs)
-        n_ev = 0
-        while self.metrics.n_requests < target:
-            ev = self.clock.pop()
-            if ev is None:
-                raise RuntimeError(
-                    "orchestrator lost requests: nothing scheduled but "
-                    f"only {self.metrics.n_requests}/{target} done")
-            self._handle(ev)
-            n_ev += 1
-            if n_ev > max_events:
-                raise RuntimeError(f"not done after {max_events} events")
+            self.submit(r, at=r.arrival)
+        self.drain(max_events=max_events)
+        lost = [r.rid for r in reqs if r.outcome is None]
+        if lost:
+            raise RuntimeError(f"orchestrator lost requests {lost}")
         return self.summary()
 
     # -- Algorithm 1: control cycle --------------------------------------

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,12 +24,30 @@ class Phase(str, enum.Enum):
     DONE = "done"
 
 
+class Outcome(str, enum.Enum):
+    """How a request left the system — the explicit terminal state the
+    front door (serving/api.py) records so goodput and attainment
+    denominators are never implicit.
+
+    * ``COMPLETED`` — decoded to its token budget; counted in throughput.
+    * ``ABORTED``   — cancelled by the client mid-flight; its decode slot
+      and paged blocks were freed immediately.
+    * ``REJECTED``  — refused at admission (bounded central queue); never
+      entered the fleet.
+    """
+    COMPLETED = "completed"
+    ABORTED = "aborted"
+    REJECTED = "rejected"
+
+
 # lifecycle order; requests only ever move forward (skips allowed — e.g. a
 # standalone engine run goes QUEUED -> PREFILL without a routing step)
 _PHASE_ORDER = {p: i for i, p in enumerate(Phase)}
 
 
-@dataclasses.dataclass
+# eq=False: requests are identities, not values — membership tests on
+# queues (the abort path) must never compare prompt arrays elementwise
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: int
     arrival: float                    # seconds (virtual clock)
@@ -40,6 +58,7 @@ class Request:
 
     # runtime state
     phase: Phase = Phase.QUEUED
+    outcome: Optional[Outcome] = None  # terminal state (None while in flight)
     generated: List[int] = dataclasses.field(default_factory=list)
     prefill_instance: Optional[str] = None
     decode_instance: Optional[str] = None
@@ -52,6 +71,13 @@ class Request:
     # per-token emission times (first token included) — the TBT stream
     # SLO-aware scheduling reasons about (Mooncake-style)
     t_tokens: List[float] = dataclasses.field(default_factory=list)
+    # phase transitions as (virtual time, phase) — the stream the front
+    # door's StreamHandle replays to clients.  Timestamps come from the
+    # backend's VirtualClock (``clock``, attached at admission); a request
+    # run outside any clocked backend logs nan times.
+    phase_log: List[Tuple[float, Phase]] = dataclasses.field(
+        default_factory=list)
+    clock: Optional[Any] = None       # the owning backend's VirtualClock
 
     def advance(self, phase: Phase) -> None:
         """Move the lifecycle forward; backwards transitions are bugs."""
@@ -60,6 +86,8 @@ class Request:
                 f"request {self.rid}: illegal phase transition "
                 f"{self.phase.value} -> {phase.value}")
         self.phase = phase
+        t = self.clock.now if self.clock is not None else float("nan")
+        self.phase_log.append((t, phase))
 
     @property
     def prompt_len(self) -> int:
@@ -116,8 +144,14 @@ def _pct(xs: List[float], q: float) -> float:
 
 @dataclasses.dataclass
 class Metrics:
-    """Aggregates over completed requests — one schema for both the
-    simulator and the live orchestrator."""
+    """Aggregates over terminal requests — one schema for both the
+    simulator and the live orchestrator.
+
+    ``record`` takes completed requests; rejected and aborted requests are
+    recorded separately (``record_rejected`` / ``record_aborted``) so the
+    goodput and attainment denominators are explicit: a rejected request
+    counts as an SLO miss (the system refused it), an aborted one is the
+    client's choice and is excluded from attainment entirely."""
     slo: Optional[SLO] = None
     ttfts: List[float] = dataclasses.field(default_factory=list)
     tpots: List[float] = dataclasses.field(default_factory=list)
@@ -126,12 +160,16 @@ class Metrics:
     arrivals: List[float] = dataclasses.field(default_factory=list)
     tokens_out: int = 0
     n_requests: int = 0
+    n_rejected: int = 0
+    n_aborted: int = 0
+    aborted_tokens: int = 0           # tokens emitted before cancellation
     n_slo_ok: int = 0
     goodput_tokens: int = 0
     t_start: float = 0.0
     t_end: float = 0.0
 
     def record(self, r: Request):
+        r.outcome = Outcome.COMPLETED
         self.n_requests += 1
         self.tokens_out += len(r.generated)
         self.arrivals.append(r.arrival)
@@ -147,10 +185,29 @@ class Metrics:
             self.goodput_tokens += len(r.generated)
         self.t_end = max(self.t_end, r.t_done or 0.0)
 
+    def record_rejected(self, r: Request):
+        """Admission refused the request (bounded central queue)."""
+        r.outcome = Outcome.REJECTED
+        self.n_rejected += 1
+
+    def record_aborted(self, r: Request):
+        """The client cancelled the request mid-flight."""
+        r.outcome = Outcome.ABORTED
+        self.n_aborted += 1
+        self.aborted_tokens += len(r.generated)
+
     def summary(self) -> dict:
         dur = max(self.t_end - self.t_start, 1e-9)
+        # attainment denominator: every request the system answered for —
+        # completed + rejected (a refusal is a miss).  Aborts are excluded:
+        # cancellation is the client's choice, not a service failure.
+        n_accountable = self.n_requests + self.n_rejected
         s = {
             "n_requests": self.n_requests,
+            "n_submitted": (self.n_requests + self.n_rejected
+                            + self.n_aborted),
+            "n_rejected": self.n_rejected,
+            "n_aborted": self.n_aborted,
             "throughput_tok_s": self.tokens_out / dur,
             "total_time_s": dur,
             "mean_ttft_s": _mean(self.ttfts),
@@ -171,8 +228,8 @@ class Metrics:
         if self.slo is not None:
             s["slo_ttft_s"] = self.slo.ttft_s
             s["slo_tpot_s"] = self.slo.tpot_s
-            s["slo_attainment"] = (self.n_slo_ok / self.n_requests
-                                   if self.n_requests else float("nan"))
+            s["slo_attainment"] = (self.n_slo_ok / n_accountable
+                                   if n_accountable else float("nan"))
             s["goodput_tok_s"] = self.goodput_tokens / dur
         else:
             s["slo_attainment"] = float("nan")

@@ -229,6 +229,14 @@ class DecodePipeline:
         return [self.extract_slot(i) for i, s in enumerate(self.lead.slots)
                 if s is not None]
 
+    def release_slot(self, slot: int) -> Request:
+        """Abort path: free the slot (and its paged blocks) on every
+        stage without gathering any state."""
+        req = self.lead.slots[slot]
+        for e in self.engines:
+            e.release_slot(slot)
+        return req
+
     # -- pipelined decode -------------------------------------------------
     def step(self) -> List[Tuple[Request, int]]:
         """One decode iteration: the token column enters stage 0, the

@@ -56,36 +56,90 @@ def _out_len(cfg: WorkloadConfig, rng: np.random.Generator) -> int:
     return int(rng.integers(lo, cfg.max_new_tokens + 1))
 
 
-def generate(cfg: WorkloadConfig) -> List[Request]:
-    """Poisson arrival process with shared-prefix groups."""
-    rng = np.random.default_rng(cfg.seed)
-    # Zipfian popularity over prefix groups
+def _prefix_pool(cfg: WorkloadConfig, rng: np.random.Generator):
+    """(group token pool, Zipf popularity) shared by both client shapes."""
     ranks = np.arange(1, cfg.n_prefix_groups + 1, dtype=np.float64)
     pop = ranks ** (-cfg.prefix_zipf)
     pop /= pop.sum()
     group_prefix_tokens = [
         rng.integers(0, cfg.vocab_size, size=(4096,), dtype=np.int32)
         for _ in range(cfg.n_prefix_groups)]
+    return group_prefix_tokens, pop
 
+
+def _make_request(cfg: WorkloadConfig, rng: np.random.Generator, rid: int,
+                  t: float, group_prefix_tokens, pop) -> Request:
+    """One request of the configured shape, arriving at ``t``."""
+    plen = _prompt_len(cfg, rng)
+    if rng.random() < cfg.prefix_share and cfg.n_prefix_groups > 0:
+        gid = int(rng.choice(cfg.n_prefix_groups, p=pop))
+        pfx_len = min(plen // 2, 4096)
+        prompt = np.concatenate([
+            group_prefix_tokens[gid][:pfx_len],
+            rng.integers(0, cfg.vocab_size, size=(plen - pfx_len,),
+                         dtype=np.int32)])
+        return Request(rid=rid, arrival=t, prompt=prompt,
+                       max_new_tokens=_out_len(cfg, rng),
+                       prefix_id=gid, prefix_len=pfx_len)
+    prompt = rng.integers(0, cfg.vocab_size, size=(plen,), dtype=np.int32)
+    return Request(rid=rid, arrival=t, max_new_tokens=_out_len(cfg, rng),
+                   prompt=prompt)
+
+
+def generate(cfg: WorkloadConfig) -> List[Request]:
+    """Open-loop client: Poisson arrival process with shared-prefix
+    groups — the arrival rate is fixed regardless of service speed."""
+    rng = np.random.default_rng(cfg.seed)
+    group_prefix_tokens, pop = _prefix_pool(cfg, rng)
     reqs: List[Request] = []
     t = 0.0
     for rid in range(cfg.n_requests):
         t += rng.exponential(1.0 / cfg.rps)
-        plen = _prompt_len(cfg, rng)
-        if rng.random() < cfg.prefix_share and cfg.n_prefix_groups > 0:
-            gid = int(rng.choice(cfg.n_prefix_groups, p=pop))
-            pfx_len = min(plen // 2, 4096)
-            prompt = np.concatenate([
-                group_prefix_tokens[gid][:pfx_len],
-                rng.integers(0, cfg.vocab_size, size=(plen - pfx_len,),
-                             dtype=np.int32)])
-            req = Request(rid=rid, arrival=t, prompt=prompt,
-                          max_new_tokens=_out_len(cfg, rng),
-                          prefix_id=gid, prefix_len=pfx_len)
-        else:
-            prompt = rng.integers(0, cfg.vocab_size, size=(plen,),
-                                  dtype=np.int32)
-            req = Request(rid=rid, arrival=t,
-                          max_new_tokens=_out_len(cfg, rng), prompt=prompt)
-        reqs.append(req)
+        reqs.append(_make_request(cfg, rng, rid, t, group_prefix_tokens,
+                                  pop))
     return reqs
+
+
+class ClosedLoopClients:
+    """Closed-loop client pool: ``n_clients`` concurrent sessions, each
+    keeping exactly one request in flight — every completion triggers the
+    next submission (after ``think_time_s`` virtual seconds).
+
+    This is the saturation-experiment shape an open-loop Poisson process
+    cannot express: offered load tracks service capacity by construction,
+    so the system runs at a fixed concurrency instead of a fixed rps
+    (``cfg.rps`` is ignored; ``cfg.n_requests`` bounds the total issued).
+    Driven by ``api.Server.run_closed_loop``.
+    """
+
+    def __init__(self, cfg: WorkloadConfig, n_clients: int,
+                 think_time_s: float = 0.0):
+        assert n_clients >= 1
+        self.cfg = cfg
+        self.n_clients = n_clients
+        self.think_time_s = float(think_time_s)
+        self._rng = np.random.default_rng(cfg.seed)
+        self._pool, self._pop = _prefix_pool(cfg, self._rng)
+        self.issued = 0
+
+    def _next(self, t: float) -> Request:
+        req = _make_request(self.cfg, self._rng, self.issued, t,
+                            self._pool, self._pop)
+        self.issued += 1
+        return req
+
+    def initial(self, now: float = 0.0) -> List[Request]:
+        """The first wave: one request per client (capped by the total
+        request budget), all arriving at ``now``."""
+        n = min(self.n_clients, self.cfg.n_requests)
+        return [self._next(now) for _ in range(n)]
+
+    def on_complete(self, req: Request, now: float) -> Optional[Request]:
+        """Called on EVERY terminal outcome (completed, rejected,
+        aborted): the client submits its next request — arriving at
+        ``now + think_time_s`` — or None once the total budget is
+        exhausted.  Rejections burn budget instead of killing the
+        client, so the pool's concurrency never silently shrinks."""
+        if self.issued >= self.cfg.n_requests:
+            return None
+        return self._next(now + self.think_time_s)

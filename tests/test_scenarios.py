@@ -1,18 +1,24 @@
-"""Scenario matrix: the live orchestrator under bursty, prefill-heavy,
-decode-heavy and prefix-skewed traffic (P/D-Serve-style shape coverage).
+"""Scenario matrix: bursty, prefill-heavy, decode-heavy and prefix-skewed
+traffic (P/D-Serve-style shape coverage), driven through the
+backend-agnostic front door (serving/api.py).
 
-Every scenario asserts (a) token-exactness against the monolithic greedy
-reference for every request and (b) that when the Algorithm 1 controller
-acted, it reduced the hot-tier utilization gap it acted on.  The heavier
-runs — bigger matrices and the span-partitioned (decode_split) variants —
+Every live scenario asserts (a) token-exactness against the monolithic
+greedy reference for every request — streamed through ``StreamHandle``s,
+since stream consumption must never perturb state — and (b) that when
+the Algorithm 1 controller acted, it reduced the hot-tier utilization gap
+it acted on.  The same driver then runs the matrix against the
+``ClusterSim`` backend (analytical costs), pinning that the scenario
+shapes are expressible on either side of the protocol.  The heavier runs
+— bigger matrices and the span-partitioned (decode_split) variants —
 carry the ``slow`` marker and run in CI's second job."""
-import numpy as np
 import pytest
 
 from conftest import TINY, TINY_ECFG
 from repro.core.migration import MigrationKind
+from repro.serving.api import Server
+from repro.serving.cluster import ClusterSim, SimConfig
 from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
-from repro.serving.request import Phase
+from repro.serving.request import Outcome, Phase
 
 # name -> (workload overrides, fleet overrides).  rps values are VIRTUAL
 # arrivals/s: event costs for the tiny model are ~us-scale, so saturating
@@ -40,19 +46,42 @@ SCENARIOS = {
 }
 
 
-def _run(name, tiny_params, make_workload, greedy_reference, n_requests,
-         seed=13, **fleet_extra):
+def _drive(backend, reqs):
+    """Backend-agnostic scenario driver: open-loop submission through the
+    Server front door, streams consumed while the run is in flight."""
+    server = Server(backend)
+    handles = [server.submit(r, at=r.arrival)
+               for r in sorted(reqs, key=lambda r: r.arrival)]
+    while server.in_flight():
+        server.step()
+        for h in handles:
+            h.events()        # consuming streams must not perturb state
+    server.drain()
+    return server, handles
+
+
+def _scenario_workload(name, make_workload, n_requests, seed):
     wl_kw, fleet_kw = SCENARIOS[name]
-    fleet_kw = {**fleet_kw, **fleet_extra}
     wl_kw = dict(wl_kw)
     max_new = wl_kw.pop("max_new_tokens")
-    reqs = make_workload(n_requests, seed=seed, max_new=max_new, **wl_kw)
+    return make_workload(n_requests, seed=seed, max_new=max_new, **wl_kw), \
+        fleet_kw
+
+
+def _run(name, tiny_params, make_workload, greedy_reference, n_requests,
+         seed=13, **fleet_extra):
+    reqs, fleet_kw = _scenario_workload(name, make_workload, n_requests,
+                                        seed)
+    fleet_kw = {**fleet_kw, **fleet_extra}
     orch = Orchestrator(TINY, tiny_params, OrchestratorConfig(
         engine=TINY_ECFG, **fleet_kw))
-    s = orch.run(reqs)
+    server, handles = _drive(orch, reqs)
+    s = server.summary()
     assert s["n_requests"] == n_requests
-    for r in reqs:
+    for r, h in zip(sorted(reqs, key=lambda r: r.arrival), handles):
         assert r.phase == Phase.DONE
+        assert h.outcome == Outcome.COMPLETED
+        assert h.tokens == r.generated
         assert r.generated == greedy_reference(TINY, tiny_params, r.prompt,
                                                r.max_new_tokens), \
             (name, r.rid)
@@ -75,6 +104,23 @@ def test_scenario_token_exact_and_balanced(name, tiny_params,
         assert any(a.kind == MigrationKind.LAYER
                    for a in orch.migration_log)
         assert len(orch.decode_members()) > 1
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_sim_backend(name, make_workload):
+    """The same scenario shapes through the analytical ClusterSim via the
+    identical front-door driver: every request completes and the shared
+    metrics schema comes out."""
+    reqs, _fleet_kw = _scenario_workload(name, make_workload, 8, seed=13)
+    sim = ClusterSim(SimConfig(model=TINY, mode="banaserve"))
+    server, handles = _drive(sim, reqs)
+    s = server.summary()
+    assert s["n_requests"] == 8
+    for h in handles:
+        assert h.outcome == Outcome.COMPLETED
+        assert len(h.tokens) == h.request.max_new_tokens
+    assert s["throughput_tok_s"] > 0
+    assert "p99_ttft_s" in s and "n_submitted" in s
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
