@@ -16,6 +16,7 @@ power-of-two bucket discipline).
 
     PYTHONPATH=src python -m benchmarks.run --only paged_handoff
 """
+import os
 import pathlib
 import sys
 import time
@@ -37,16 +38,20 @@ CFG = ModelConfig(name="bench", family=Family.DENSE, n_layers=4, d_model=128,
                   n_heads=8, n_kv_heads=4, d_ff=256, vocab_size=256)
 MAX_LEN = 256
 BS = 16
-N_ITER = 30
+
+
+def _n_iter() -> int:
+    return 5 if int(os.environ.get("BENCH_SMOKE", "0")) else 30
 
 
 def _bench(fn) -> float:
     jax.block_until_ready(fn())                  # warmup + shape compile
+    n = _n_iter()
     t0 = time.perf_counter()
-    for _ in range(N_ITER):
+    for _ in range(n):
         out = fn()
         jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / N_ITER * 1e3
+    return (time.perf_counter() - t0) / n * 1e3
 
 
 def _dense_move_ms(max_batch: int, req_len: int) -> float:
@@ -82,16 +87,19 @@ def _paged_move_ms(max_batch: int, req_len: int) -> float:
     return _bench(move)
 
 
-def main() -> None:
+def main() -> dict:
+    out = {"moves": {}}
     print("paged_handoff,mode,max_batch,req_len,ms_per_move")
     for max_batch in (4, 8, 16):
         for mode, fn in (("dense", _dense_move_ms), ("paged", _paged_move_ms)):
             ms = fn(max_batch, 64)
             print(f"paged_handoff,{mode},{max_batch},64,{ms:.3f}")
+            out["moves"][f"{mode}_b{max_batch}_len64_ms"] = ms
     for req_len in (16, 64, 192):
         for mode, fn in (("dense", _dense_move_ms), ("paged", _paged_move_ms)):
             ms = fn(8, req_len)
             print(f"paged_handoff,{mode},8,{req_len},{ms:.3f}")
+            out["moves"][f"{mode}_b8_len{req_len}_ms"] = ms
 
     # Eq. 4/11: the moved payload's ordered per-layer schedule, serial vs
     # layer-wise overlapped against the destination's per-layer compute —
@@ -107,6 +115,9 @@ def main() -> None:
     print("paged_handoff_schedule,layers,serial_ms,overlap_ms,hidden_frac")
     print(f"paged_handoff_schedule,{len(nbytes)},{ser * 1e3:.4f},"
           f"{ovl * 1e3:.4f},{1 - ovl / ser:.3f}")
+    out["schedule"] = {"layers": len(nbytes), "serial_ms": ser * 1e3,
+                       "overlap_ms": ovl * 1e3,
+                       "hidden_frac": 1 - ovl / ser}
 
     # compile-shape discipline over a mixed-length workload
     params = T.init(CFG, jax.random.PRNGKey(0))
@@ -122,6 +133,9 @@ def main() -> None:
     rep = pe.compile_report()
     print("paged_prefill_shapes,n_shapes,bound")
     print(f"paged_prefill_shapes,{rep['n_shapes']},{rep['bound']}")
+    out["prefill_shapes"] = {"n_shapes": rep["n_shapes"],
+                             "bound": rep["bound"]}
+    return out
 
 
 if __name__ == "__main__":

@@ -1,0 +1,86 @@
+"""Diff fresh BENCH_*.json smoke artifacts against the committed
+baselines in ``benchmarks/baselines/``.
+
+Every numeric leaf present in both files is compared; a move beyond the
+tolerance (default 10%) prints a GitHub Actions ``::warning::``
+annotation.  Structural keys (``wall_seconds``, ``smoke``, ``bench``)
+and counter-style exact metrics are still compared — a changed page
+count or token total is exactly the kind of silent behaviour drift the
+baselines exist to catch.  The checker always exits 0: smoke timings on
+shared CI runners are noisy, so regressions warn rather than gate.
+
+    python benchmarks/check_regression.py --current bench-artifacts \
+        [--baselines benchmarks/baselines] [--tolerance 0.10]
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _leaves(obj, prefix=""):
+    """Flatten to dotted-path -> numeric leaf (bools excluded)."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_leaves(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix.rstrip(".")] = float(obj)
+    return out
+
+
+SKIP = {"wall_seconds", "smoke"}
+
+
+def compare(baseline: dict, current: dict, tolerance: float):
+    """Yield (path, base, cur, rel_delta) for out-of-tolerance leaves."""
+    base, cur = _leaves(baseline), _leaves(current)
+    for path in sorted(base.keys() & cur.keys()):
+        if path.split(".")[-1] in SKIP:
+            continue
+        b, c = base[path], cur[path]
+        if b == c:
+            continue
+        denom = max(abs(b), 1e-12)
+        rel = (c - b) / denom
+        if abs(rel) > tolerance:
+            yield path, b, c, rel
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="bench-artifacts",
+                    help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--baselines",
+                    default=str(pathlib.Path(__file__).parent / "baselines"))
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args()
+
+    n_checked = n_drift = 0
+    for base_path in sorted(pathlib.Path(args.baselines).glob("BENCH_*.json")):
+        cur_path = pathlib.Path(args.current) / base_path.name
+        if not cur_path.exists():
+            print(f"::warning::{base_path.name}: no fresh artifact to "
+                  f"compare (looked in {args.current})")
+            continue
+        baseline = json.loads(base_path.read_text())
+        current = json.loads(cur_path.read_text())
+        drifted = list(compare(baseline, current, args.tolerance))
+        n_checked += 1
+        n_drift += len(drifted)
+        for path, b, c, rel in drifted:
+            print(f"::warning file=benchmarks/baselines/{base_path.name}::"
+                  f"{base_path.name}:{path} moved {rel:+.1%} "
+                  f"(baseline {b:.6g} -> current {c:.6g})")
+        status = f"{len(drifted)} drifted" if drifted else "ok"
+        print(f"{base_path.name}: {status} "
+              f"(tolerance {args.tolerance:.0%})")
+    if n_checked == 0:
+        print("::warning::no baselines compared — check paths")
+    print(f"checked {n_checked} artifact(s), {n_drift} metric(s) "
+          f"beyond tolerance")
+    return 0          # warn-only: smoke timings on CI runners are noisy
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,8 @@ import time
 
 from . import (bench_attention, bench_layer_span, bench_migration,
                bench_orchestrator, bench_paged_handoff, bench_pipeline,
-               bench_scheduler, bench_throughput, bench_utilization)
+               bench_prefix_reuse, bench_scheduler, bench_throughput,
+               bench_utilization)
 
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
@@ -28,6 +29,7 @@ ALL = {
     "scheduler": bench_scheduler,     # Fig. 2a (simulator)
     "orchestrator": bench_orchestrator,  # Fig. 2a live, time-domain + SLOs
     "paged_handoff": bench_paged_handoff,  # block moves vs row surgery
+    "prefix_reuse": bench_prefix_reuse,  # shared vs copy vs recompute
     "layer_span": bench_layer_span,   # span move vs whole-instance re-roll
     "utilization": bench_utilization, # Fig. 2b
     "attention": bench_attention,     # kernels

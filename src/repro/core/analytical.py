@@ -48,6 +48,34 @@ def prefill_flops(cfg: ModelConfig, seq_len: int, batch: int = 1) -> float:
     return flops
 
 
+def suffix_prefill_flops(cfg: ModelConfig, prompt_len: int,
+                         cached_tokens: int, batch: int = 1) -> float:
+    """FLOPs of the incremental (prefix-aware) prefill that resumes from
+    ``cached_tokens`` of stored KV: matmuls scale with the suffix, the
+    attention term with suffix x full context."""
+    cached = max(min(cached_tokens, prompt_len), 0)
+    s = prompt_len - cached
+    n = cfg.active_param_count()
+    flops = 2.0 * n * s * batch
+    kv_len = cfg.kv_cache_len(prompt_len)
+    n_attn = sum(1 for b in cfg.blocks()
+                 if b.value in ("attention", "local_attn"))
+    flops += batch * n_attn * 2 * 2 * s * min(prompt_len, kv_len) \
+        * cfg.n_heads * cfg.head_dim * 0.5
+    return flops
+
+
+def prefix_reuse_flops_saved(cfg: ModelConfig, prompt_len: int,
+                             cached_tokens: int, batch: int = 1) -> float:
+    """Prefill FLOPs the Global KV Store's prefix hit avoids: the full
+    prompt's prefill minus the incremental suffix forward (Fig. 5 — the
+    recompute-vs-fetch trade the tiered store wins when fetch hides under
+    per-layer compute)."""
+    return max(prefill_flops(cfg, prompt_len, batch)
+               - suffix_prefill_flops(cfg, prompt_len, cached_tokens,
+                                      batch), 0.0)
+
+
 def decode_flops_per_token(cfg: ModelConfig, context: int, batch: int = 1) -> float:
     n = cfg.active_param_count()
     flops = 2.0 * n * batch

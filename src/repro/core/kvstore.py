@@ -19,6 +19,17 @@ Design
 * **Layer-wise overlapped fetch** is modelled by ``core.pipeline`` — the
   store exposes per-layer transfer times so the engine can charge only the
   non-overlapped residual (Eq. 12–17).
+* **Zero-copy residency**: an entry may point at a *physical page* of a
+  registered decode block pool instead of carrying a payload copy
+  (``register_pages``).  The store then holds one refcount on the page
+  (``models.kvcache.BlockPool``); decode slots bind the same page by
+  reference (``resident_prefix``) so a hot prefix costs HBM once.  The
+  host/ssd tiers stay *backing* levels: under pool pressure
+  (``reclaim_pool``) or instance teardown (``detach_pool``) the LRU
+  pool-resident entries are demoted — the page is copied out of HBM
+  (billed at the backing tier's bandwidth) and freed at refcount zero —
+  and promotion on a later hit is billed through the overlapped fetch
+  path exactly as payload fetches are today.
 """
 from __future__ import annotations
 
@@ -78,6 +89,11 @@ class StoreStats:
     inserts: int = 0
     evictions: int = 0
     bytes_fetched: int = 0
+    # zero-copy sharing accounting
+    registered_blocks: int = 0     # payload entries converted to page refs
+    bound_blocks: int = 0          # pages handed out for by-reference binds
+    demotions: int = 0             # pages copied out of HBM to backing tiers
+    bytes_demoted: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -86,7 +102,8 @@ class StoreStats:
 
 
 class _Entry:
-    __slots__ = ("payload", "nbytes", "tier", "n_tokens", "sched")
+    __slots__ = ("payload", "nbytes", "tier", "n_tokens", "sched",
+                 "pool", "page")
 
     def __init__(self, payload: Any, nbytes: int, tier: int, n_tokens: int):
         self.payload = payload
@@ -94,6 +111,8 @@ class _Entry:
         self.tier = tier
         self.n_tokens = n_tokens
         self.sched = None      # memoized per-layer byte schedule (or ())
+        self.pool = None       # pool id when page-resident (zero-copy)
+        self.page = None       # physical page index in that pool
 
 
 class GlobalKVStore:
@@ -105,24 +124,32 @@ class GlobalKVStore:
         self.tiers = list(tiers)
         self._entries: "OrderedDict[bytes, _Entry]" = OrderedDict()
         self._tier_used = [0 for _ in self.tiers]
+        self._pools: Dict[str, Any] = {}   # pool id -> registered pool
         self.stats = StoreStats()
+        self.demote_latency_s = 0.0        # modelled HBM->backing copies
 
     # -- lookup ----------------------------------------------------------
     def match(self, tokens: Sequence[int], record_stats: bool = True,
-              keys: Optional[List[bytes]] = None) -> Tuple[int, List[bytes]]:
+              keys: Optional[List[bytes]] = None,
+              touch: Optional[bool] = None) -> Tuple[int, List[bytes]]:
         """Longest cached prefix of ``tokens``.
 
         Returns (n_matched_tokens, matched_block_keys).  Pass
         ``record_stats=False`` for tentative probes (e.g. batch planning)
         so repeated lookups for one request don't distort hit-rate stats;
-        pass precomputed ``keys`` to skip re-hashing the prompt."""
+        ``touch`` controls the LRU recency bump and defaults to
+        ``record_stats`` — a tentative probe must not perturb eviction
+        order either.  Pass precomputed ``keys`` to skip re-hashing the
+        prompt."""
         if keys is None:
             keys = chain_hashes(tokens, self.block_size)
+        touch = record_stats if touch is None else touch
         matched: List[bytes] = []
         for k in keys:
             if k in self._entries:
                 matched.append(k)
-                self._entries.move_to_end(k)        # LRU touch
+                if touch:
+                    self._entries.move_to_end(k)    # LRU touch
             else:
                 break
         if record_stats:
@@ -148,9 +175,14 @@ class GlobalKVStore:
         per_layer: Dict[int, float] = {}
         for k in keys:
             e = self._entries[k]
-            payloads.append(e.payload)
+            if e.pool is not None:
+                # page-resident: materialize a copy out of the live pool
+                # (HBM-tier read; the page itself stays shared in place)
+                payloads.append(self._pools[e.pool].materialize(e.page))
+            else:
+                payloads.append(e.payload)
             bw = self.tiers[e.tier].bandwidth_gbps * 1e9
-            sched = (self._layer_schedule(e)
+            sched = (self._layer_schedule(e, payloads[-1])
                      if t_layer_compute is not None else None)
             if sched:
                 # seconds per layer: the block's accounted bytes, split
@@ -162,7 +194,7 @@ class GlobalKVStore:
             else:
                 latency += e.nbytes / bw
             self.stats.bytes_fetched += e.nbytes
-            if e.tier != 0:                          # promote to HBM tier
+            if e.tier != 0 and e.pool is None:       # promote to HBM tier
                 self._move_tier(k, e, 0)
         if per_layer:
             from ..core.analytical import overlapped_schedule_time
@@ -175,15 +207,17 @@ class GlobalKVStore:
         return payloads, latency
 
     @staticmethod
-    def _layer_schedule(e: _Entry):
+    def _layer_schedule(e: _Entry, payload: Any):
         """Memoized ordered per-layer byte schedule of an entry's payload;
-        () for opaque (non request-state) payloads."""
+        () for opaque (non request-state) payloads.  ``payload`` is passed
+        in because page-resident entries materialize theirs per fetch (the
+        schedule shape is stable, so memoizing on the entry stays valid)."""
         if e.sched is None:
             e.sched = ()
-            if isinstance(e.payload, dict) and "groups" in e.payload:
+            if isinstance(payload, dict) and "groups" in payload:
                 from ..models.kvcache import layer_transfer_schedule
                 try:
-                    e.sched = tuple(layer_transfer_schedule(e.payload))
+                    e.sched = tuple(layer_transfer_schedule(payload))
                 except Exception:
                     pass
         return e.sched
@@ -209,6 +243,117 @@ class GlobalKVStore:
             out.append(k)
         return out
 
+    # -- zero-copy page residency (refcounted pool sharing) ---------------
+    def attach_pool(self, pool_id: str, pool: Any) -> None:
+        """Register a block pool the store may hold page references into.
+        ``pool`` must expose ``ref_pages(pages)``, ``unref_pages(pages) ->
+        freed`` and ``materialize(page) -> payload`` (the decode engines
+        do)."""
+        self._pools[pool_id] = pool
+
+    def register_pages(self, keys: Sequence[bytes], pool_id: str,
+                       pages: Sequence[int]) -> int:
+        """Re-point existing payload entries at live pool pages (refcount
+        ++ per page; the payload copy is dropped and its HBM-tier bytes
+        freed).  First registration wins — an entry already page-resident
+        (this pool or another) is left alone, so at most one pool ever
+        backs a key.  Returns the number of entries converted."""
+        pool = self._pools[pool_id]
+        n = 0
+        for k, p in zip(keys, pages):
+            e = self._entries.get(k)
+            if e is None or e.pool is not None:
+                continue
+            pool.ref_pages([int(p)])
+            self._tier_used[e.tier] -= e.nbytes
+            e.payload = None
+            e.sched = None
+            e.tier = 0
+            e.pool = pool_id
+            e.page = int(p)
+            self.stats.registered_blocks += 1
+            n += 1
+        return n
+
+    def resident_prefix(self, keys: Sequence[bytes],
+                        pool_id: str) -> List[int]:
+        """Physical pages of the longest prefix of ``keys`` resident in
+        ``pool_id`` — the zero-copy bind lookup (no bytes move; the caller
+        refs the pages when it binds them).  Touches matched entries'
+        recency like a real hit."""
+        pages: List[int] = []
+        for k in keys:
+            e = self._entries.get(k)
+            if e is None or e.pool != pool_id:
+                break
+            pages.append(e.page)
+            self._entries.move_to_end(k)
+        self.stats.bound_blocks += len(pages)
+        return pages
+
+    def pool_pages(self, pool_id: str) -> Dict[bytes, int]:
+        """key -> page for every entry resident in ``pool_id`` (leak
+        checks: these are exactly the store's refcount holds)."""
+        return {k: e.page for k, e in self._entries.items()
+                if e.pool == pool_id}
+
+    def _demote_resident(self, key: bytes, e: _Entry) -> bool:
+        """Copy a page-resident entry out of HBM into the first backing
+        tier (payload form) and drop the store's page hold — the page
+        frees at refcount zero.  Returns True when the pool page was
+        actually freed (it may survive under slot holds)."""
+        pool = self._pools[e.pool]
+        payload = pool.materialize(e.page)
+        freed = pool.unref_pages([e.page])
+        e.pool = None
+        e.page = None
+        e.payload = payload
+        e.sched = None
+        self.stats.demotions += 1
+        self.stats.bytes_demoted += e.nbytes
+        if len(self.tiers) > 1:
+            self._make_room(1, e.nbytes, skip=key)
+            e.tier = 1
+            self._tier_used[1] += e.nbytes
+            self.demote_latency_s += e.nbytes / (
+                self.tiers[1].bandwidth_gbps * 1e9)
+        else:
+            # no backing tier: the demotion is an eviction
+            del self._entries[key]
+            self.stats.evictions += 1
+        return bool(freed)
+
+    def reclaim_pool(self, pool_id: str, n_pages: int) -> int:
+        """Free up to ``n_pages`` pages of ``pool_id`` by demoting the
+        LRU page-resident entries to the backing tiers (the pool-pressure
+        path: a decode allocation that cannot find free pages evicts the
+        store's holds first).  Returns pages actually freed — an entry
+        whose page other slots still hold frees nothing yet."""
+        freed = 0
+        for k in list(self._entries):                # LRU order
+            if freed >= n_pages:
+                break
+            e = self._entries.get(k)
+            if e is not None and e.pool == pool_id:
+                freed += bool(self._demote_resident(k, e))
+        return freed
+
+    def detach_pool(self, pool_id: str) -> int:
+        """Demote every entry resident in ``pool_id`` and forget the pool
+        (instance teardown / role re-roll: the pool's pages are about to
+        be destroyed, so the store must stop referencing them).  Returns
+        the number of entries demoted."""
+        if pool_id not in self._pools:
+            return 0
+        n = 0
+        for k in list(self._entries):
+            e = self._entries.get(k)
+            if e is not None and e.pool == pool_id:
+                self._demote_resident(k, e)
+                n += 1
+        del self._pools[pool_id]
+        return n
+
     # -- internals -------------------------------------------------------
     def _move_tier(self, key: bytes, e: _Entry, tier: int):
         self._tier_used[e.tier] -= e.nbytes
@@ -221,7 +366,10 @@ class GlobalKVStore:
         while self._tier_used[tier] + nbytes > self.tiers[tier].capacity_bytes:
             victim = None
             for k, e in self._entries.items():       # LRU order = insertion
-                if e.tier == tier and k != skip:
+                # page-resident entries occupy the POOL's HBM, not the
+                # store's tier budget — pool pressure (reclaim_pool) is
+                # what demotes them, so skip them here
+                if e.tier == tier and k != skip and e.pool is None:
                     victim = (k, e)
                     break
             if victim is None:

@@ -27,6 +27,20 @@ Paged primitives (the serving runtime's block-table layout):
   hand-off payload; ``core.analytical.overlapped_schedule_time`` costs it
   with the §4.2 layer-wise transmission overlap (Eq. 4/11).
 
+Zero-copy prefix sharing (the vLLM/Mooncake block-sharing scheme):
+
+* ``BlockPool`` — host-side per-page refcount accounting over a pool.
+  A page's refcount counts its holders (slot block-table references plus
+  Global-KV-Store holds); pages return to the free list only at refcount
+  zero, so a cached prefix is HBM-resident once no matter how many slots
+  bind it.
+* ``copy_pages`` — jitted copy-on-write fork: duplicate pages inside one
+  pool (a writer forks a shared page before the step touches it).
+* ``split_paged_state`` — drop the leading pages of a paged wire state
+  (they are bound by reference instead of scattered).
+* ``page_payload`` — one physical page as a dense per-block store payload
+  (the demotion path out of HBM into the backing tiers).
+
 Only attention KV leaves (``k``/``v``/``pos`` + int8 scales) whose cache
 length equals the stack's page length (the longest attention cache) are
 paged; ring buffers shorter than that, recurrent states and cross-attention
@@ -391,6 +405,169 @@ def reset_page_positions(pcache: Cache, phys_blocks: Sequence[int],
     return {**pcache,
             "groups": tuple(conv(g, 1) for g in pcache["groups"]),
             "rem": tuple(conv(g, 0) for g in pcache["rem"])}
+
+
+# -- refcounted page sharing (zero-copy prefix reuse) -----------------------
+
+class BlockPool:
+    """Host-side refcounted page accounting for one paged block pool.
+
+    A page's refcount counts its *holders*: slot block-table references
+    plus Global-KV-Store holds.  ``alloc`` hands out exclusive pages
+    (refcount 0 → 1), ``ref`` adds a holder to a live page (the zero-copy
+    bind), and ``unref`` drops one — a page returns to the free list only
+    when the last holder lets go (free-at-zero), so a shared prefix is
+    HBM-resident once no matter how many slots bind it.  Pages below
+    ``n_reserved`` (the scratch page) are never allocated or refcounted.
+    """
+
+    def __init__(self, n_pages: int, n_reserved: int = 1):
+        assert n_pages > n_reserved >= 0
+        self.n_pages = n_pages
+        self.n_reserved = n_reserved
+        self.refcount = np.zeros(n_pages, np.int32)
+        # descending so .pop() hands out low pages first (matches the
+        # pre-refcount engines' allocation order)
+        self.free_list: List[int] = list(range(n_pages - 1,
+                                               n_reserved - 1, -1))
+        self.peak_used = 0
+
+    @property
+    def used(self) -> int:
+        """Live (refcount > 0) pages."""
+        return self.n_pages - self.n_reserved - len(self.free_list)
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` exclusive pages off the free list (refcount 1)."""
+        assert len(self.free_list) >= n, "block pool exhausted"
+        pages = [self.free_list.pop() for _ in range(n)]
+        for p in pages:
+            assert self.refcount[p] == 0
+            self.refcount[p] = 1
+        self.peak_used = max(self.peak_used, self.used)
+        return pages
+
+    def ref(self, pages: Sequence[int]) -> None:
+        """Add one holder to each (live) page — the zero-copy bind."""
+        for p in pages:
+            assert self.refcount[p] > 0, f"ref of dead page {p}"
+            self.refcount[p] += 1
+
+    def unref(self, pages: Sequence[int]) -> List[int]:
+        """Drop one holder from each page; pages that hit refcount zero
+        return to the free list and are reported back (free-at-zero)."""
+        freed = []
+        for p in pages:
+            assert self.refcount[p] > 0, f"unref of free page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.free_list.append(p)
+                freed.append(p)
+        return freed
+
+    def check(self, holders: Optional[Sequence[Sequence[int]]] = None
+              ) -> None:
+        """Conservation invariant: every page is reserved, free (refcount
+        0) or live (refcount > 0), with no duplicates on the free list.
+        With ``holders`` (one page-list per holder: slot rows, store
+        holds) also checks each page's refcount equals its holder count —
+        the 'free list + Σ live table entries accounts for every page'
+        property."""
+        free = set(self.free_list)
+        assert len(free) == len(self.free_list), "duplicate free pages"
+        for p in range(self.n_reserved):
+            assert self.refcount[p] == 0 and p not in free
+        for p in range(self.n_reserved, self.n_pages):
+            assert (self.refcount[p] == 0) == (p in free), \
+                f"page {p}: refcount {self.refcount[p]} vs free list"
+        assert len(self.free_list) + self.used \
+            == self.n_pages - self.n_reserved
+        if holders is not None:
+            counts = np.zeros(self.n_pages, np.int64)
+            for pages in holders:
+                for p in pages:
+                    counts[p] += 1
+            assert np.array_equal(counts, self.refcount.astype(np.int64)), \
+                "refcounts do not match holder lists"
+
+
+def copy_pages(pcache: Cache, src_idx: jax.Array, dst_idx: jax.Array, *,
+               block_size: int) -> Cache:
+    """Copy-on-write fork: duplicate pool pages ``src_idx`` into
+    ``dst_idx`` across every paged leaf.  Jit-compatible; run donated it
+    is an in-place write of the destination pages only — the writer forks
+    a shared page before the step touches it, readers keep the source."""
+    batch = int(pcache["block_tables"].shape[0])
+
+    def conv(g: Dict[str, Any], batch_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if _is_pool_leaf(key, a, batch_axis, batch, block_size):
+                sel = (slice(None),) * batch_axis
+                out[key] = a.at[sel + (dst_idx,)].set(a[sel + (src_idx,)])
+            else:
+                out[key] = a
+        return out
+
+    return {**pcache,
+            "groups": tuple(conv(g, 1) for g in pcache["groups"]),
+            "rem": tuple(conv(g, 0) for g in pcache["rem"])}
+
+
+def split_paged_state(st: RequestState, n_head_blocks: int,
+                      block_size: int) -> RequestState:
+    """Drop the first ``n_head_blocks`` pages from a paged wire state.
+
+    The bind path of zero-copy sharing: the head pages already live in
+    the destination pool (the store's registered prefix) and are bound by
+    reference, so only the suffix pages cross the wire.  ``length`` stays
+    the full request length — the block table row is prefix + suffix."""
+    n = int(st["n_blocks"])
+    assert 0 <= n_head_blocks <= n, (n_head_blocks, n)
+    if n_head_blocks == 0:
+        return st
+
+    def conv(g: Dict[str, Any], seq_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if (key in PAGED_KEYS and hasattr(a, "shape")
+                    and a.ndim == seq_axis + 2 + _LEAF_TAIL[key]
+                    and a.shape[seq_axis] == n
+                    and a.shape[seq_axis + 1] == block_size):
+                out[key] = a[(slice(None),) * seq_axis
+                             + (slice(n_head_blocks, None),)]
+            else:
+                out[key] = a
+        return out
+
+    return {
+        "length": st["length"],
+        "n_blocks": n - n_head_blocks,
+        "groups": tuple(conv(g, 1) for g in st["groups"]),
+        "rem": tuple(conv(g, 0) for g in st["rem"]),
+    }
+
+
+def page_payload(pcache: Cache, page: int, block_size: int) -> RequestState:
+    """One physical page's KV as a dense per-block store payload — the
+    same shape ``slice_prefix_kv`` produces for one block, so demoted
+    pages re-enter through ``merge_prefix_kv`` on the fetch path
+    unchanged.  Only meaningful for prefix-cacheable stacks (every
+    attention cache paged at the full page space)."""
+    batch = int(pcache["block_tables"].shape[0])
+
+    def conv(g: Dict[str, Any], batch_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if _is_pool_leaf(key, a, batch_axis, batch, block_size):
+                out[key] = a[(slice(None),) * batch_axis + (page,)]
+        return out
+
+    return {
+        "length": jnp.asarray(block_size, jnp.int32),
+        "groups": tuple(conv(g, 1) for g in pcache["groups"]),
+        "rem": tuple(conv(g, 0) for g in pcache["rem"]),
+    }
 
 
 # -- dense request state <-> paged request state ----------------------------

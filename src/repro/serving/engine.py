@@ -136,6 +136,8 @@ _page_scatter = jax.jit(KC.scatter_pages, static_argnames=("block_size",),
                         donate_argnums=(0,))
 _page_reset = jax.jit(KC.reset_page_positions,
                       static_argnames=("block_size",), donate_argnums=(0,))
+_page_copy = jax.jit(KC.copy_pages, static_argnames=("block_size",),
+                     donate_argnums=(0,))
 
 
 class PrefillEngine:
@@ -567,6 +569,9 @@ class DecodeEngine:
         # hand-off/control paths free of device syncs
         self._slot_len = np.zeros((ecfg.max_batch,), np.int64)
         self.tokens_decoded = 0
+        self._store: Optional[GlobalKVStore] = None
+        self.cow_forks = 0        # shared pages forked copy-on-write
+        self.pages_shared = 0     # pages bound by reference (no copy)
         self._set_span(layer_span)
 
     def _set_span(self, layer_span: Optional[Tuple[int, int]]) -> None:
@@ -582,12 +587,12 @@ class DecodeEngine:
                                             dtype=self.params["embed"].dtype)
             self._nb_slot = self.page_len // ecfg.block_size
             n_phys = 1 + ecfg.max_batch * self._nb_slot
-            # host-side mirrors: block tables + free list (block 0 is the
-            # reserved scratch page); the device table is refreshed from
-            # the mirror whenever it goes stale
+            # host-side mirrors: block tables + the refcounted page pool
+            # (block 0 is the reserved scratch page); the device table is
+            # refreshed from the mirror whenever it goes stale
             self._bt = np.full((ecfg.max_batch, self._nb_slot), -1, np.int32)
             self._bt_dirty = False    # device table out of sync with _bt
-            self._free: List[int] = list(range(n_phys - 1, 0, -1))
+            self.pool = KC.BlockPool(n_phys)
             self._slot_blocks: List[List[int]] = \
                 [[] for _ in range(ecfg.max_batch)]
         else:
@@ -604,6 +609,47 @@ class DecodeEngine:
         pools and the jitted step for the new span."""
         assert self.active == 0, "drain slots before re-slicing the span"
         self._set_span(layer_span)
+
+    # -- zero-copy prefix sharing (store-held pages) ---------------------
+    @property
+    def _free(self) -> List[int]:
+        """The pool's free list (compat view; allocation goes through
+        ``pool``)."""
+        return self.pool.free_list
+
+    def attach_store(self, store: GlobalKVStore) -> None:
+        """Let the global store hold refcounted references into this
+        engine's block pool (zero-copy prefix sharing): store entries for
+        published prefixes point at live pages instead of payload copies,
+        and binds/reclaims go through the pool-interface methods below."""
+        assert self.paged, "page sharing needs the paged layout"
+        self._store = store
+        store.attach_pool(self.name, self)
+
+    # pool interface the store calls (attach_pool contract)
+    def ref_pages(self, pages: List[int]) -> None:
+        self.pool.ref(pages)
+
+    def unref_pages(self, pages: List[int]) -> List[int]:
+        return self.pool.unref(pages)
+
+    def materialize(self, page: int) -> Dict[str, Any]:
+        """One physical page as a dense per-block store payload (the
+        store's demotion/fetch copy-out)."""
+        return KC.page_payload(self.cache, int(page), self.ecfg.block_size)
+
+    def slot_pages(self, slot: int) -> List[int]:
+        """Physical pages backing ``slot`` in block order (bound+owned)."""
+        return list(self._slot_blocks[slot])
+
+    def _ensure_free(self, n: int) -> None:
+        """Guarantee ``n`` free pages, demoting LRU store-held pages out
+        of HBM first (the store's holds are the reclaimable buffer —
+        backing tiers keep the bytes, Fig. 5 tiering)."""
+        short = n - len(self.pool.free_list)
+        if short > 0 and self._store is not None:
+            self._store.reclaim_pool(self.name, short)
+        assert len(self.pool.free_list) >= n, "decode block pool exhausted"
 
     # ------------------------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -647,7 +693,9 @@ class DecodeEngine:
 
     # -- slot transfer ---------------------------------------------------
     def _release_blocks(self, slot: int) -> None:
-        self._free.extend(reversed(self._slot_blocks[slot]))
+        # refcount-decrement: pages free only at zero — a block the store
+        # (or a sharing sibling) still holds stays resident in place
+        self.pool.unref(list(reversed(self._slot_blocks[slot])))
         self._slot_blocks[slot] = []
         self._bt[slot, :] = -1
         # the stale device row must be resynced before the next step: a
@@ -656,29 +704,51 @@ class DecodeEngine:
         self._bt_dirty = True
 
     def adopt(self, req: Request, state: Dict[str, Any],
-              next_token: int, slot: Optional[int] = None) -> int:
+              next_token: int, slot: Optional[int] = None,
+              shared_pages: Optional[List[int]] = None) -> int:
         """Place an in-flight request's state into a free slot (migration
         receive path: no token is emitted by the move itself).  Paged
         states land as per-layer page copies into freshly allocated
         blocks; dense states are converted first.  ``slot`` pins the
-        target row — pipeline stages must keep identical slot layouts."""
+        target row — pipeline stages must keep identical slot layouts.
+
+        ``shared_pages`` is the zero-copy bind: physical pages of THIS
+        pool holding the request's prefix (the store's registered blocks).
+        They are bound into the front of the slot's block table by
+        reference (refcount++, no gather/scatter) and ``state`` must
+        already be head-split past them (``KC.split_paged_state``)."""
         if slot is None:
             slot = self.free_slot()
         assert slot is not None and self.slots[slot] is None, \
             "decode engine full"
         if self.paged:
+            shared = [int(p) for p in (shared_pages or ())]
+            if shared:
+                assert "n_blocks" in state, \
+                    "shared-page binds need the paged wire format"
+                self.pool.ref(shared)
+                self.pages_shared += len(shared)
             if "n_blocks" not in state:
                 state = KC.dense_state_to_paged(state, self.ecfg.block_size)
             n = int(state["n_blocks"])
-            assert len(self._free) >= n, "decode block pool exhausted"
-            phys = [self._free.pop() for _ in range(n)]
+            self._ensure_free(n)
+            phys = self.pool.alloc(n)
             self.cache = KC.insert_paged_state(
                 self.cache, slot, state, phys, self.ecfg.block_size,
                 scatter=_page_scatter)
+            row = shared + phys
             self._bt[slot, :] = -1
-            self._bt[slot, :n] = phys
-            self._slot_blocks[slot] = list(phys)
+            self._bt[slot, :len(row)] = row
+            self._slot_blocks[slot] = list(row)
+            if shared:
+                # the scatter wrote a suffix-only table row (pages at
+                # logical blocks 0..n-1); rewrite it with the bound
+                # prefix in front so the very next gather is correct
+                self.cache["block_tables"] = \
+                    self.cache["block_tables"].at[slot].set(
+                        jnp.asarray(self._bt[slot]))
         else:
+            assert not shared_pages, "dense layout cannot bind pages"
             self.cache = KC.insert_request_state(self.cache, slot, state)
         self.slots[slot] = req
         self.next_token[slot] = int(next_token)
@@ -687,9 +757,11 @@ class DecodeEngine:
         return slot
 
     def insert(self, req: Request, state: Dict[str, Any],
-               first_token: int) -> int:
+               first_token: int,
+               shared_pages: Optional[List[int]] = None) -> int:
         """KV transfer: place a prefilled request into a decode slot."""
-        slot = self.adopt(req, state, int(first_token))
+        slot = self.adopt(req, state, int(first_token),
+                          shared_pages=shared_pages)
         req.generated.append(int(first_token))
         req.advance(Phase.DECODE)
         return slot
@@ -734,23 +806,50 @@ class DecodeEngine:
 
     # -- decode ----------------------------------------------------------
     def _prepare_pages(self) -> None:
-        """Pre-forward page bookkeeping: make sure every active slot owns
-        the block its next token lands in (ring wraps reuse old pages) and
-        the device block table is fresh."""
+        """Pre-forward page bookkeeping: make sure every active slot
+        EXCLUSIVELY owns the block its next token lands in and the device
+        block table is fresh.  Three cases per active slot's write block:
+        unassigned (fresh allocation — appends past the boundary, ring
+        wraps), shared (refcount > 1: fork it copy-on-write via the free
+        list before the jitted step touches it — the writer gets a private
+        copy, every other holder keeps the original in place), or already
+        exclusive (write through)."""
         if not self.paged:
             return
         fresh: List[int] = []
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
             j = (int(self._slot_len[i]) % self.page_len) \
                 // self.ecfg.block_size
-            if self._bt[i, j] < 0:
-                assert self._free, "decode block pool exhausted"
-                pb = self._free.pop()
-                self._bt[i, j] = pb
-                self._slot_blocks[i].append(pb)
-                fresh.append(pb)
+            pb = int(self._bt[i, j])
+            if pb < 0:
+                self._ensure_free(1)
+                nb = self.pool.alloc(1)[0]
+                self._bt[i, j] = nb
+                self._slot_blocks[i].append(nb)
+                fresh.append(nb)
+            elif self.pool.refcount[pb] > 1:
+                # copy-on-write fork: this slot's next token lands in a
+                # page other holders can still read — divergence point
+                self._ensure_free(1)
+                nb = self.pool.alloc(1)[0]
+                self._bt[i, j] = nb
+                self._slot_blocks[i][self._slot_blocks[i].index(pb)] = nb
+                self.pool.unref([pb])
+                cow_src.append(pb)
+                cow_dst.append(nb)
+                self.cow_forks += 1
+        if cow_src:
+            # duplicate the forked pages (in place, donated) — only the
+            # destinations are written, so concurrent readers of the
+            # source pages are unperturbed
+            self.cache = _page_copy(
+                self.cache, jnp.asarray(np.asarray(cow_src, np.int32)),
+                jnp.asarray(np.asarray(cow_dst, np.int32)),
+                block_size=self.ecfg.block_size)
         if fresh:
             # recycled blocks carry the previous owner's positions —
             # invalidate them (in place, donated) before anything
@@ -758,7 +857,7 @@ class DecodeEngine:
             self.cache = _page_reset(
                 self.cache, jnp.asarray(np.asarray(fresh, np.int32)),
                 block_size=self.ecfg.block_size)
-        if fresh or self._bt_dirty:
+        if fresh or cow_src or self._bt_dirty:
             self.cache["block_tables"] = jnp.asarray(self._bt)
             self._bt_dirty = False
 

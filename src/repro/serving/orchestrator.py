@@ -48,7 +48,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Set
 import jax.numpy as jnp
 
 from ..core import analytical as A
-from ..core.kvstore import GlobalKVStore, leading_block_key
+from ..core.kvstore import GlobalKVStore, chain_hashes, leading_block_key
 from ..core.layer_migration import even_spans
 from ..core.migration import (ControllerConfig, DeviceLoad, MigrationAction,
                               MigrationController, MigrationKind)
@@ -83,6 +83,11 @@ class OrchestratorConfig:
     n_decode: int = 2
     router: str = "load_aware"     # load_aware | prefix_aware | round_robin
     global_store: bool = True      # shared store vs per-instance caches
+    # zero-copy prefix sharing: store entries point at live decode-pool
+    # pages (refcounted, COW) and hand-offs bind cached prefixes by
+    # reference.  False falls back to the payload-copy store everywhere
+    # (the A/B arm of benchmarks/bench_prefix_reuse.py).
+    prefix_sharing: bool = True
     engine: EngineConfig = EngineConfig()
     migration: bool = True
     # Algorithm 1 cadence in VIRTUAL SECONDS (the clock interval, not a
@@ -207,6 +212,19 @@ class Orchestrator(BackendBase):
                 m.pipe = pipe
             self.decode_pipes.append(pipe)
         self._by_name = {m.name: m for m in self.members}
+        # zero-copy prefix sharing: hand-offs bind store-registered pages
+        # by reference when source and destination agree on the pool —
+        # only full-stack paged decode engines over the shared store (span
+        # pipelines keep today's copy path across their per-stage pools)
+        self.prefix_sharing = (ocfg.prefix_sharing
+                               and self.store is not None
+                               and KC.prefix_cacheable(cfg))
+        self.pages_bound = 0           # prefix pages bound by reference
+        self.bound_bytes_saved = 0.0   # hand-off bytes the binds skipped
+        if self.prefix_sharing:
+            for m in self.decode_members():
+                if m.pipe is None and m.decode.paged:
+                    m.decode.attach_store(self.store)
         self.controller = (MigrationController(ocfg.controller,
                                                self._migration_cost)
                            if ocfg.migration else None)
@@ -348,6 +366,45 @@ class Orchestrator(BackendBase):
         self.handoff_overlap_s += t_ov
         return t_ov
 
+    def _sharing_target(self, tgt) -> bool:
+        """Does ``tgt`` bind store pages by reference?  Only full-stack
+        paged engines whose pool the shared store holds — everything else
+        (span pipelines, dense fallbacks, per-instance stores) takes the
+        copy path."""
+        return (self.prefix_sharing and isinstance(tgt, DecodeEngine)
+                and tgt.paged and tgt._store is self.store)
+
+    def _bind_shared(self, req: Request, st: Dict, tgt,
+                     keys: List[bytes]) -> tuple:
+        """Zero-copy bind: when ``tgt``'s pool already holds the request's
+        prefix blocks (registered by an earlier hand-off), drop those
+        pages from the wire state and return them for by-reference
+        binding — no gather/scatter, no bytes on the wire for the shared
+        head.  Returns (possibly head-split state, pages)."""
+        if "n_blocks" not in st or not keys:
+            return st, []
+        pages = self.store.resident_prefix(keys, tgt.name)
+        n = min(len(pages), int(st["n_blocks"]))
+        if n <= 0:
+            return st, []
+        full = KC.state_num_bytes(st)
+        st = KC.split_paged_state(st, n, self.ecfg.block_size)
+        self.pages_bound += n
+        self.bound_bytes_saved += full - KC.state_num_bytes(st)
+        return st, pages[:n]
+
+    def _register_prefix(self, req: Request, tgt, slot: int,
+                         keys: List[bytes]) -> None:
+        """Re-point the store's entries for this prompt's full blocks at
+        the pages now resident in ``tgt``'s pool (refcount++; the payload
+        copies drop).  Later hand-offs of the same prefix to this engine
+        bind them by reference."""
+        n_full = req.prompt_len // self.ecfg.block_size
+        if n_full <= 0:
+            return
+        row = tgt.slot_pages(slot)
+        self.store.register_pages(keys[:n_full], tgt.name, row[:n_full])
+
     def _dispatch(self) -> None:
         """Algorithm 2 over the central queue: dispatch every pending
         request onto a prefill member's queue using live load snapshots
@@ -469,8 +526,18 @@ class Orchestrator(BackendBase):
             tgt = min((u for u in self.decode_units()
                        if u.free_slots > 0),
                       key=lambda u: (u.active, u.kv_tokens, u.name))
+            shared: List[int] = []
+            keys: List[bytes] = []
+            if self._sharing_target(tgt):
+                keys = chain_hashes(req.prompt, self.ecfg.block_size)
+                st, shared = self._bind_shared(req, st, tgt, keys)
+            # the hand-off bills only the pages that actually move — a
+            # bound prefix crosses as references, not bytes
             t_ov = self._account_handoff(req, st)
-            tgt.insert(req, st, int(jnp.argmax(logits)))
+            slot = tgt.insert(req, st, int(jnp.argmax(logits)),
+                              shared_pages=shared or None)
+            if keys:
+                self._register_prefix(req, tgt, slot, keys)
             # the first token becomes visible once its KV hand-off's
             # overlapped per-layer schedule completes
             req.t_first_token = self.clock.now + t_ov
@@ -682,6 +749,8 @@ class Orchestrator(BackendBase):
             member.prefill = None
             member.decode = DecodeEngine(self.cfg, self.params, self.ecfg,
                                          name=member.name)
+            if self.prefix_sharing and member.decode.paged:
+                member.decode.attach_store(self.store)
         else:
             # decode -> prefill: evacuate resident KV to decode peers first
             # (the migrated layers' serving state moves with them)
@@ -690,6 +759,10 @@ class Orchestrator(BackendBase):
                            if u is not member.unit and u.free_slots > 0),
                           key=lambda u: (u.active, u.name))
                 tgt.adopt(req, st, tok)
+            if self.store is not None:
+                # the pool's pages die with the engine: demote the store's
+                # page-resident entries to the backing tiers first
+                self.store.detach_pool(member.name)
             member.decode = None
             member.prefill = self._new_prefill(member.name)
         member.role = new_role
@@ -757,6 +830,19 @@ class Orchestrator(BackendBase):
         if self.store is not None:
             s["store_hit_rate"] = self.store.stats.hit_rate
             s["store_entries"] = len(self.store)
+            # zero-copy sharing accounting (paper motivation iii: the hot
+            # prefix is HBM-resident once, not once per slot)
+            s["prefix_sharing"] = self.prefix_sharing
+            s["pages_bound"] = self.pages_bound
+            s["bound_bytes_saved"] = self.bound_bytes_saved
+            s["cow_forks"] = sum(
+                m.decode.cow_forks for m in self.decode_members()
+                if m.decode is not None)
+            s["store_registered_blocks"] = self.store.stats.registered_blocks
+            s["store_demotions"] = self.store.stats.demotions
+            s["hbm_pages_peak"] = sum(
+                m.decode.pool.peak_used for m in self.decode_members()
+                if m.decode is not None and m.decode.paged)
         else:
             stores = [m.prefill.store for m in self.prefill_members()
                       if m.prefill.store is not None]

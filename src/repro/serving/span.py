@@ -194,25 +194,53 @@ class DecodePipeline:
         return st
 
     def adopt(self, req: Request, state: Dict[str, Any],
-              next_token: int, slot: Optional[int] = None) -> int:
+              next_token: int, slot: Optional[int] = None,
+              shared_pages: Optional[Sequence[Tuple[int, ...]]] = None
+              ) -> int:
         """Migration receive path: split the wire state at this pipeline's
-        boundaries and land each part on its stage, same slot everywhere."""
+        boundaries and land each part on its stage, same slot everywhere.
+
+        ``shared_pages`` is the pipeline form of the zero-copy bind: one
+        per-stage tuple of physical pages per shared block (the layout
+        ``slot_pages`` reports), bound by reference on every stage —
+        stages COW independently at their own divergence points, so a
+        fork on one stage never perturbs the others.  ``state`` must
+        already be head-split past the shared blocks.  The orchestrator's
+        store never registers pipeline pools (their pages die on
+        ``move_span``/``rebase_span``); this path serves direct sharing
+        between pipeline slots, where a live span move simply gathers the
+        shared content and re-adopts it unshared — correctness is kept,
+        sharing is dropped."""
         if slot is None:
             slot = self.lead.free_slot()
         assert slot is not None, "decode pipeline full"
+        shared = list(shared_pages or ())
         parts = LM.split_state_spans(self.cfg, state, self.bounds)
-        for e, part in zip(self.engines, parts):
-            e.adopt(req, part, next_token, slot=slot)
+        for k, (e, part) in enumerate(zip(self.engines, parts)):
+            sp = [t[k] for t in shared] if shared else None
+            if sp:
+                assert e.paged and e.page_len == self._wire_plen, \
+                    "shared-page binds need every stage paged at the wire"
+            e.adopt(req, part, next_token, slot=slot, shared_pages=sp)
         req.decode_instance = self.name
         return slot
 
     def insert(self, req: Request, state: Dict[str, Any],
-               first_token: int) -> int:
+               first_token: int,
+               shared_pages: Optional[Sequence[Tuple[int, ...]]] = None
+               ) -> int:
         """KV transfer: place a prefilled request into a decode slot."""
-        slot = self.adopt(req, state, int(first_token))
+        slot = self.adopt(req, state, int(first_token),
+                          shared_pages=shared_pages)
         req.generated.append(int(first_token))
         req.advance(Phase.DECODE)
         return slot
+
+    def slot_pages(self, slot: int) -> List[Tuple[int, ...]]:
+        """Per-block page tuples backing ``slot`` — element ``j`` holds
+        block ``j``'s physical page on every stage, the layout ``adopt``'s
+        ``shared_pages`` consumes."""
+        return list(zip(*(e.slot_pages(slot) for e in self.engines)))
 
     def extract_slot(self, slot: int
                      ) -> Tuple[Request, Dict[str, Any], int]:

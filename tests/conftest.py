@@ -28,6 +28,42 @@ TINY = ModelConfig(name="tiny4", family=Family.DENSE, n_layers=4,
 TINY_ECFG = EngineConfig(max_len=96, max_batch=3, block_size=8)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    """jaxlib's CPU ``backend_compile`` segfaults rarely-but-measurably
+    once thousands of executables have accumulated in one process (the
+    eager greedy reference compiles a fresh scan per sequence length).
+    Dropping the caches at module boundaries caps the accumulation at one
+    module's worth; shared jits recompile lazily on next touch."""
+    yield
+    jax.clear_caches()
+
+
+def assert_pools_restored(orch):
+    """Leak check for the refcounted paged pools: every decode slot is
+    empty, every page's refcount equals its holder count (slot rows plus
+    the Global KV Store's page holds), and the free list plus store-held
+    pages accounts for the whole pool — the free-at-zero guarantee across
+    hand-offs, aborts, migrations and drains."""
+    store = getattr(orch, "store", None)
+    for u in orch.decode_units():
+        for e in getattr(u, "engines", [u]):
+            assert e.active == 0, f"{e.name}: live slots after drain"
+            if not getattr(e, "paged", False):
+                continue
+            holders = [e.slot_pages(i) for i in range(e.ecfg.max_batch)]
+            held = []
+            if store is not None:
+                held = sorted(store.pool_pages(e.name).values())
+            holders += [[p] for p in held]
+            e.pool.check(holders=holders)
+            assert len(held) == len(set(held)), \
+                f"{e.name}: store holds a page twice"
+            assert len(e._free) + len(held) \
+                == e.ecfg.max_batch * e._nb_slot, \
+                f"{e.name}: leaked pages"
+
+
 @pytest.fixture(scope="session")
 def model_zoo():
     """``zoo(cfg, seed=0) -> params``, initialized once per session."""

@@ -18,7 +18,7 @@ import math
 import numpy as np
 import pytest
 
-from conftest import TINY, TINY_ECFG
+from conftest import TINY, TINY_ECFG, assert_pools_restored
 from repro.serving.api import Server
 from repro.serving.cluster import ClusterSim, SimConfig
 from repro.serving.orchestrator import Orchestrator, OrchestratorConfig
@@ -353,12 +353,9 @@ def test_live_abort_mid_decode_survivors_bit_exact(tiny_params):
             n = len(r.generated)
             assert r.generated == by_rid[r.rid].generated[:n]
             assert n < len(by_rid[r.rid].generated)
-    # every paged block is back on a free list, every slot empty
-    for u in orch.decode_units():
-        for e in getattr(u, "engines", [u]):
-            assert e.active == 0
-            if e.paged:
-                assert len(e._free) == e.ecfg.max_batch * e._nb_slot
+    # every paged page is back on a free list or held by the store with a
+    # matching refcount, every slot empty
+    assert_pools_restored(orch)
 
 
 def test_live_abort_mid_prefill_dropped_at_handoff(tiny_params):

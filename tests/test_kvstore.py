@@ -85,3 +85,125 @@ def test_timeline_channels_do_not_overlap_within_channel():
         spans = sorted((s, e) for c, _, s, e in ev if c == chan)
         for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
             assert s2 >= e1 - 1e-12
+
+
+# -- tentative probes must not perturb LRU order (regression) ---------------
+
+def test_tentative_match_does_not_touch_lru():
+    """``match(record_stats=False)`` is a *tentative* probe (batch
+    planning runs one per candidate per step) — it must not bump the
+    matched entries' recency, or planning probes would pin hot-looking
+    prefixes and starve the real LRU order."""
+    st = GlobalKVStore(block_size=4, tiers=[TierSpec("hbm", 200, 100.0)])
+    old, new = list(range(4)), list(range(10, 14))
+    st.insert(old, ["old"], nbytes_per_block=100)
+    st.insert(new, ["new"], nbytes_per_block=100)
+    for _ in range(5):                      # tentative probes on the LRU key
+        st.match(old, record_stats=False)
+    # a third insert overflows the single 2-block tier: the probed-but-
+    # untouched ``old`` entry must still be the eviction victim
+    st.insert(list(range(20, 24)), ["k3"], nbytes_per_block=100)
+    assert st.match(old, record_stats=False)[0] == 0
+    assert st.match(new, record_stats=False)[0] == 4
+
+
+def test_match_touch_flag_overrides_record_stats():
+    st = GlobalKVStore(block_size=4, tiers=[TierSpec("hbm", 200, 100.0)])
+    old, new = list(range(4)), list(range(10, 14))
+    st.insert(old, ["old"], nbytes_per_block=100)
+    st.insert(new, ["new"], nbytes_per_block=100)
+    st.match(old, record_stats=False, touch=True)   # explicit recency bump
+    st.insert(list(range(20, 24)), ["k3"], nbytes_per_block=100)
+    assert st.match(old, record_stats=False)[0] == 4    # survived
+    assert st.match(new, record_stats=False)[0] == 0    # evicted instead
+
+
+# -- zero-copy page residency ------------------------------------------------
+
+class _FakePool:
+    """Minimal pool contract (ref/unref/materialize) over a real
+    ``BlockPool`` so the store-side residency logic is testable without
+    an engine."""
+
+    def __init__(self, n_pages=8):
+        from repro.models.kvcache import BlockPool
+        self.pool = BlockPool(n_pages)
+        self.materialized = []
+
+    def ref_pages(self, pages):
+        self.pool.ref(pages)
+
+    def unref_pages(self, pages):
+        return self.pool.unref(list(pages))
+
+    def materialize(self, page):
+        self.materialized.append(int(page))
+        return {"payload-of-page": int(page)}
+
+
+def _resident_store():
+    st = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", 1000, 100.0), TierSpec("host", 10_000, 1.0)])
+    toks = list(range(12))
+    keys = chain_hashes(toks, 4)
+    st.insert(toks, [f"p{i}" for i in range(3)], nbytes_per_block=100)
+    fp = _FakePool()
+    st.attach_pool("d0", fp)
+    slot = fp.pool.alloc(3)                 # the decode slot's own pages
+    assert st.register_pages(keys, "d0", slot) == 3
+    return st, fp, keys, slot, toks
+
+
+def test_register_pages_converts_and_frees_tier_bytes():
+    st, fp, keys, slot, toks = _resident_store()
+    assert st.used_bytes(0) == 0            # payload copies dropped
+    assert all(int(fp.pool.refcount[p]) == 2 for p in slot)  # slot + store
+    assert st.stats.registered_blocks == 3
+    assert st.pool_pages("d0") == dict(zip(keys, slot))
+    # double registration is a no-op (first wins)
+    assert st.register_pages(keys, "d0", slot) == 0
+    # the bind lookup hands back the physical pages, longest-prefix style
+    assert st.resident_prefix(keys, "d0") == slot
+    assert st.resident_prefix(keys, "other") == []
+    assert st.stats.bound_blocks == 3
+    # match still resolves and fetch materializes out of the live pool
+    n, mk = st.match(toks)
+    assert n == 12
+    payloads, _ = st.fetch(mk)
+    assert [p["payload-of-page"] for p in payloads] == slot
+
+
+def test_reclaim_pool_counts_only_freed_pages():
+    st, fp, keys, slot, _ = _resident_store()
+    # every page still held by the slot: demoting the store's holds frees
+    # nothing, so reclaim must scan past them and report 0
+    assert st.reclaim_pool("d0", 1) == 0
+    assert st.stats.demotions == 3
+    assert all(int(fp.pool.refcount[p]) == 1 for p in slot)
+    assert all(e.pool is None and e.tier == 1 for e in st._entries.values())
+    assert st.demote_latency_s > 0
+    # demoted entries still serve hits (payload form, backing tier)
+    assert st.match(list(range(12)), record_stats=False)[0] == 12
+
+
+def test_reclaim_pool_frees_lru_first_after_release():
+    st, fp, keys, slot, _ = _resident_store()
+    fp.pool.unref(slot)                     # slot released; store-only holds
+    st.resident_prefix(keys[:1], "d0")      # touch key0 -> key1 is now LRU?
+    freed = st.reclaim_pool("d0", 1)
+    assert freed == 1
+    assert len(fp.pool.free_list) == fp.pool.n_pages - fp.pool.n_reserved - 2
+    assert st.reclaim_pool("d0", 8) == 2    # rest demote + free
+    fp.pool.check()
+
+
+def test_detach_pool_demotes_everything():
+    st, fp, keys, slot, _ = _resident_store()
+    fp.pool.unref(slot)
+    assert st.detach_pool("d0") == 3
+    fp.pool.check(holders=[])               # every hold released
+    assert st.pool_pages("d0") == {}
+    assert all(e.pool is None for e in st._entries.values())
+    assert st.detach_pool("d0") == 0        # idempotent
+    # entries survive as normal payload blocks on the backing tier
+    assert st.match(list(range(12)), record_stats=False)[0] == 12

@@ -13,7 +13,7 @@ shapes are expressible on either side of the protocol.  The heavier runs
 carry the ``slow`` marker and run in CI's second job."""
 import pytest
 
-from conftest import TINY, TINY_ECFG
+from conftest import TINY, TINY_ECFG, assert_pools_restored
 from repro.core.migration import MigrationKind
 from repro.serving.api import Server
 from repro.serving.cluster import ClusterSim, SimConfig
@@ -89,6 +89,9 @@ def _run(name, tiny_params, make_workload, greedy_reference, n_requests,
     if orch.control_trace:
         assert s["util_gap_after"] <= s["util_gap_before"] + 1e-9, \
             (name, orch.control_trace)
+    # no page leaks: every pool's free list is restored up to the store's
+    # refcount-matched holds, across hand-offs, migrations and re-rolls
+    assert_pools_restored(orch)
     return orch, s
 
 
@@ -121,6 +124,40 @@ def test_scenario_sim_backend(name, make_workload):
         assert len(h.tokens) == h.request.max_new_tokens
     assert s["throughput_tok_s"] > 0
     assert "p99_ttft_s" in s and "n_submitted" in s
+
+
+def test_scenario_abort_leaves_no_page_leaks(tiny_params, make_workload,
+                                             greedy_reference):
+    """Aborts mid-run through the prefix-skewed scenario (shared pages in
+    flight): the release_slot path must unref — not blindly free — the
+    victim's pages, so survivors stay exact and every pool restores up to
+    the store's refcount-matched holds."""
+    reqs, fleet_kw = _scenario_workload("prefix_skewed", make_workload,
+                                        8, seed=17)
+    orch = Orchestrator(TINY, tiny_params, OrchestratorConfig(
+        engine=TINY_ECFG, **fleet_kw))
+    server = Server(orch)
+    ordered = sorted(reqs, key=lambda r: r.arrival)
+    for r in ordered:
+        server.submit(r, at=r.arrival)
+    victims = {ordered[2].rid, ordered[5].rid}
+    aborted = set()
+    while server.in_flight():
+        server.step()
+        for rid in victims - aborted:
+            r = next(q for q in reqs if q.rid == rid)
+            if r.phase == Phase.DECODE:       # mid-decode: pages resident
+                server.abort(rid)
+                aborted.add(rid)
+    server.drain()
+    assert aborted == victims                 # both were caught in flight
+    for r in reqs:
+        if r.rid in victims:
+            assert r.outcome == Outcome.ABORTED
+        else:
+            assert r.generated == greedy_reference(
+                TINY, tiny_params, r.prompt, r.max_new_tokens), r.rid
+    assert_pools_restored(orch)
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
