@@ -59,7 +59,10 @@ def main(csv=True):
         for r in rows:
             print(f"kernels,{r['name']},{r['us_kernel_interp']:.0f},"
                   f"{r['us_ref']:.0f}")
-    return rows
+    # dict result -> run.py writes BENCH_attention.json for the CI diff
+    return {"kernels": {r["name"]: {"us_kernel_interp": r["us_kernel_interp"],
+                                    "us_ref": r["us_ref"]}
+                        for r in rows}}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,114 @@
+"""Page-fused decode attention A/B: the block table in the kernel's
+index_map vs the retired gather-then-attend two-step.
+
+The old default decode path materialized a dense ``(B, L, KV, D)`` view of
+every active row's pages (a jitted ``take`` over the pool) and then ran the
+split-KV kernel over it — per step, per layer.  The page-fused kernel reads
+the pool directly: the KV-block grid axis *is* the page axis and the block
+table rides in scalar prefetch, so the jitted decode step contains **zero
+dense KV gathers**.  Two numbers make the win auditable:
+
+* ``gather_bytes_per_step`` — bytes of KV the two-step must copy per decode
+  step (exact, deterministic); the fused kernel's count is identically 0.
+* interpret-mode wall time for both paths (CPU correctness-path timing;
+  on TPU the same call sites compile the real kernels).
+
+    PYTHONPATH=src python -m benchmarks.run --only decode_attention
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import paged_decode_attention_reference
+
+SHAPES = [
+    # b, h, kv, d, bs, nb_slot (context = bs * nb_slot)
+    (4, 8, 8, 64, 16, 8),
+    (4, 8, 2, 64, 16, 16),      # GQA, 2x the context
+]
+
+
+def _n_iter() -> int:
+    return 2 if int(os.environ.get("BENCH_SMOKE", "0")) else 10
+
+
+def _time(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))
+    n = _n_iter()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _case(seed, b, h, kv, d, bs, nb):
+    rng = np.random.default_rng(seed)
+    n_phys = 1 + b * nb
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(n_phys, bs, kv, d)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(n_phys, bs, kv, d)), jnp.float32)
+    pos = np.full((n_phys, bs), -1, np.int32)
+    tables = np.full((b, nb), -1, np.int32)
+    for row in range(b):                      # all rows full: worst case
+        ids = 1 + row * nb + np.arange(nb)
+        tables[row] = ids
+        pos[ids] = np.arange(nb * bs).reshape(nb, bs)
+    pos_q = jnp.full((b,), nb * bs - 1, jnp.int32)
+    return (q, k_pages, v_pages, jnp.asarray(pos), jnp.asarray(tables),
+            pos_q)
+
+
+def main() -> dict:
+    out = {"cases": {}}
+    print("decode_attention,case,us_fused,us_twostep,"
+          "gather_bytes_fused,gather_bytes_twostep")
+    for (b, h, kv, d, bs, nb) in SHAPES:
+        q, kp, vp, pos, tbl, pos_q = _case(0, b, h, kv, d, bs, nb)
+
+        fused = jax.jit(lambda q, kp, vp, pos, tbl, pq:
+                        ops.paged_decode_attention(q, kp, vp, pos, tbl, pq,
+                                                   interpret=True))
+
+        def twostep(q, kp, vp, pos, tbl, pq):
+            # the retired path: dense per-row KV view gathered from the
+            # pool, then attention over it
+            safe = jnp.maximum(tbl, 0)
+            k = kp[safe].reshape(b, nb * bs, kv, d)
+            v = vp[safe].reshape(b, nb * bs, kv, d)
+            p = pos[safe].reshape(b, nb * bs)
+            valid = (tbl >= 0).repeat(bs, -1) & (p >= 0) & \
+                (p <= pq[:, None])
+            return ops.decode_attention(q, k, v, valid, block_k=bs * nb)
+
+        two = jax.jit(twostep)
+        us_f = _time(fused, q, kp, vp, pos, tbl, pos_q)
+        us_t = _time(two, q, kp, vp, pos, tbl, pos_q)
+        # exact copy cost of the two-step's dense view: K + V + positions
+        gather = b * nb * bs * (kv * d * 2 * 4 + 4)
+        name = f"b{b}_h{h}kv{kv}_ctx{bs * nb}"
+        print(f"decode_attention,{name},{us_f:.0f},{us_t:.0f},0,{gather}")
+        out["cases"][name] = {
+            "us_fused_interp": us_f, "us_twostep_interp": us_t,
+            "gather_bytes_fused": 0, "gather_bytes_twostep": gather,
+        }
+        # keep the A/B honest while we time it
+        ref = paged_decode_attention_reference(q, kp, vp, pos, tbl, pos_q)
+        np.testing.assert_allclose(np.asarray(fused(q, kp, vp, pos, tbl,
+                                                    pos_q)),
+                                   np.asarray(ref), rtol=2e-5, atol=2e-5)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""int8 KV pages: storage/bandwidth halving and in-kernel dequant cost.
+
+Three committed facts:
+
+* ``bytes_per_token`` — per-token KV bytes the config bills for bf16 vs
+  int8+scale storage (exact; this is the number ``analytical.py`` feeds
+  into hand-off, migration and store-transfer estimates, so the router's
+  view of a quantized fleet halves with it).
+* round-trip error of the page quantizer against its per-(entry, head)
+  scale bound (exact-tolerance policy the precision tests pin).
+* interpret-mode decode-kernel time with fp32 pools vs int8 pools with
+  in-kernel dequant (scales folded into the score/value matmuls — the
+  bf16 pages are never materialized).
+
+    PYTHONPATH=src python -m benchmarks.run --only quant_kv
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import llama_13b
+from repro.core import analytical as A
+from repro.kernels import ops
+from repro.models.quant import dequantize_kv_page, quantize_kv_pages
+
+
+def _n_iter() -> int:
+    return 2 if int(os.environ.get("BENCH_SMOKE", "0")) else 10
+
+
+def _time(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))
+    n = _n_iter()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main() -> dict:
+    big = llama_13b.CONFIG
+    bigq = big.with_kv_quant()
+    bpt_fp = big.kv_bytes_per_token()
+    bpt_q = bigq.kv_bytes_per_token()
+    xfer_fp = A.kv_transfer_time(big, 1000, A.TPU_V5E) * 1e3
+    xfer_q = A.kv_transfer_time(bigq, 1000, A.TPU_V5E) * 1e3
+    print("quant_kv,metric,fp16,int8,ratio")
+    print(f"quant_kv,bytes_per_token,{bpt_fp},{bpt_q},"
+          f"{bpt_q / bpt_fp:.3f}")
+    print(f"quant_kv,transfer_ms_1k_tokens,{xfer_fp:.3f},{xfer_q:.3f},"
+          f"{xfer_q / xfer_fp:.3f}")
+
+    # round-trip error vs the per-(entry, head) scale bound
+    rng = np.random.default_rng(0)
+    b, h, kv, d, bs, nb = 2, 8, 4, 64, 16, 4
+    n_phys = 1 + b * nb
+    k_pages = jnp.asarray(rng.normal(size=(n_phys, bs, kv, d)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(n_phys, bs, kv, d)), jnp.float32)
+    kq, ks, vq, vs = quantize_kv_pages(k_pages, v_pages)
+    err = float(jnp.max(jnp.abs(
+        dequantize_kv_page(kq, ks, jnp.float32) - k_pages)))
+    bound = float(jnp.max(ks)) * 0.51
+    print(f"quant_kv,roundtrip_max_abs_err,{err:.6f},{bound:.6f},"
+          f"{err / bound:.3f}")
+
+    # decode kernel: fp pools vs int8 pools with in-kernel dequant
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    pos = np.full((n_phys, bs), -1, np.int32)
+    tables = np.full((b, nb), -1, np.int32)
+    for row in range(b):
+        ids = 1 + row * nb + np.arange(nb)
+        tables[row] = ids
+        pos[ids] = np.arange(nb * bs).reshape(nb, bs)
+    pos, tables = jnp.asarray(pos), jnp.asarray(tables)
+    pos_q = jnp.full((b,), nb * bs - 1, jnp.int32)
+    fp = jax.jit(lambda *a: ops.paged_decode_attention(*a, interpret=True))
+    qk = jax.jit(lambda q, kq, vq, pos, tbl, pq, ks, vs:
+                 ops.paged_decode_attention(q, kq, vq, pos, tbl, pq,
+                                            k_scale_pages=ks,
+                                            v_scale_pages=vs,
+                                            interpret=True))
+    us_fp = _time(fp, q, k_pages, v_pages, pos, tables, pos_q)
+    us_q = _time(qk, q, kq, vq, pos, tables, pos_q, ks, vs)
+    print(f"quant_kv,decode_us_interp,{us_fp:.0f},{us_q:.0f},"
+          f"{us_q / max(us_fp, 1e-9):.3f}")
+    out_fp = fp(q, k_pages, v_pages, pos, tables, pos_q)
+    out_q = qk(q, kq, vq, pos, tables, pos_q, ks, vs)
+    assert float(jnp.max(jnp.abs(out_fp - out_q))) < 0.1   # int8 grid noise
+
+    return {
+        "bytes_per_token": {"fp16": bpt_fp, "int8": bpt_q,
+                            "ratio": bpt_q / bpt_fp},
+        "transfer_ms_1k_tokens": {"fp16": xfer_fp, "int8": xfer_q,
+                                  "ratio": xfer_q / xfer_fp},
+        "roundtrip": {"max_abs_err": err, "scale_bound": bound},
+        "decode_us_interp": {"fp32_pools": us_fp, "int8_pools": us_q},
+    }
+
+
+if __name__ == "__main__":
+    main()

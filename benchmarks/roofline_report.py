@@ -3,6 +3,13 @@
 (arch × shape × mesh), dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio,
 and a one-line "what would move the dominant term" note.
 
+A second table puts the serving-path Pallas kernels on the same roofline:
+the page-fused paged decode kernel and the fused paged chunked-prefill
+kernel at representative llama-13b shapes — analytical FLOPs and HBM
+bytes per invocation, arithmetic intensity vs the machine balance, and
+the attainable fraction of peak (decode sits deep in the memory-bound
+regime, which is exactly why int8 KV pages double its intensity).
+
     PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
     PYTHONPATH=src python -m benchmarks.roofline_report --markdown
 """
@@ -12,6 +19,10 @@ import argparse
 import glob
 import json
 import os
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
 DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -49,14 +60,83 @@ def load(mesh=None):
     return recs
 
 
+def kernel_rows(hw=None):
+    """Analytical roofline for the serving-path attention kernels.
+
+    Per-invocation FLOPs and HBM bytes at llama-13b shapes — for the
+    page-fused decode kernel (one token per row, KV streamed page by
+    page through the block table) and the fused paged chunked-prefill
+    kernel (a resume chunk's queries over paged prefix + dense suffix).
+    ``attainable_frac`` is the roofline bound min(1, intensity/balance):
+    the fraction of peak FLOPs the kernel can reach if it saturates HBM.
+    """
+    from repro.configs import llama_13b
+    from repro.core.analytical import TPU_V5E
+    hw = hw or TPU_V5E
+    cfg = llama_13b.CONFIG
+    h, kv, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    balance = hw.ridge_intensity            # FLOP per byte at the ridge
+    rows = []
+
+    def add(name, dtype, flops, bytes_):
+        inten = flops / bytes_
+        frac = min(1.0, inten / balance)
+        bound = "memory" if inten < balance else "compute"
+        rows.append({"kernel": name, "dtype": dtype, "flops": flops,
+                     "bytes": bytes_, "intensity": inten,
+                     "machine_balance": balance, "bound": bound,
+                     "attainable_frac": frac})
+
+    for b, ctx in ((8, 2048), (32, 8192)):
+        # decode: scores q·K^T + values p·V — 2 matmuls over the context
+        flops = 4 * b * h * d * ctx
+        q_io = b * h * d * 2 * 2            # q in + o out, bf16
+        for dtype, kv_b in (("bf16", 2 * d * 2),
+                            ("int8+scale", 2 * (d + 4))):
+            bytes_ = b * ctx * kv * kv_b + b * ctx * 4 + q_io  # KV+pos+q/o
+            add(f"paged_decode_b{b}_ctx{ctx}", dtype, flops, bytes_)
+    for b, s, prefix in ((4, 512, 2048), (4, 512, 8192)):
+        # chunked prefill resume wave: full attention over the paged
+        # prefix + causal (~half) over the in-flight suffix
+        flops = 4 * b * s * h * d * (prefix + s / 2)
+        io = b * s * (h + 2 * kv) * d * 2 + b * s * h * d * 2
+        bytes_ = b * prefix * (kv * 2 * d * 2 + 4) + io
+        add(f"paged_prefill_b{b}_s{s}_pre{prefix}", "bf16", flops, bytes_)
+    return rows
+
+
+def print_kernels(markdown: bool, hw=None):
+    sep = "|" if markdown else ","
+    hdr = sep.join(["kernel", "dtype", "gflops", "mbytes", "intensity",
+                    "machine_balance", "bound", "attainable_frac"])
+    if markdown:
+        print("|" + hdr + "|")
+        print("|" + "|".join(["---"] * 8) + "|")
+    else:
+        print(hdr)
+    for r in kernel_rows(hw):
+        row = sep.join([
+            r["kernel"], r["dtype"],
+            f"{r['flops'] / 1e9:.2f}", f"{r['bytes'] / 1e6:.2f}",
+            f"{r['intensity']:.1f}", f"{r['machine_balance']:.1f}",
+            r["bound"], f"{r['attainable_frac']:.4f}",
+        ])
+        print(("|" + row + "|") if markdown else row)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the serving-kernel roofline table")
     args = ap.parse_args()
     recs = load(args.mesh)
     if not recs:
         print("no dry-run records found — run repro.launch.dryrun first")
+        if not args.no_kernels:
+            print()
+            print_kernels(args.markdown)
         return
     sep = "|" if args.markdown else ","
     hdr = sep.join(["arch", "shape", "t_compute_ms", "t_memory_ms",
@@ -83,6 +163,9 @@ def main():
             advice,
         ])
         print(("|" + row + "|") if args.markdown else row)
+    if not args.no_kernels:
+        print()
+        print_kernels(args.markdown)
 
 
 if __name__ == "__main__":

@@ -18,10 +18,11 @@ import pathlib
 import sys
 import time
 
-from . import (bench_attention, bench_layer_span, bench_migration,
+from . import (bench_attention, bench_chunked_prefill,
+               bench_decode_attention, bench_layer_span, bench_migration,
                bench_orchestrator, bench_paged_handoff, bench_pipeline,
-               bench_prefix_reuse, bench_scheduler, bench_throughput,
-               bench_utilization)
+               bench_prefix_reuse, bench_quant_kv, bench_scheduler,
+               bench_throughput, bench_utilization)
 
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
@@ -32,7 +33,10 @@ ALL = {
     "prefix_reuse": bench_prefix_reuse,  # shared vs copy vs recompute
     "layer_span": bench_layer_span,   # span move vs whole-instance re-roll
     "utilization": bench_utilization, # Fig. 2b
-    "attention": bench_attention,     # kernels
+    "attention": bench_attention,     # kernels (flash prefill / split-KV)
+    "decode_attention": bench_decode_attention,  # page-fused vs two-step
+    "chunked_prefill": bench_chunked_prefill,    # paged vs dense resumes
+    "quant_kv": bench_quant_kv,       # int8 KV pages
     "throughput": bench_throughput,   # Fig. 8-11
 }
 

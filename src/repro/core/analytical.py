@@ -86,9 +86,14 @@ def decode_flops_per_token(cfg: ModelConfig, context: int, batch: int = 1) -> fl
 
 
 def decode_bytes_per_token(cfg: ModelConfig, context: int, batch: int = 1,
-                           dtype_bytes: int = 2) -> float:
-    """Decode is memory-bound: weights read once per step + KV read."""
-    weight_bytes = cfg.active_param_count() * dtype_bytes
+                           dtype_bytes: Optional[int] = None) -> float:
+    """Decode is memory-bound: weights read once per step + KV read.
+
+    ``dtype_bytes=None`` (default) bills KV at the config's own storage
+    format — int8 caches (``kv_quant``) read ~half the bytes — while
+    weights stay bf16.  An explicit value overrides both (what-if sweeps).
+    """
+    weight_bytes = cfg.active_param_count() * (dtype_bytes or 2)
     kv = cfg.kv_bytes_per_token(dtype_bytes) * cfg.kv_cache_len(context) * batch
     return weight_bytes + kv
 
@@ -125,8 +130,9 @@ def decode_iter_time(cfg: ModelConfig, context: int, hw: HardwareProfile,
 
 
 def kv_transfer_time(cfg: ModelConfig, n_tokens: int, hw: HardwareProfile,
-                     dtype_bytes: int = 2) -> float:
-    """T_x of Eq. 21: move a request's KV prefill→decode over the fabric."""
+                     dtype_bytes: Optional[int] = None) -> float:
+    """T_x of Eq. 21: move a request's KV prefill→decode over the fabric
+    (billed at the config's KV storage format — int8 pages ship ~half)."""
     return cfg.kv_bytes_per_token(dtype_bytes) * n_tokens / hw.net_bw
 
 
@@ -152,9 +158,10 @@ def throughput(n_requests: int, l_out: float, t_ttft: float,
 # ---------------------------------------------------------------------------
 
 def memory_footprint(cfg: ModelConfig, n_layers_local: int, kv_tokens: int,
-                     dtype_bytes: int = 2, base_bytes: int = 1 << 30) -> float:
-    """Eq. 23/25: M0 + n·M_l + K."""
-    m_layer = cfg.param_count() / max(cfg.n_layers, 1) * dtype_bytes
+                     dtype_bytes: Optional[int] = None,
+                     base_bytes: int = 1 << 30) -> float:
+    """Eq. 23/25: M0 + n·M_l + K (KV at the config's storage format)."""
+    m_layer = cfg.param_count() / max(cfg.n_layers, 1) * (dtype_bytes or 2)
     kv = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens \
         * n_layers_local / max(cfg.n_layers, 1)
     return base_bytes + n_layers_local * m_layer + kv
@@ -180,19 +187,23 @@ def utilization(comp_flops_per_s: float, mem_bytes: float,
 # ---------------------------------------------------------------------------
 
 def layer_migration_time(cfg: ModelConfig, n_layers: int, kv_tokens: int,
-                         hw: HardwareProfile, dtype_bytes: int = 2,
+                         hw: HardwareProfile,
+                         dtype_bytes: Optional[int] = None,
                          t_sync: float = 2e-3) -> float:
     """Eq. 3/4: (S_w + S_kv)/B_net + T_sync."""
-    s_w = cfg.param_count() / max(cfg.n_layers, 1) * n_layers * dtype_bytes
+    s_w = cfg.param_count() / max(cfg.n_layers, 1) * n_layers \
+        * (dtype_bytes or 2)
     s_kv = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens \
         * n_layers / max(cfg.n_layers, 1)
     return (s_w + s_kv) / hw.net_bw + t_sync
 
 
 def attention_migration_time(cfg: ModelConfig, n_heads: int, kv_tokens: int,
-                             hw: HardwareProfile, dtype_bytes: int = 2
+                             hw: HardwareProfile,
+                             dtype_bytes: Optional[int] = None
                              ) -> float:
-    """Eq. 11: S_kv/B_net — only the migrated heads' KV moves, no weights."""
+    """Eq. 11: S_kv/B_net — only the migrated heads' KV moves, no weights
+    (int8 caches move ~half the bytes, and the router sees it)."""
     frac = n_heads / max(cfg.n_kv_heads, 1)
     s_kv = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens * frac
     return s_kv / hw.net_bw
@@ -204,7 +215,7 @@ def migration_cost(n_modules: int, t_transfer: float, t_sync: float = 2e-3,
 
 
 def span_transfer_schedule(cfg: ModelConfig, n_span_layers: int,
-                           kv_tokens: int, dtype_bytes: int = 2
+                           kv_tokens: int, dtype_bytes: Optional[int] = None
                            ) -> "Sequence[int]":
     """Ordered per-layer byte schedule of a §4.1 layer-span migration:
     each migrated layer ships its weight shard ``W_l`` plus its share of
@@ -212,7 +223,7 @@ def span_transfer_schedule(cfg: ModelConfig, n_span_layers: int,
     ``overlapped_schedule_time`` — layer *i*'s payload streams while layer
     *i−1* re-materializes on the destination — so the move is billed per
     migrated layer, never per stack."""
-    w_layer = cfg.param_count() / max(cfg.n_layers, 1) * dtype_bytes
+    w_layer = cfg.param_count() / max(cfg.n_layers, 1) * (dtype_bytes or 2)
     kv_layer = cfg.kv_bytes_per_token(dtype_bytes) * kv_tokens \
         / max(cfg.n_layers, 1)
     return [int(w_layer + kv_layer)] * max(n_span_layers, 0)

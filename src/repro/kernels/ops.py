@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.attention_offload import combine_partials
-from .flash_prefill import flash_prefill
-from .split_kv_decode import split_kv_decode_partials
+from .flash_prefill import flash_prefill, paged_prefix_partials
+from .split_kv_decode import paged_decode_partials, split_kv_decode_partials
 
 
 def _on_tpu() -> bool:
@@ -81,30 +81,93 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
-def paged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                           pos_k: jax.Array, pos_q: jax.Array, *,
+@functools.partial(jax.jit, static_argnames=("window", "scale", "soft_cap",
+                                             "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pos_pages: jax.Array,
+                           block_tables: jax.Array, pos_q: jax.Array, *,
                            window: Optional[int] = None,
                            scale: Optional[float] = None,
-                           block_k: int = 512,
+                           soft_cap: Optional[float] = None,
+                           k_scale_pages: Optional[jax.Array] = None,
+                           v_scale_pages: Optional[jax.Array] = None,
                            interpret: Optional[bool] = None) -> jax.Array:
-    """Split-KV decode over a block-table-gathered KV view.
+    """Page-fused split-KV decode straight out of the block pool.
 
-    The caller has already gathered the row's pages into the linear view
-    (models.layers paged decode path); this wrapper derives the causal
-    (+window) validity mask from positions (-1 = hole/unassigned page) and
-    runs the split-KV kernel — the KV-block grid axis of the kernel IS the
-    page axis, so partial (o, l, m) triples are per-page and migration can
-    ship them instead of raw KV.
+    The block table is fused into the kernel's index_map (scalar
+    prefetch): the KV-block grid axis of the kernel IS the page axis, so
+    the kernel reads pages in place — no dense gathered KV view exists —
+    and the per-page partial (o, l, m) triples are exactly what migration
+    ships.  Optional int8 pools dequant in-kernel via the per-entry scale
+    pages; soft-capped stacks stay on the kernel path because
+    ``tanh(s/c)*c`` is elementwise on pre-softmax scores, which keeps the
+    split-softmax combine exact.
 
-    q: (B, H, D); k, v: (B, L, KV, D); pos_k: (B, L); pos_q: (B,)."""
-    pq = pos_q[:, None]
-    valid = (pos_k >= 0) & (pos_k <= pq)
-    if window is not None:
-        valid &= pos_k > pq - window
-    if scale is not None and scale != 1.0 / math.sqrt(q.shape[-1]):
-        q = q * (scale * math.sqrt(q.shape[-1]))
-    return decode_attention(q, k, v, valid, block_k=block_k,
-                            interpret=interpret)
+    q: (B, H, D); k/v_pages: (P, bs, KV, D); pos_pages: (P, bs);
+    block_tables: (B, nb) (-1 = unassigned); pos_q: (B,).
+    Returns (B, H, D) in q's dtype."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, l, m = paged_decode_partials(
+        q, k_pages, v_pages, pos_pages, block_tables, pos_q,
+        window=window, scale=scale, soft_cap=soft_cap,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        interpret=interpret)
+    nb = o.shape[1]
+    out = combine_partials([o[:, j] for j in range(nb)],
+                           [l[:, j] for j in range(nb)],
+                           [m[:, j] for j in range(nb)])
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "soft_cap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def paged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            k_pages: jax.Array, v_pages: jax.Array,
+                            pos_pages: jax.Array, block_tables: jax.Array,
+                            positions: jax.Array, *,
+                            window: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            soft_cap: Optional[float] = None,
+                            block_q: int = 256, block_k: int = 256,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Fused paged chunked prefill: resume-chunk queries attend over the
+    already-published paged prefix IN-KERNEL (pages steered by the block
+    table's scalar-prefetch index_map) plus the in-flight suffix (causal
+    flash partials) — two partitions of one exact split softmax, combined
+    via the Eq. 6–10 statistics.  The per-wave dense prefix re-gather is
+    gone: nothing ever materializes a (B, L, KV, D) prefix view.
+
+    q: (B, S, H, D); k, v: (B, S, KV, D) suffix keys/values;
+    k/v_pages: (P, bs, KV, D); pos_pages: (P, bs); block_tables: (B, nb);
+    positions: (B, S) absolute query positions.  Returns (B, S, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    # prefix partition: one partial per physical page
+    po, plv, pm = paged_prefix_partials(
+        q, k_pages, v_pages, pos_pages, block_tables, positions,
+        window=window, scale=scale, soft_cap=soft_cap, interpret=interpret)
+    # suffix partition: causal flash over the chunk itself (both axes are
+    # the same token range, so relative positions encode the causal and
+    # window masks exactly)
+    pow2 = 1 << max((s - 1).bit_length(), 3)
+    bq = min(block_q, pow2)
+    qp = _pad_to(q, 1, bq)
+    tgt = qp.shape[1]
+    bk = min(block_k, tgt)
+    kp = _pad_to(_pad_to(k, 1, tgt), 1, bk)
+    vp = _pad_to(_pad_to(v, 1, tgt), 1, bk)
+    so, sl, sm = flash_prefill(qp, kp, vp, window=window, scale=scale,
+                               soft_cap=soft_cap, block_q=bq, block_k=bk,
+                               return_partials=True, interpret=interpret)
+    nb = po.shape[1]
+    out = combine_partials(
+        [po[:, j] for j in range(nb)] + [so[:, :s]],
+        [plv[:, j] for j in range(nb)] + [sl[:, :s]],
+        [pm[:, j] for j in range(nb)] + [sm[:, :s]])
+    return out.astype(q.dtype)
 
 
 def decode_partials(q: jax.Array, k: jax.Array, v: jax.Array,

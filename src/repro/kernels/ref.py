@@ -79,6 +79,96 @@ def decode_partials_reference(q: jax.Array, k: jax.Array, v: jax.Array,
             jnp.stack(ms_, axis=1))
 
 
+def paged_decode_attention_reference(q: jax.Array, k_pages: jax.Array,
+                                     v_pages: jax.Array,
+                                     pos_pages: jax.Array,
+                                     block_tables: jax.Array,
+                                     pos_q: jax.Array, *,
+                                     window: Optional[int] = None,
+                                     scale: Optional[float] = None,
+                                     soft_cap: Optional[float] = None,
+                                     k_scale_pages=None, v_scale_pages=None
+                                     ) -> jax.Array:
+    """Gather-then-attend ground truth for the page-fused decode kernel:
+    materialize the dense linear view through the block table, then run a
+    single monolithic softmax (with optional score soft cap and int8
+    per-entry dequant in masked_attention's ordering)."""
+    b = q.shape[0]
+    bs, kv, d = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    nb = block_tables.shape[1]
+    plen = nb * bs
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    safe = jnp.maximum(block_tables, 0)
+    k_lin = k_pages[safe].reshape(b, plen, kv, d).astype(jnp.float32)
+    v_lin = v_pages[safe].reshape(b, plen, kv, d).astype(jnp.float32)
+    live = (block_tables >= 0)[:, :, None]
+    pos_lin = jnp.where(live, pos_pages[safe], -1).reshape(b, plen)
+    if k_scale_pages is not None:
+        k_lin = k_lin * k_scale_pages[safe].reshape(b, plen, kv)[..., None]
+        v_lin = v_lin * v_scale_pages[safe].reshape(b, plen, kv)[..., None]
+    pq = pos_q[:, None]
+    valid = (pos_lin >= 0) & (pos_lin <= pq)
+    if window is not None:
+        valid &= pos_lin > pq - window
+    h = q.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg.astype(jnp.float32),
+                   k_lin) * scale
+    if soft_cap is not None:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, v_lin)
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_prefill_attention_reference(q: jax.Array, k: jax.Array,
+                                      v: jax.Array, k_pages: jax.Array,
+                                      v_pages: jax.Array,
+                                      pos_pages: jax.Array,
+                                      block_tables: jax.Array,
+                                      positions: jax.Array, *,
+                                      window: Optional[int] = None,
+                                      scale: Optional[float] = None,
+                                      soft_cap: Optional[float] = None
+                                      ) -> jax.Array:
+    """Ground truth for fused paged chunked prefill: gather the paged
+    prefix dense, concat the suffix, one monolithic softmax per query."""
+    b, s, h, d = q.shape
+    bs, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    plen = nb * bs
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    safe = jnp.maximum(block_tables, 0)
+    k_lin = k_pages[safe].reshape(b, plen, kv, d)
+    v_lin = v_pages[safe].reshape(b, plen, kv, d)
+    live = (block_tables >= 0)[:, :, None]
+    pos_lin = jnp.where(live, pos_pages[safe], -1).reshape(b, plen)
+    keys = jnp.concatenate([k_lin, k], axis=1)
+    vals = jnp.concatenate([v_lin, v], axis=1)
+    key_pos = jnp.concatenate([pos_lin, positions], axis=1)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    sc = jnp.einsum("bskgd,blkd->bkgsl", qg.astype(jnp.float32),
+                    keys.astype(jnp.float32)) * scale
+    if soft_cap is not None:
+        sc = jnp.tanh(sc / soft_cap) * soft_cap
+    pq = positions[:, :, None]
+    pk = key_pos[:, None, :]
+    mask = (pk >= 0) & (pk <= pq)
+    if window is not None:
+        mask &= pk > pq - window
+    sc = jnp.where(mask[:, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgsl,blkd->bskgd", p, vals.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
 def decode_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
                                valid: jax.Array, *,
                                scale: Optional[float] = None) -> jax.Array:

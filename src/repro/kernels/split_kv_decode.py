@@ -27,6 +27,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def tpu_compiler_params(dimension_semantics):
+    """Mosaic compiler params across jax versions (TPUCompilerParams in
+    0.4.x, CompilerParams after the rename)."""
+    cls = getattr(pltpu, "TPUCompilerParams", None) \
+        or getattr(pltpu, "CompilerParams")
+    return cls(dimension_semantics=dimension_semantics)
+
+
 def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, l_ref, m_ref, *,
                    scale: float, kv_heads: int, group: int):
     q = q_ref[0].astype(jnp.float32)                     # (H, D)
@@ -95,8 +103,137 @@ def split_kv_decode_partials(q: jax.Array, k: jax.Array, v: jax.Array,
             jax.ShapeDtypeStruct((b, n_blk, h), jnp.float32),
             jax.ShapeDtypeStruct((b, n_blk, h), jnp.float32),
         ],
-        compiler_params=None if interpret else pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+        compiler_params=None if interpret else tpu_compiler_params(
+            ("parallel", "parallel")),
         interpret=interpret,
     )(q, k, v, valid)
+    return o, l, m
+
+
+def _paged_decode_kernel(tbl_ref, pq_ref, q_ref, k_ref, v_ref, pos_ref,
+                         *rest, scale: float, kv_heads: int, group: int,
+                         window: Optional[int], soft_cap: Optional[float],
+                         quant: bool):
+    """One (b, page-slot) grid step of the page-fused decode kernel.
+
+    The block table rode in as a scalar-prefetch operand: the index_map
+    already steered this step's k/v/pos blocks to the row's j-th physical
+    page, so the kernel reads KV pages *in place* — no gathered linear
+    view exists anywhere.  Dead slots (table entry -1) were clamped to the
+    reserved scratch page by the index_map; the in-body table check masks
+    them (scratch can hold pos >= 0 junk from inactive-row writes)."""
+    if quant:
+        ks_ref, vs_ref, o_ref, l_ref, m_ref = rest
+    else:
+        o_ref, l_ref, m_ref = rest
+    b_ = pl.program_id(0)
+    j = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                     # (H, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bs, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    pos = pos_ref[0]                                     # (bs,)
+    pq = pq_ref[b_]
+    h, d = q.shape
+    valid = (tbl_ref[b_, j] >= 0) & (pos >= 0) & (pos <= pq)
+    if window is not None:
+        valid &= pos > pq - window
+    qg = q.reshape(kv_heads, group, d)
+    # scores: (KV, G, bs)
+    s = jax.lax.dot_general(
+        qg, k.transpose(1, 2, 0),                        # (KV,G,D)x(KV,D,bs)
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    if quant:
+        # per-entry K scales fold into the scores (before the soft cap),
+        # mirroring masked_attention's dequant ordering
+        s = s * ks_ref[0].astype(jnp.float32).T[:, None, :]
+    if soft_cap is not None:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                              # (KV, G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)                              # l from p BEFORE the
+    if quant:                                            # V dequant — exactly
+        p = p * vs_ref[0].astype(jnp.float32).T[:, None, :]   # the dense order
+    o = jax.lax.dot_general(
+        p, v.transpose(1, 0, 2),                         # (KV,G,bs)x(KV,bs,D)
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (KV, G, D)
+    o_ref[0, 0] = o.reshape(h, d)
+    l_ref[0, 0] = l.reshape(h)
+    m_ref[0, 0] = m.reshape(h)
+
+
+def paged_decode_partials(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, pos_pages: jax.Array,
+                          block_tables: jax.Array, pos_q: jax.Array, *,
+                          window: Optional[int] = None,
+                          scale: Optional[float] = None,
+                          soft_cap: Optional[float] = None,
+                          k_scale_pages: Optional[jax.Array] = None,
+                          v_scale_pages: Optional[jax.Array] = None,
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Page-fused split-KV decode: the KV-block grid axis IS the page axis.
+
+    q: (B, H, D); k_pages/v_pages: (P, bs, KV, D) physical block pools;
+    pos_pages: (P, bs) int32 (-1 = hole); block_tables: (B, nb) int32
+    (-1 = unassigned, physical page 0 is reserved scratch); pos_q: (B,)
+    int32 current decode positions.  Optional int8 pools carry
+    k_scale_pages/v_scale_pages (P, bs, KV) f32 for in-kernel dequant.
+
+    The table is a scalar-prefetch operand so the k/v/pos index_maps
+    resolve ``block_tables[b, j]`` at grid-step issue time — the kernel
+    streams pages straight out of the pool with zero dense KV gather.
+    Returns per-page partials o (B, nb, H, D), l/m (B, nb, H) f32 for
+    ``combine_partials`` (Eq. 6–10)."""
+    b, h, d = q.shape
+    bs, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    group = h // kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    quant = k_scale_pages is not None
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, kv_heads=kv, group=group,
+        window=window, soft_cap=soft_cap, quant=quant)
+
+    def page(idx_fn):
+        # clamp dead entries (-1) to the scratch page; the kernel masks them
+        return lambda b_, j, tbl, pq: idx_fn(jnp.maximum(tbl[b_, j], 0))
+
+    in_specs = [
+        pl.BlockSpec((1, h, d), lambda b_, j, tbl, pq: (b_, 0, 0)),
+        pl.BlockSpec((1, bs, kv, d), page(lambda p_: (p_, 0, 0, 0))),
+        pl.BlockSpec((1, bs, kv, d), page(lambda p_: (p_, 0, 0, 0))),
+        pl.BlockSpec((1, bs), page(lambda p_: (p_, 0))),
+    ]
+    operands = [q, k_pages, v_pages, pos_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, kv), page(lambda p_: (p_, 0, 0))),
+                     pl.BlockSpec((1, bs, kv), page(lambda p_: (p_, 0, 0)))]
+        operands += [k_scale_pages, v_scale_pages]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda b_, j, tbl, pq: (b_, j, 0, 0)),
+            pl.BlockSpec((1, 1, h), lambda b_, j, tbl, pq: (b_, j, 0)),
+            pl.BlockSpec((1, 1, h), lambda b_, j, tbl, pq: (b_, j, 0)),
+        ],
+    )
+    o, l, m = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, h), jnp.float32),
+        ],
+        compiler_params=None if interpret else tpu_compiler_params(
+            ("parallel", "parallel")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos_q.astype(jnp.int32), *operands)
     return o, l, m

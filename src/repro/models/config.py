@@ -171,10 +171,23 @@ class ModelConfig:
         return full - inactive
 
     # -- per-token KV bytes (paper Eq. 15/16) ----------------------------
-    def kv_bytes_per_token_per_layer(self, dtype_bytes: int = 2) -> int:
+    def kv_bytes_per_token_per_layer(self,
+                                     dtype_bytes: Optional[int] = None
+                                     ) -> int:
+        """K+V bytes one token adds per attention layer.  With
+        ``dtype_bytes=None`` the config's own storage format decides:
+        int8 caches (``kv_quant``) pay 1 byte per element plus one f32
+        scale per (token, head) per K and V — roughly half the bf16 cost —
+        so hand-off, migration and store billings all see the quantized
+        wire size.  An explicit ``dtype_bytes`` overrides (legacy
+        callers / what-if sweeps)."""
+        if dtype_bytes is None:
+            if self.kv_quant:
+                return self.n_kv_heads * (self.head_dim * 1 + 4) * 2
+            dtype_bytes = 2
         return self.n_kv_heads * self.head_dim * 2 * dtype_bytes
 
-    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+    def kv_bytes_per_token(self, dtype_bytes: Optional[int] = None) -> int:
         n_attn = sum(1 for b in self.blocks()
                      if b in (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION))
         return n_attn * self.kv_bytes_per_token_per_layer(dtype_bytes)

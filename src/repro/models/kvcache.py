@@ -107,9 +107,13 @@ def prefix_cacheable(cfg: ModelConfig) -> bool:
     """The global prefix store holds attention KV; it applies only when the
     stack's attention caches are linear (non-ring) — i.e. pure global
     attention.  Recurrent/windowed archs fall back to recompute (noted in
-    DESIGN.md §Arch-applicability)."""
+    DESIGN.md §Arch-applicability).  int8 KV caches are excluded too: the
+    per-block payload format carries no per-entry scales
+    (``slice_prefix_kv``/``merge_prefix_kv`` move only k/v/pos), so a
+    quantized prefix could not round-trip through the store exactly."""
     return (cfg.uses_kv_cache
             and cfg.sliding_window is None
+            and not cfg.kv_quant
             and all(b == BlockKind.ATTENTION for b in cfg.blocks()))
 
 
@@ -567,6 +571,64 @@ def page_payload(pcache: Cache, page: int, block_size: int) -> RequestState:
         "length": jnp.asarray(block_size, jnp.int32),
         "groups": tuple(conv(g, 1) for g in pcache["groups"]),
         "rem": tuple(conv(g, 0) for g in pcache["rem"]),
+    }
+
+
+def pages_from_payloads(payloads: Sequence[RequestState],
+                        length: int) -> RequestState:
+    """Stack per-block store payloads (``slice_prefix_kv`` shape, one
+    block each) into a paged wire state — the store-hit entry point of the
+    paged incremental prefill path.  Instead of merging fetched blocks
+    into a dense row and re-gathering them every wave, the blocks become
+    the request's prefix *pages* directly and ``insert_paged_state``
+    scatters them into the wave pool once."""
+    assert payloads, "no payloads to page"
+    n = len(payloads)
+
+    def conv(gs: Sequence[Dict[str, Any]], seq_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in gs[0].items():
+            if (key in PAGED_KEYS and hasattr(a, "shape")
+                    and a.ndim == seq_axis + 1 + _LEAF_TAIL[key]):
+                out[key] = jnp.stack([g[key] for g in gs], axis=seq_axis)
+            else:       # cross KV etc: payloads carry identical copies
+                out[key] = a
+        return out
+
+    return {
+        "length": jnp.asarray(length, jnp.int32),
+        "n_blocks": n,
+        "groups": tuple(conv([p["groups"][gi] for p in payloads], 1)
+                        for gi in range(len(payloads[0]["groups"]))),
+        "rem": tuple(conv([p["rem"][gi] for p in payloads], 0)
+                     for gi in range(len(payloads[0]["rem"]))),
+    }
+
+
+def paged_state_block(st: RequestState, block: int,
+                      block_size: int) -> RequestState:
+    """One page of a paged wire state as a dense per-block store payload —
+    the exact shape ``slice_prefix_kv`` yields for that block, so paged
+    prefill publishes to the store without ever densifying the state."""
+    n = int(st["n_blocks"])
+    assert 0 <= block < n, (block, n)
+
+    def conv(g: Dict[str, Any], seq_axis: int) -> Dict[str, Any]:
+        out = {}
+        for key, a in g.items():
+            if (key in PAGED_KEYS and hasattr(a, "shape")
+                    and a.ndim == seq_axis + 2 + _LEAF_TAIL[key]
+                    and a.shape[seq_axis] == n
+                    and a.shape[seq_axis + 1] == block_size):
+                out[key] = a[(slice(None),) * seq_axis + (block,)]
+            else:
+                out[key] = a
+        return out
+
+    return {
+        "length": jnp.asarray(block_size, jnp.int32),
+        "groups": tuple(conv(g, 1) for g in st["groups"]),
+        "rem": tuple(conv(g, 0) for g in st["rem"]),
     }
 
 

@@ -264,7 +264,34 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
             assert not prefix_aware, "int8 cache + prefix store not combined"
             k_q, k_s = quantize_kv(k)
             v_q, v_s = quantize_kv(v)
-        if mode == "prefill":
+        if mode == "prefill" and block_tables is not None \
+                and cache_k.shape[0] != b:
+            # paged incremental prefill (chunk resume / store hit): the
+            # prefix lives in pool pages and attention reads it IN-KERNEL
+            # through the block table (plus the causal in-flight suffix) —
+            # the per-wave dense prefix re-gather is gone.  Suffix K/V
+            # then scatter into their pre-assigned pages, so every live
+            # position holds the same bits the dense path would have
+            # written.
+            assert not quant, \
+                "int8 pages + paged incremental prefill not combined"
+            from ..kernels.ops import paged_prefill_attention
+            bs_pg = cache_k.shape[1]
+            nb = block_tables.shape[1]
+            plen = nb * bs_pg
+            o = paged_prefill_attention(
+                q, k, v, cache_k, cache_v, slot_pos, block_tables,
+                positions, window=window, scale=scale,
+                soft_cap=cfg.logit_soft_cap)
+            slot_off = positions % plen
+            # dead table entries (-1, e.g. padded dummy rows) land on the
+            # reserved scratch page 0, which readers mask out
+            wblk = jnp.maximum(block_tables[b_idx, slot_off // bs_pg], 0)
+            off = slot_off % bs_pg
+            cache_k = cache_k.at[wblk, off].set(k)
+            cache_v = cache_v.at[wblk, off].set(v)
+            slot_pos = slot_pos.at[wblk, off].set(positions)
+        elif mode == "prefill":
             if prefix_aware:
                 # attend over [existing cache prefix ; in-context keys]
                 keys = jnp.concatenate([cache_k, k], axis=1)
@@ -311,9 +338,12 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                     v_sc = state["v_scale"].at[b_idx, write_pos].set(vs_w)
         elif block_tables is not None and cache_k.shape[0] != b:
             # paged decode: S == 1, state leaves are block pools.  Scatter
-            # the new token into its page, then gather the row's pages into
-            # the linear (B, L, KV, D) view — identical values at every
-            # live position, so the math is bit-identical to the dense path.
+            # the new token into its page, then attend over the row's
+            # pages.  Default (paged_kernel=True): the split-KV Pallas
+            # kernel reads pages IN PLACE — the block table is fused into
+            # its index_map, so no dense KV gather exists in the step.
+            # The explicit opt-out (decode_kernel=False) keeps the
+            # gather-then-attend formulation as the bit-level reference.
             assert head_offload == 0, "head offload + paged not combined"
             bs_pg = cache_k.shape[1]
             nb = block_tables.shape[1]
@@ -335,18 +365,21 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                 cache_k = cache_k.at[wblk, off].set(k[:, 0])
                 cache_v = cache_v.at[wblk, off].set(v[:, 0])
             slot_pos = slot_pos.at[wblk, off].set(pos0)
-            safe = jnp.maximum(block_tables, 0)
-            kvh, hd = cache_k.shape[-2], cache_k.shape[-1]
-            k_lin = cache_k[safe].reshape(b, plen, kvh, hd)
-            v_lin = cache_v[safe].reshape(b, plen, kvh, hd)
-            live = (block_tables >= 0)[:, :, None]
-            pos_lin = jnp.where(live, slot_pos[safe], -1).reshape(b, plen)
-            if paged_kernel and not quant and cfg.logit_soft_cap is None:
+            if paged_kernel:
                 from ..kernels.ops import paged_decode_attention
-                o = paged_decode_attention(q[:, 0], k_lin, v_lin, pos_lin,
-                                           pos0, window=window,
-                                           scale=scale)[:, None]
+                o = paged_decode_attention(
+                    q[:, 0], cache_k, cache_v, slot_pos, block_tables,
+                    pos0, window=window, scale=scale,
+                    soft_cap=cfg.logit_soft_cap,
+                    k_scale_pages=k_sc if quant else None,
+                    v_scale_pages=v_sc if quant else None)[:, None]
             else:
+                safe = jnp.maximum(block_tables, 0)
+                kvh, hd = cache_k.shape[-2], cache_k.shape[-1]
+                k_lin = cache_k[safe].reshape(b, plen, kvh, hd)
+                v_lin = cache_v[safe].reshape(b, plen, kvh, hd)
+                live = (block_tables >= 0)[:, :, None]
+                pos_lin = jnp.where(live, slot_pos[safe], -1).reshape(b, plen)
                 o = attend(q, k_lin, v_lin, positions, pos_lin,
                            window=window, scale=scale,
                            soft_cap=cfg.logit_soft_cap,

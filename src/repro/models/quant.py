@@ -66,3 +66,39 @@ def dequant_tree(params, dtype=jnp.bfloat16):
     """Dequantize a parameter subtree (e.g. one layer's params slice)."""
     return jax.tree.map(lambda l: dequant(l, dtype), params,
                         is_leaf=is_quantized)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV pages (the paged serving cache's quantized storage format)
+# ---------------------------------------------------------------------------
+#
+# A quantized KV page stores int8 values plus one f32 scale per (token
+# entry, kv head) — the same symmetric grid ``layers.quantize_kv`` writes
+# token by token, laid out pool-shaped: values (..., block, KV, D), scales
+# (..., block, KV).  Per-page KV bytes therefore drop from 2·D bf16 bytes
+# to D + 4/… int8+scale bytes per head entry (~2x), and the page-fused
+# decode kernel dequantizes in place by folding the scales into its
+# score/value matmuls — the bf16 pages are never materialized.
+
+def quantize_kv_page(x: jax.Array):
+    """Quantize pool-shaped K or V pages.
+
+    x: (..., block, KV, D) float -> (int8 same shape, f32 (..., block, KV))
+    with the symmetric 127-step grid of ``layers.quantize_kv``."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def dequantize_kv_page(q: jax.Array, s: jax.Array,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of ``quantize_kv_page`` (up to the int8 grid)."""
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def quantize_kv_pages(k_pages: jax.Array, v_pages: jax.Array):
+    """Quantize a K/V page-pool pair -> (k_q, k_scale, v_q, v_scale)."""
+    kq, ks = quantize_kv_page(k_pages)
+    vq, vs = quantize_kv_page(v_pages)
+    return kq, ks, vq, vs

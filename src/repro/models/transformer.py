@@ -308,7 +308,10 @@ def apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     b, s = tokens.shape[:2]
     block_tables = None
     if cache is not None and "block_tables" in cache:
-        assert mode == "decode", "paged caches serve the decode path only"
+        assert mode in ("decode", "prefill"), \
+            "paged caches serve the decode and incremental-prefill paths"
+        assert mode == "decode" or prefix_aware, \
+            "paged prefill is the incremental (prefix-aware) resume path"
         block_tables = cache["block_tables"]
     if cache is not None:
         lengths = cache["lengths"]

@@ -55,7 +55,12 @@ class EngineConfig:
     max_batch: int = 8
     block_size: int = 16          # must match the store's block size
     greedy: bool = True
-    decode_kernel: bool = False   # paged decode via the split-KV Pallas kernel
+    # paged decode via the page-fused split-KV Pallas kernel.  None = auto:
+    # the kernel is the default whenever the cache is paged (compiled on
+    # TPU, interpret=True elsewhere — kernels/ops picks per backend).
+    # False forces the gather-then-attend dense reference path (kept as
+    # the bit-level A/B baseline); True forces the kernel.
+    decode_kernel: Optional[bool] = None
     # when set, store fetches are billed as the §4.2 layer-wise overlapped
     # transmission against this hardware's per-layer prefill compute
     hw: Optional[A.HardwareProfile] = None
@@ -172,6 +177,15 @@ class PrefillEngine:
         # prefix-aware baseline router keys on (Fig. 2a)
         self._leading: Dict[bytes, int] = {}
         self._page_len = _paged_page_len(cfg, ecfg)
+        # hit waves (store hits + chunk resumes) run over a paged wave
+        # cache: the prefix stays in pages the fused prefill kernel reads
+        # through the block table, instead of being re-gathered into a
+        # dense row every wave.  Needs every attention cache paged at the
+        # full page space (prefix_cacheable) and the standard self-attn
+        # write path (no cross-frame KV riding along).
+        self._paged_inc = (self._page_len is not None
+                           and KC.prefix_cacheable(cfg)
+                           and not cfg.cross_attention)
         # recurrent states would integrate junk pad tokens; attention-only
         # stacks mask them, so only those get the padded bucket discipline
         self._pad = not cfg.uses_recurrent_state
@@ -261,8 +275,12 @@ class PrefillEngine:
         self._leading[keys[0]] = max(self._leading.get(keys[0], 0), n_full)
         if self.store is None:
             return
-        payloads = [KC.slice_prefix_kv(st, i, i + bs)
-                    for i in range(matched, n_full, bs)]
+        if "n_blocks" in st:     # paged wave state: pages ARE the blocks
+            payloads = [KC.paged_state_block(st, j, bs)
+                        for j in range(matched // bs, n_full // bs)]
+        else:
+            payloads = [KC.slice_prefix_kv(st, i, i + bs)
+                        for i in range(matched, n_full, bs)]
         if payloads:
             nbytes = KC.state_num_bytes(payloads[0])
             self.store.insert(tokens[:n_full],
@@ -412,38 +430,85 @@ class PrefillEngine:
                                   wave_frames.dtype)])
                 n_rows = padded_rows
             chain = [self] + self._followers
-            caches = [T.init_cache(e.scfg, n_rows, self.ecfg.max_len,
-                                   dtype=e.params["embed"].dtype)
-                      for e in chain]
+            # hit waves on pageable single-span stacks run PAGED: the
+            # cached prefix lives in pool pages the fused prefill kernel
+            # reads through the block table — no per-wave dense re-gather
+            use_paged = hit and len(chain) == 1 and self._paged_inc
+            bs = self.ecfg.block_size
             matched_of: Dict[int, int] = {}
-            for row, i in enumerate(chosen):
-                if i in partials:
-                    # resume a chunked row: its partial (full-stack) state
-                    # IS the cache — split per span when chained
-                    matched_of[i] = progress[i]
-                    part = partials.pop(i)
-                    if len(chain) == 1:
-                        caches[0] = KC.insert_request_state(caches[0], row,
-                                                            part)
+            if use_paged:
+                nb_slot = self._page_len // bs
+                pcache = T.init_paged_cache(
+                    self.scfg, n_rows, self.ecfg.max_len, bs,
+                    dtype=self.params["embed"].dtype)
+                # host mirror of the wave's block tables: each row owns a
+                # contiguous run of wave-local pages (prefix pages first,
+                # then fresh pages covering this wave's padded suffix)
+                tables = np.full((n_rows, nb_slot), -1, np.int32)
+                for row, i in enumerate(chosen):
+                    part = None
+                    if i in partials:
+                        # resume a chunked row: its parked state is
+                        # already in the paged wire format
+                        matched_of[i] = progress[i]
+                        part = partials.pop(i)
                     else:
-                        for k, p_k in enumerate(LM.split_state_spans(
-                                self.cfg, part,
-                                [e.layer_span for e in chain])):
-                            caches[k] = KC.insert_request_state(
-                                caches[k], row, p_k)
-                    continue
-                matched, payloads = self._match(toks[i], keys_of[i])
-                matched_of[i] = store_matched[i] = matched
-                if matched > 0:
-                    # store payloads are full-stack; span chains hold no
-                    # store (engine.__init__), so this is lead-only
-                    reqs[i].cached_tokens = matched
-                    st = KC.extract_request_state(caches[0], row)
-                    off = 0
-                    for p in payloads:
-                        st = KC.merge_prefix_kv(st, p, off)
-                        off += self.ecfg.block_size
-                    caches[0] = KC.insert_request_state(caches[0], row, st)
+                        matched, payloads = self._match(toks[i],
+                                                        keys_of[i])
+                        matched_of[i] = store_matched[i] = matched
+                        if matched > 0:
+                            reqs[i].cached_tokens = matched
+                            part = KC.pages_from_payloads(payloads,
+                                                          matched)
+                    start = 1 + row * nb_slot
+                    if part is not None:
+                        n_have = int(part["n_blocks"])
+                        pcache = KC.insert_paged_state(
+                            pcache, row, part,
+                            list(range(start, start + n_have)), bs,
+                            scatter=_page_scatter)
+                    # fresh pages out to the wave's padded write horizon
+                    # (pad junk lands in the row's own junk pages, same
+                    # overwrite-before-read contract as the dense path)
+                    n_need = min(-(-(matched_of[i] + blen) // bs),
+                                 nb_slot)
+                    tables[row, :n_need] = np.arange(start,
+                                                     start + n_need)
+                pcache["block_tables"] = jnp.asarray(tables)
+                caches = [pcache]
+            else:
+                caches = [T.init_cache(e.scfg, n_rows, self.ecfg.max_len,
+                                       dtype=e.params["embed"].dtype)
+                          for e in chain]
+                for row, i in enumerate(chosen):
+                    if i in partials:
+                        # resume a chunked row: its partial (full-stack)
+                        # state IS the cache — split per span when chained
+                        matched_of[i] = progress[i]
+                        part = partials.pop(i)
+                        if len(chain) == 1:
+                            caches[0] = KC.insert_request_state(
+                                caches[0], row, part)
+                        else:
+                            for k, p_k in enumerate(LM.split_state_spans(
+                                    self.cfg, part,
+                                    [e.layer_span for e in chain])):
+                                caches[k] = KC.insert_request_state(
+                                    caches[k], row, p_k)
+                        continue
+                    matched, payloads = self._match(toks[i], keys_of[i])
+                    matched_of[i] = store_matched[i] = matched
+                    if matched > 0:
+                        # store payloads are full-stack; span chains hold
+                        # no store (engine.__init__), so this is lead-only
+                        reqs[i].cached_tokens = matched
+                        st = KC.extract_request_state(caches[0], row)
+                        off = 0
+                        for p in payloads:
+                            st = KC.merge_prefix_kv(st, p, off)
+                            off += bs
+                        caches[0] = KC.insert_request_state(caches[0],
+                                                            row, st)
             suffix = np.zeros((n_rows, blen), np.int32)
             slens = np.ones((n_rows,), np.int32)   # dummy rows read pos 0
             for row, i in enumerate(chosen):
@@ -470,16 +535,23 @@ class PrefillEngine:
             done_wave: List[Tuple[int, Dict[str, Any], jax.Array]] = []
             wave_tokens = 0
             for row, i in enumerate(chosen):
-                if len(chain) == 1:
+                # the cache advanced by the padded length; the request's
+                # true length is what decode must resume from
+                new_len = matched_of[i] + int(slens[row])
+                if use_paged:
+                    # gather only the used pages (junk pages beyond the
+                    # true length drop here, like dense_state_to_paged)
+                    st = KC.extract_paged_state(
+                        caches[0], row, bs,
+                        table_row=tables[row][: -(-new_len // bs)],
+                        length=new_len, gather=_page_gather)
+                elif len(chain) == 1:
                     st = KC.extract_request_state(caches[0], row)
                 else:
                     st = LM.merge_state_spans(
                         self.cfg,
                         [KC.extract_request_state(c, row) for c in caches],
                         [e.layer_span for e in chain])
-                # the cache advanced by the padded length; the request's
-                # true length is what decode must resume from
-                new_len = matched_of[i] + int(slens[row])
                 st["length"] = jnp.asarray(new_len, jnp.int32)
                 self.tokens_prefilled += int(slens[row])
                 wave_tokens += int(slens[row])
@@ -494,13 +566,19 @@ class PrefillEngine:
                     self._publish(toks[i], st, pub_from, keys_part)
                     published[i] = len(keys_part) * self.ecfg.block_size
                 if new_len < len(toks[i]):
-                    # chunk boundary: park the partial state, stay remaining
+                    # chunk boundary: park the partial state, stay
+                    # remaining.  On the paged-wave track partials park in
+                    # the paged wire format (fresh chunk-1 states convert
+                    # here) so every resume runs the fused paged path
+                    if (self._paged_inc and len(chain) == 1
+                            and "n_blocks" not in st):
+                        st = KC.dense_state_to_paged(st, bs)
                     partials[i] = st
                     progress[i] = new_len
                     continue
                 self.n_prefilled += 1
-                if self._page_len is not None:
-                    st = KC.dense_state_to_paged(st, self.ecfg.block_size)
+                if self._page_len is not None and "n_blocks" not in st:
+                    st = KC.dense_state_to_paged(st, bs)
                 done_wave.append((i, st, logits[row]))
             done = {i for i, _, _ in done_wave}
             remaining = [i for i in remaining if i not in done]
@@ -598,8 +676,11 @@ class DecodeEngine:
         else:
             self.cache = T.init_cache(self.scfg, ecfg.max_batch, ecfg.max_len,
                                       dtype=self.params["embed"].dtype)
-        self._step = _jit_apply(self.scfg, "decode", False,
-                                ecfg.decode_kernel and self.paged)
+        # page-fused kernel decode is the default on paged pools; an
+        # explicit decode_kernel=False keeps the dense gather-then-attend
+        # reference path for bit-level A/B runs
+        self.use_kernel = self.paged and ecfg.decode_kernel is not False
+        self._step = _jit_apply(self.scfg, "decode", False, self.use_kernel)
 
     def rebase_span(self, layer_span: Tuple[int, int]) -> None:
         """Re-slice this stage to a different contiguous span (layer-level
@@ -868,8 +949,7 @@ class DecodeEngine:
         returns last-token logits, or the residual stream when
         ``hidden_out`` (pipeline hand-off to the next stage)."""
         if hidden_in or hidden_out:
-            fn = _jit_apply(self.scfg, "decode", False,
-                            self.ecfg.decode_kernel and self.paged,
+            fn = _jit_apply(self.scfg, "decode", False, self.use_kernel,
                             hidden_in=hidden_in, hidden_out=hidden_out)
         else:
             fn = self._step

@@ -11,6 +11,7 @@ it acted on.  The same driver then runs the matrix against the
 shapes are expressible on either side of the protocol.  The heavier runs
 — bigger matrices and the span-partitioned (decode_split) variants —
 carry the ``slow`` marker and run in CI's second job."""
+import jax
 import pytest
 
 from conftest import TINY, TINY_ECFG, assert_pools_restored
@@ -44,6 +45,18 @@ SCENARIOS = {
                            n_prefix_groups=2, prefix_zipf=2.0),
                       dict(n_prefill=2, n_decode=2, chunk_tokens=16)),
 }
+
+
+@pytest.fixture(autouse=True)
+def _per_test_compile_cache():
+    """This module is the suite's biggest compile generator: every request
+    of every scenario gets an eager greedy-reference rollout, which
+    compiles a fresh layer scan per sequence length.  One module's worth
+    is enough to hit jaxlib's CPU ``backend_compile`` accumulation
+    segfault (see conftest), so clear per *test* here, not per module —
+    shared jits recompile lazily on next touch."""
+    yield
+    jax.clear_caches()
 
 
 def _drive(backend, reqs):
