@@ -1,47 +1,121 @@
-"""Figure 2a: load skew induced by prefix-cache-aware routing vs the
-load-aware router enabled by the Global KV Cache Store."""
+"""Multi-tenant front door A/B: FIFO vs weighted-fair queueing under a
+flood-vs-interactive tenant mix (serving/fairshare.py).
+
+Three scenarios on the analytical cluster simulator (banaserve mode):
+
+* ``solo``  — the interactive tenant alone: its unloaded SLO attainment,
+  the bar the scheduler is judged against.
+* ``fifo``  — interactive + a long-prompt flood tenant through a plain
+  FIFO front door: head-of-line blocking collapses interactive TTFT.
+* ``wfq``   — the same mix behind WFQ + per-tenant budgets (the flood
+  tenant is capped and over-budget arrivals are REJECTED) + swap decode
+  preemption.  The claim: interactive attainment stays within 10% of its
+  solo run while the flood is active.
+
+Emits BENCH_scheduler.json (diffed against benchmarks/baselines/ by the
+CI bench-smoke job).
+"""
 from __future__ import annotations
 
-import numpy as np
+import os
 
-from repro.core.scheduling import (InstanceLoad, LoadAwareRouter,
-                                   PrefixAwareRouter, RequestInfo, load_skew)
+from repro.core import analytical as A
+from repro.models.config import Family, ModelConfig
+from repro.serving import workload as W
+from repro.serving.api import Server
+from repro.serving.cluster import ClusterSim, SimConfig
+from repro.serving.fairshare import SchedulerConfig, TenantPolicy
+from repro.serving.request import SLO
 
+MODEL = ModelConfig(name="bench-sched", family=Family.DENSE, n_layers=32,
+                    d_model=4096, n_heads=32, n_kv_heads=32, d_ff=11008,
+                    vocab_size=32000)
+SLO_ = SLO(ttft_s=1.0, tpot_s=0.1)
 
-def run(n_instances=3, n_requests=300, zipf=1.2, seed=0):
-    rows = []
-    rng = np.random.default_rng(seed)
-    # Zipf-popular prefixes (Fig. 2a's Q1..Q10)
-    n_groups = 10
-    pop = np.arange(1, n_groups + 1, dtype=float) ** (-zipf)
-    pop /= pop.sum()
-    reqs = []
-    for rid in range(n_requests):
-        gid = int(rng.choice(n_groups, p=pop))
-        reqs.append(RequestInfo(rid, 256, est_load=0.02,
-                                prefix_key=bytes([gid])))
-    for name, router in (("prefix_aware", PrefixAwareRouter()),
-                         ("load_aware", LoadAwareRouter())):
-        insts = [InstanceLoad(f"p{i}", 0.0, 0) for i in range(n_instances)]
-        router.dispatch(reqs, insts)
-        counts = {p.name: p.queue_len for p in insts}
-        rows.append({
-            "router": name,
-            "skew": load_skew(insts),
-            "max_share": max(counts.values()) / n_requests,
-            "counts": counts,
-        })
-    return rows
+WFQ = SchedulerConfig(
+    policy="wfq", srpt_bias=0.25, aging_rate=0.05, preemption="swap",
+    tenants={
+        "interactive": TenantPolicy(weight=8.0, priority=1),
+        "flood": TenantPolicy(weight=1.0, priority=0,
+                              max_inflight_requests=8,
+                              max_inflight_tokens=24576),
+    })
 
 
-def main(csv=True):
-    rows = run()
+def _interactive(n: int, seed: int = 0) -> list:
+    return W.generate(W.WorkloadConfig(
+        kind="synthetic", rps=8.0, n_requests=n, seed=seed,
+        max_new_tokens=64, prompt_len_lo=32, prompt_len_hi=128,
+        prefix_share=0.0, tenant="interactive"))
+
+
+def _flood(n: int, seed: int = 1) -> list:
+    return W.generate(W.WorkloadConfig(
+        kind="synthetic", rps=12.0, n_requests=n, seed=seed,
+        max_new_tokens=256, prompt_len_lo=2048, prompt_len_hi=4096,
+        prefix_share=0.0, tenant="flood"))
+
+
+def _run(reqs, sched):
+    sim = ClusterSim(SimConfig(MODEL, "banaserve", hw=A.A100_80G,
+                               n_instances=4, decode_batch_max=8,
+                               slo=SLO_), None)
+    srv = Server(sim, scheduler=sched)
+    for r in reqs:
+        srv.submit(r, at=r.arrival)
+    srv.backend.drain()
+    return srv.summary()
+
+
+def _slice(summary: dict, tenant: str) -> dict:
+    t = summary["tenants"].get(tenant, {})
+    return {
+        "slo_attainment": round(t.get("slo_attainment") or 0.0, 4),
+        "mean_ttft_s": round(t.get("mean_ttft_s") or 0.0, 4),
+        "goodput_tok_s": round(t.get("goodput_tok_s") or 0.0, 2),
+        "n_rejected": t.get("n_rejected", 0),
+    }
+
+
+def run(n: int):
+    out = {}
+    solo = _run(_interactive(n), None)
+    out["solo"] = {"interactive": _slice(solo, "interactive")}
+    fifo = _run(W.merge_workloads(_interactive(n), _flood(n)),
+                SchedulerConfig(policy="fifo"))
+    out["fifo"] = {"interactive": _slice(fifo, "interactive"),
+                   "flood": _slice(fifo, "flood")}
+    wfq = _run(W.merge_workloads(_interactive(n), _flood(n)), WFQ)
+    out["wfq"] = {"interactive": _slice(wfq, "interactive"),
+                  "flood": _slice(wfq, "flood"),
+                  "n_preempted_swap": wfq["n_preempted_swap"],
+                  "pages_swapped": wfq["pages_swapped"],
+                  "sched_rejections": wfq["sched_rejections"]}
+    solo_att = out["solo"]["interactive"]["slo_attainment"]
+    wfq_att = out["wfq"]["interactive"]["slo_attainment"]
+    fifo_att = out["fifo"]["interactive"]["slo_attainment"]
+    out["interactive_protected"] = bool(wfq_att >= solo_att - 0.10)
+    out["fifo_degrades"] = bool(fifo_att < wfq_att - 0.10)
+    return out
+
+
+def main(csv: bool = True) -> dict:
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    res = run(n=30 if smoke else 60)
     if csv:
-        print("bench_scheduler:router,load_skew,max_request_share")
-        for r in rows:
-            print(f"fig2a,{r['router']},{r['skew']:.3f},"
-                  f"{r['max_share']:.2f}")
-    return rows
+        print("bench_scheduler:scenario,tenant,slo_attainment,"
+              "mean_ttft_s,n_rejected")
+        for scen in ("solo", "fifo", "wfq"):
+            for tenant in ("interactive", "flood"):
+                t = res[scen].get(tenant)
+                if t is None:
+                    continue
+                print(f"fairshare,{scen},{tenant},"
+                      f"{t['slo_attainment']:.3f},{t['mean_ttft_s']:.3f},"
+                      f"{t['n_rejected']}")
+        print(f"# interactive_protected={res['interactive_protected']} "
+              f"fifo_degrades={res['fifo_degrades']}")
+    return res
 
 
 if __name__ == "__main__":

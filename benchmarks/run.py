@@ -27,7 +27,7 @@ from . import (bench_attention, bench_chunked_prefill,
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
     "migration": bench_migration,     # Eq. 4 / Eq. 11
-    "scheduler": bench_scheduler,     # Fig. 2a (simulator)
+    "scheduler": bench_scheduler,     # FIFO vs WFQ flood-vs-interactive A/B
     "orchestrator": bench_orchestrator,  # Fig. 2a live, time-domain + SLOs
     "paged_handoff": bench_paged_handoff,  # block moves vs row surgery
     "prefix_reuse": bench_prefix_reuse,  # shared vs copy vs recompute

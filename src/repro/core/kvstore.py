@@ -94,6 +94,11 @@ class StoreStats:
     bound_blocks: int = 0          # pages handed out for by-reference binds
     demotions: int = 0             # pages copied out of HBM to backing tiers
     bytes_demoted: int = 0
+    # decode-preemption traffic (fair-share swap policy): victims' KV
+    # pages demoted to the first backing tier and promoted back on resume
+    swaps_out: int = 0
+    swaps_in: int = 0
+    bytes_swapped: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -127,6 +132,7 @@ class GlobalKVStore:
         self._pools: Dict[str, Any] = {}   # pool id -> registered pool
         self.stats = StoreStats()
         self.demote_latency_s = 0.0        # modelled HBM->backing copies
+        self.swap_latency_s = 0.0          # modelled preemption swap traffic
 
     # -- lookup ----------------------------------------------------------
     def match(self, tokens: Sequence[int], record_stats: bool = True,
@@ -236,7 +242,13 @@ class GlobalKVStore:
                 self._entries.move_to_end(k)
                 out.append(k)
                 continue
-            self._make_room(0, nbytes_per_block)
+            if not self._make_room(0, nbytes_per_block):
+                # nothing left to evict (block bigger than the tier, or
+                # the survivors are pinned): caching is best-effort, so
+                # drop the block instead of over-filling the tier — and
+                # stop here, later blocks of this chain would be
+                # unreachable behind the gap anyway
+                break
             self._entries[k] = _Entry(p, nbytes_per_block, 0, self.block_size)
             self._tier_used[0] += nbytes_per_block
             self.stats.inserts += 1
@@ -311,14 +323,14 @@ class GlobalKVStore:
         e.sched = None
         self.stats.demotions += 1
         self.stats.bytes_demoted += e.nbytes
-        if len(self.tiers) > 1:
-            self._make_room(1, e.nbytes, skip=key)
+        if len(self.tiers) > 1 and self._make_room(1, e.nbytes, skip=key):
             e.tier = 1
             self._tier_used[1] += e.nbytes
             self.demote_latency_s += e.nbytes / (
                 self.tiers[1].bandwidth_gbps * 1e9)
         else:
-            # no backing tier: the demotion is an eviction
+            # no backing tier (or no room even after its evictions): the
+            # demotion is an eviction — never over-fill a tier
             del self._entries[key]
             self.stats.evictions += 1
         return bool(freed)
@@ -354,33 +366,79 @@ class GlobalKVStore:
         del self._pools[pool_id]
         return n
 
+    # -- preemption swap billing (fair-share decode preemption) -----------
+    def _swap_bandwidth(self) -> float:
+        """Bytes/s of the HBM<->backing boundary a preemption swap
+        crosses: the first backing tier's bandwidth (HBM-only stores fall
+        back to tier 0)."""
+        spec = self.tiers[1] if len(self.tiers) > 1 else self.tiers[0]
+        return spec.bandwidth_gbps * 1e9
+
+    def swap_out(self, nbytes: int) -> float:
+        """Bill a preempted request's gathered KV state demoted to the
+        host tier; returns the modelled transfer seconds (the victim's
+        resume cannot start before its pages are out)."""
+        t = nbytes / self._swap_bandwidth()
+        self.stats.swaps_out += 1
+        self.stats.bytes_swapped += nbytes
+        self.swap_latency_s += t
+        return t
+
+    def swap_in(self, nbytes: int) -> float:
+        """Bill the promotion back to HBM when a swapped victim resumes;
+        returns the modelled transfer seconds (delays the resume kick)."""
+        t = nbytes / self._swap_bandwidth()
+        self.stats.swaps_in += 1
+        self.swap_latency_s += t
+        return t
+
     # -- internals -------------------------------------------------------
-    def _move_tier(self, key: bytes, e: _Entry, tier: int):
+    def _move_tier(self, key: bytes, e: _Entry, tier: int) -> bool:
+        """Re-tier an entry; False (entry stays put) when the target tier
+        cannot make room even after its own evictions."""
         self._tier_used[e.tier] -= e.nbytes
-        self._make_room(tier, e.nbytes, skip=key)
+        if not self._make_room(tier, e.nbytes, skip=key):
+            self._tier_used[e.tier] += e.nbytes
+            return False
         e.tier = tier
         self._tier_used[tier] += e.nbytes
+        return True
 
-    def _make_room(self, tier: int, nbytes: int, skip: Optional[bytes] = None):
-        """Demote LRU entries of ``tier`` until nbytes fit; cascade down."""
+    def _make_room(self, tier: int, nbytes: int,
+                   skip: Optional[bytes] = None) -> bool:
+        """Demote LRU entries of ``tier`` until ``nbytes`` fit, cascading
+        down-tier.  Page-resident entries occupy the POOL's HBM, not the
+        store's tier budget, so they are never byte victims — but before
+        declaring tier 0 out of room they ARE demoted (LRU first), so a
+        tier whose surviving entries are all pool-resident sheds its page
+        holds instead of letting callers silently over-fill.  Returns
+        False when the bytes still don't fit; callers must not add them
+        (``used_bytes(tier) <= capacity_bytes`` is an invariant)."""
         while self._tier_used[tier] + nbytes > self.tiers[tier].capacity_bytes:
             victim = None
             for k, e in self._entries.items():       # LRU order = insertion
-                # page-resident entries occupy the POOL's HBM, not the
-                # store's tier budget — pool pressure (reclaim_pool) is
-                # what demotes them, so skip them here
                 if e.tier == tier and k != skip and e.pool is None:
                     victim = (k, e)
                     break
             if victim is None:
-                break
+                resident = None
+                if tier == 0:
+                    for k, e in self._entries.items():
+                        if e.pool is not None and k != skip:
+                            resident = (k, e)
+                            break
+                if resident is None:
+                    return False
+                self._demote_resident(*resident)
+                continue
             vk, ve = victim
-            if tier + 1 < len(self.tiers):
-                self._move_tier(vk, ve, tier + 1)
-            else:
-                self._tier_used[ve.tier] -= ve.nbytes
-                del self._entries[vk]
-                self.stats.evictions += 1
+            if tier + 1 < len(self.tiers) and self._move_tier(vk, ve,
+                                                              tier + 1):
+                continue
+            self._tier_used[ve.tier] -= ve.nbytes
+            del self._entries[vk]
+            self.stats.evictions += 1
+        return True
 
     # -- introspection ----------------------------------------------------
     def __len__(self):

@@ -40,6 +40,7 @@ import math
 from typing import (Any, Dict, List, Optional, Protocol, Sequence, Set)
 
 from .clock import VirtualClock
+from .fairshare import FairShareScheduler, SchedulerConfig
 from .request import Metrics, Outcome, Phase, Request
 
 __all__ = ["ServingBackend", "Server", "StreamEvent", "StreamHandle"]
@@ -154,6 +155,23 @@ class BackendBase:
         # bounded central queue (set by api.Server): an arrival finding
         # this many requests in flight is REJECTED at its arrival event
         self.admission_limit: Optional[int] = None
+        # multi-tenant fair-share scheduler (set via ``set_scheduler`` /
+        # ``Server(scheduler=...)``): orders the central queue, enforces
+        # per-tenant budgets, and selects preemption victims
+        self.scheduler: Optional[FairShareScheduler] = None
+
+    def set_scheduler(self, sched) -> None:
+        """Install a fair-share scheduler (a ``SchedulerConfig`` or a
+        prebuilt ``FairShareScheduler``); None removes it."""
+        if isinstance(sched, SchedulerConfig):
+            sched = FairShareScheduler(sched)
+        self.scheduler = sched
+
+    def _sched_done(self, req: Request) -> None:
+        """Report a terminal request to the scheduler so the tenant's
+        in-flight budget frees (idempotent)."""
+        if self.scheduler is not None:
+            self.scheduler.release(req)
 
     def start(self) -> None:
         """Protocol hook: the control loop arms itself on first submit,
@@ -174,8 +192,9 @@ class BackendBase:
 
     def _admit(self, req: Request) -> bool:
         """The arrival-event gate: False when the request was aborted
-        before arriving, or when the bounded central queue is full (then
-        recorded as an explicit REJECTED refusal)."""
+        before arriving, when the bounded central queue is full, or when
+        the tenant is over a fair-share budget (the latter two recorded
+        as explicit REJECTED refusals)."""
         if req.outcome is not None:
             return False
         if (self.admission_limit is not None
@@ -183,10 +202,16 @@ class BackendBase:
             req.t_done = self.clock.now
             self.metrics.record_rejected(req)
             return False
+        if self.scheduler is not None and \
+                self.scheduler.admit(req, self.clock.now) is not None:
+            req.t_done = self.clock.now
+            self.metrics.record_rejected(req)
+            return False
         return True
 
     def _finish_abort(self, req: Request) -> bool:
         req.t_done = self.clock.now
+        self._sched_done(req)
         self.metrics.record_aborted(req)
         return True
 
@@ -257,6 +282,12 @@ class ServingBackend(Protocol):
         """Arm the control loop; idempotent."""
         ...
 
+    def set_scheduler(self, sched) -> None:
+        """Install a multi-tenant fair-share scheduler (a
+        ``fairshare.FairShareScheduler`` or ``SchedulerConfig``) ahead of
+        the central queue; ``None`` restores plain FIFO."""
+        ...
+
     def submit(self, req: Request, at: Optional[float] = None
                ) -> StreamHandle:
         """Admit ``req`` as an arrival event at virtual time ``at``
@@ -302,13 +333,22 @@ class Server:
     open-loop drivers pre-schedule future arrivals, and backpressure is a
     property of the queue when the request actually shows up.  ``None``
     disables it.
+
+    ``scheduler`` installs a multi-tenant fair-share front door
+    (``fairshare.FairShareScheduler`` or a ``SchedulerConfig`` to build
+    one): weighted-fair queue ordering ahead of the central queue,
+    per-tenant budget rejections, and optional swap/sacrifice decode
+    preemption.  ``None`` (the default) keeps plain FIFO behaviour.
     """
 
     def __init__(self, backend: ServingBackend,
-                 admission_limit: Optional[int] = None):
+                 admission_limit: Optional[int] = None,
+                 scheduler: Optional[object] = None):
         self.backend = backend
         if admission_limit is not None:
             backend.admission_limit = admission_limit
+        if scheduler is not None:
+            backend.set_scheduler(scheduler)
         self.handles: Dict[int, StreamHandle] = {}
         self._open: Set[int] = set()     # admitted, not yet terminal
         backend.start()

@@ -189,6 +189,11 @@ class ClusterSim(BackendBase):
         self._layer_dir_t = -1e9
         self._control_armed = False
         self._n_transit = 0     # mid-prefill or awaiting a decode slot
+        # preempted decode residents parked off-tier: (request, remaining
+        # tokens, context, mode).  Swap bills host-tier bandwidth on the
+        # way back; sacrifice bills a full re-prefill of the context.
+        self._preempted: List[tuple] = []
+        self.swap_io_s = 0.0    # modelled preemption swap traffic
         self._init_backend()    # _by_rid registry + admission_limit
 
     # ------------------------------------------------------------------
@@ -223,7 +228,8 @@ class ClusterSim(BackendBase):
         return (len(self.pending)
                 + sum(len(i.prefill_queue) for i in self.instances)
                 + sum(len(i.decode_slots) for i in self.instances)
-                + self._n_transit)
+                + self._n_transit
+                + len(self._preempted))
 
     def _arm_control(self) -> None:
         if not self._control_armed:
@@ -251,6 +257,10 @@ class ClusterSim(BackendBase):
                     inst.decode_slots.remove(slot)
                     inst.kv_tokens -= slot.context
                     return self._finish_abort(req)
+        for i, parked in enumerate(self._preempted):  # preemption-parked
+            if parked[0] is req:
+                self._preempted.pop(i)
+                return self._finish_abort(req)
         # mid-prefill or arrival still scheduled: the matching handler
         # drops terminal requests when it fires
         return self._finish_abort(req)
@@ -531,7 +541,9 @@ class ClusterSim(BackendBase):
             if not idle:
                 return
             loads = self._instance_loads(idle)
-            req = self.pending.pop(0)
+            i = (self.scheduler.pick(self.pending, self.now)
+                 if self.scheduler is not None else 0)
+            req = self.pending.pop(i)
             info = RequestInfo(req.rid, req.prompt_len,
                                est_load=min(req.prompt_len / 4096, 1.0),
                                est_time_s=A.prefill_time(
@@ -593,6 +605,11 @@ class ClusterSim(BackendBase):
         # pick decode instance (least KV pressure) & charge KV transfer
         cands = [i for i in self._decode_candidates()
                  if len(i.decode_slots) < self.cfg.decode_batch_max]
+        if not cands and self.scheduler is not None \
+                and self.scheduler.preemption is not None \
+                and self._preempt_for(req):
+            cands = [i for i in self._decode_candidates()
+                     if len(i.decode_slots) < self.cfg.decode_batch_max]
         if not cands:
             # decode tier saturated: requeue (head-of-line) and retry shortly
             self._decode_wait += 1
@@ -621,6 +638,91 @@ class ClusterSim(BackendBase):
         self._try_start_prefill(inst)
         if self.cfg.mode == "banaserve":
             self._dispatch_pending()
+
+    # -- decode preemption (swap / sacrifice, analytical twin) -------------
+    def _preempt_for(self, waiting: Request) -> bool:
+        """Ask the scheduler for a decode-resident victim whose tenant
+        ranks strictly below ``waiting``'s and evict it under the
+        configured policy.  Returns True when a slot was freed."""
+        running, where = [], {}
+        for inst in self._decode_candidates():
+            for slot in inst.decode_slots:
+                running.append((slot.req, slot.remaining))
+                where[slot.req.rid] = (inst, slot)
+        victim = self.scheduler.pick_victim(waiting, running)
+        if victim is None:
+            return False
+        inst, slot = where[victim.rid]
+        self._preempt_slot(inst, slot, self.scheduler.preemption)
+        return True
+
+    def _preempt_slot(self, inst: _Instance, slot, mode: str) -> None:
+        """Evict one decode slot: swap bills its context's KV across the
+        host boundary (via the store when present), sacrifice just drops
+        it — the recompute is billed at resume time."""
+        inst.decode_slots.remove(slot)
+        inst.kv_tokens -= slot.context
+        pages = 0
+        if mode == "swap":
+            nbytes = int(slot.context * self.model.kv_bytes_per_token())
+            self.swap_io_s += (self.store.swap_out(nbytes)
+                               if self.store is not None
+                               else nbytes / self.cfg.hw.host_bw)
+            bs = self.store.block_size if self.store is not None else 64
+            pages = -(-slot.context // bs)
+        self.metrics.record_preempted(slot.req, mode, pages=pages)
+        self._preempted.append((slot.req, slot.remaining, slot.context,
+                                mode))
+
+    def _resume_preempted(self) -> None:
+        """Bring parked victims back into decode slots — but only when
+        spare slots exceed the claims of admitted work still on its way
+        to the decode tier, so a fresh preemption isn't undone."""
+        if not self._preempted:
+            return
+        claimed = (len(self.pending) + self._n_transit
+                   + sum(len(i.prefill_queue) for i in self.instances))
+        while self._preempted:
+            cands = [i for i in self._decode_candidates()
+                     if len(i.decode_slots) < self.cfg.decode_batch_max]
+            free = sum(self.cfg.decode_batch_max - len(i.decode_slots)
+                       for i in cands)
+            if free - claimed <= 0:
+                return
+            req, rem, ctx, mode = self._preempted.pop(0)
+            if req.outcome is not None:
+                continue
+            dec = min(cands, key=lambda i: (
+                (len(i.decode_slots) + 1) / max(i.decode_cap, 0.05),
+                i.kv_tokens))
+            if mode == "swap":
+                nbytes = int(ctx * self.model.kv_bytes_per_token())
+                t_res = (self.store.swap_in(nbytes)
+                         if self.store is not None
+                         else nbytes / self.cfg.hw.host_bw)
+                self.swap_io_s += t_res
+            else:            # sacrifice: recompute the whole context
+                t_res = A.prefill_time(self.model, ctx, self.cfg.hw,
+                                       efficiency=self.cfg.efficiency)
+            dec.decode_slots.append(_DecodeSlot(req, rem, ctx))
+            dec.kv_tokens += ctx
+            self._push(self.now + t_res, "decode_kick", dec.name)
+
+    def preempt(self, rid: int, mode: Optional[str] = None) -> bool:
+        """Force-preempt a decode-resident request (ops/test hook);
+        ``mode`` defaults to the scheduler's configured policy.  False
+        when ``rid`` is not decode-resident."""
+        if mode is None and self.scheduler is not None:
+            mode = self.scheduler.preemption
+        if mode not in ("swap", "sacrifice"):
+            raise ValueError(f"unknown preemption mode {mode!r}")
+        for inst in self._decode_candidates():
+            for slot in list(inst.decode_slots):
+                if slot.req.rid == rid:
+                    self._preempt_slot(inst, slot, mode)
+                    self._resume_preempted()
+                    return True
+        return False
 
     def _schedule_decode(self, inst: _Instance):
         if inst.decode_iter_scheduled or not inst.decode_slots:
@@ -657,12 +759,14 @@ class ClusterSim(BackendBase):
             inst.kv_tokens -= slot.context
             slot.req.t_done = self.now
             slot.req.advance(Phase.DONE)
+            self._sched_done(slot.req)
             self.metrics.record(slot.req)
         if self.cfg.mode == "colocated":
             self._try_start_prefill(inst)     # prefill priority (vLLM)
         if (self.cfg.mode == "banaserve" and not inst.decode_slots
                 and inst.decode_cap >= 0.5):
             self._steal_decode_work(inst)
+        self._resume_preempted()
         self._schedule_decode(inst)
         return [slot.req for slot in finished]
 
@@ -748,4 +852,8 @@ class ClusterSim(BackendBase):
             summary["prefill_skew"] = (max(pw) - min(pw)) / max(max(pw), 1e-9)
         else:
             summary["prefill_skew"] = 0.0
+        if self.scheduler is not None:
+            summary["scheduler"] = self.scheduler.cfg.policy
+            summary["sched_rejections"] = dict(self.scheduler.rejections)
+            summary["swap_io_s"] = self.swap_io_s
         return summary

@@ -46,6 +46,7 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Set
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import analytical as A
 from ..core.kvstore import GlobalKVStore, chain_hashes, leading_block_key
@@ -254,6 +255,15 @@ class Orchestrator(BackendBase):
         # stale-event fencing: a re-roll bumps its member's epoch so
         # decode completions scheduled for the old engine are discarded
         self._epoch: Dict[str, int] = {}
+        # swap-preempted decode residents parked off-device:
+        # rid -> (request, gathered paged state, pending token).  Resumed
+        # (bit-identically, via adopt) once capacity frees AND no admitted
+        # work is still waiting for a slot.
+        self._swapped: Dict[int, tuple] = {}
+        # sacrifice re-prefill clones: clone rid -> (clone, original)
+        self._resume_of: Dict[int, tuple] = {}
+        self._clone_rid = -1           # clones use negative rids
+        self.swap_io_s = 0.0           # modelled host-tier swap traffic
         self._init_backend()     # _by_rid registry + admission_limit
 
     # -- fleet views -----------------------------------------------------
@@ -302,7 +312,8 @@ class Orchestrator(BackendBase):
         return (len(self.pending)
                 + sum(len(m.prefill.queue) for m in self.prefill_members())
                 + self._reserved
-                + sum(u.active for u in self.decode_units()))
+                + sum(u.active for u in self.decode_units())
+                + len(self._swapped))
 
     def _free_capacity(self) -> int:
         """Decode slots available for NEW prefill admissions."""
@@ -333,8 +344,27 @@ class Orchestrator(BackendBase):
                 if s is req:
                     u.release_slot(slot)
                     ok = self._finish_abort(req)
-                    self._kick_prefills()     # freed capacity admits more
+                    self._dispatch()          # freed capacity admits more
                     return ok
+        if rid in self._swapped:                      # swap-parked
+            self._swapped.pop(rid)
+            return self._finish_abort(req)
+        # a sacrificed original waiting on its re-prefill clone: pull the
+        # clone from any queue it still sits in (a mid-prefill clone stays
+        # mapped — the hand-off handler drops its recomputed KV instead)
+        for crid, (clone, orig) in list(self._resume_of.items()):
+            if orig.rid != rid:
+                continue
+            if clone in self.pending:
+                self.pending.remove(clone)
+                del self._resume_of[crid]
+            else:
+                for m in self.prefill_members():
+                    if clone in m.prefill.queue:
+                        m.prefill.queue.remove(clone)
+                        del self._resume_of[crid]
+                        break
+            break
         # still mid-prefill (its reservation is released at hand-off time,
         # where the aborted request's KV is dropped) or its arrival event
         # has not popped yet (the arrival handler skips terminal requests)
@@ -407,9 +437,12 @@ class Orchestrator(BackendBase):
 
     def _dispatch(self) -> None:
         """Algorithm 2 over the central queue: dispatch every pending
-        request onto a prefill member's queue using live load snapshots
-        (queue-delay-aware), then kick idle members that have work."""
-        if self.pending:
+        request (or, with a fair-share scheduler, the WFQ-ordered slice
+        capacity can serve) onto a prefill member's queue using live load
+        snapshots (queue-delay-aware), then kick idle members."""
+        release = (self._sched_release() if self.scheduler is not None
+                   else list(self.pending))
+        if release:
             members = self.prefill_members()
             loads = live_instance_loads([m.prefill for m in members])
             budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
@@ -420,17 +453,153 @@ class Orchestrator(BackendBase):
                 est_time_s=A.prefill_time(self.cfg, r.prompt_len,
                                           self.ocfg.hw,
                                           efficiency=self.ocfg.efficiency))
-                for r in self.pending]
+                for r in release]
             plan = self.router.dispatch(infos, loads)
-            for req in self.pending:
+            for req in release:
                 self._by_name[plan[req.rid]].prefill.enqueue(req)
+        if self.scheduler is None:
             self.pending.clear()
         self._kick_prefills()
 
+    def _sched_release(self) -> List[Request]:
+        """The fair-share gate between the central queue and the routers:
+        release at most the fleet's uncommitted decode capacity, in WFQ
+        order (the FIFO policy releases everything — it must behave like
+        no scheduler at all).  When capacity is exhausted and preemption
+        is configured, evict a victim for the best-ranked waiter."""
+        if not self.pending:
+            return []
+        queued = sum(len(m.prefill.queue) for m in self.prefill_members())
+        budget = self._free_capacity() - queued
+        if self.scheduler.preemption is not None:
+            while budget < 1 and self.pending:
+                head = self.scheduler.peek(list(self.pending),
+                                           self.clock.now)
+                if not self._preempt_for(head):
+                    break
+                budget = self._free_capacity() - queued
+        chosen = self.scheduler.select(list(self.pending), self.clock.now,
+                                       budget=max(budget, 0))
+        for r in chosen:
+            self.pending.remove(r)
+        return chosen
+
     def _kick_prefills(self) -> None:
+        self._resume_swapped()
         for m in self.prefill_members():
             if not m.busy and (m._wavegen is not None or m.prefill.queue):
                 self.clock.push(self.clock.now, "prefill", m.name)
+
+    # -- decode preemption (swap / sacrifice) ------------------------------
+    def _preempt_for(self, waiting: Request) -> bool:
+        """Ask the scheduler for a decode-resident victim whose tenant
+        ranks strictly below ``waiting``'s, then apply the configured
+        eviction policy.  Returns True when a slot was freed."""
+        running, where = [], {}
+        for u in self.decode_units():
+            for slot, r in enumerate(u.slots):
+                if r is None:
+                    continue
+                running.append((r, r.max_new_tokens - len(r.generated)))
+                where[r.rid] = (u, slot)
+        victim = self.scheduler.pick_victim(waiting, running)
+        if victim is None:
+            return False
+        u, slot = where[victim.rid]
+        if self.scheduler.preemption == "swap":
+            self._swap_out(u, slot)
+        else:
+            self._sacrifice(u, slot)
+        return True
+
+    def _swap_out(self, unit, slot: int) -> None:
+        """Demote a decode resident's KV to the host tier: its pages free
+        immediately, the gathered state parks off-device, and the store
+        bills tier-1 bandwidth (both directions, here and at resume)."""
+        req, st, tok = unit.extract_slot(slot)
+        nbytes = KC.state_num_bytes(st)
+        self.swap_io_s += (self.store.swap_out(nbytes)
+                           if self.store is not None
+                           else nbytes / self.ocfg.hw.host_bw)
+        self._swapped[req.rid] = (req, st, tok)
+        pages = int(st["n_blocks"]) if "n_blocks" in st else 0
+        self.metrics.record_preempted(req, "swap", pages=pages)
+
+    def _sacrifice(self, unit, slot: int) -> None:
+        """Drop a decode resident's KV and recompute it later: a fresh
+        clone request (prompt = original prompt + all committed tokens but
+        the last) rides the normal chunked-prefill path, and the original
+        adopts the recomputed state at the clone's hand-off."""
+        victim = unit.release_slot(slot)
+        clone = Request(
+            rid=self._clone_rid, arrival=self.clock.now,
+            prompt=np.concatenate([
+                victim.prompt,
+                np.asarray(victim.generated[:-1],
+                           dtype=victim.prompt.dtype)]),
+            max_new_tokens=max(
+                victim.max_new_tokens - len(victim.generated), 1),
+            tenant=victim.tenant)
+        self._clone_rid -= 1
+        self._resume_of[clone.rid] = (clone, victim)
+        self.metrics.record_preempted(victim, "sacrifice")
+        self.pending.append(clone)
+
+    def _finish_resume(self, clone: Request, st: Dict) -> None:
+        """A sacrifice clone's recompute finished: the original adopts the
+        rebuilt KV and continues from its last committed token (so the
+        resumed stream is bit-identical to an uninterrupted run)."""
+        _, orig = self._resume_of.pop(clone.rid)
+        if orig.outcome is not None:
+            return                     # aborted while recomputing
+        tgt = min((u for u in self.decode_units() if u.free_slots > 0),
+                  key=lambda u: (u.active, u.kv_tokens, u.name))
+        t_ov = self._account_handoff(orig, st)
+        tgt.adopt(orig, st, int(orig.generated[-1]))
+        self.clock.push_in(t_ov, "decode_kick", tgt.name)
+
+    def _resume_swapped(self) -> None:
+        """Bring swap-parked victims back on-device — but only when spare
+        capacity exceeds the claims of admitted work still waiting for a
+        slot, so a fresh preemption isn't immediately undone."""
+        if not self._swapped:
+            return
+        claimed = len(self.pending) + sum(
+            len(m.prefill.queue) for m in self.prefill_members())
+        while self._swapped and self._free_capacity() - claimed > 0:
+            rid = next(iter(self._swapped))
+            req, st, tok = self._swapped.pop(rid)
+            if req.outcome is not None:
+                continue
+            nbytes = KC.state_num_bytes(st)
+            t_in = (self.store.swap_in(nbytes) if self.store is not None
+                    else nbytes / self.ocfg.hw.host_bw)
+            self.swap_io_s += t_in
+            tgt = min((u for u in self.decode_units()
+                       if u.free_slots > 0),
+                      key=lambda u: (u.active, u.kv_tokens, u.name))
+            tgt.adopt(req, st, tok)
+            self.clock.push_in(t_in, "decode_kick", tgt.name)
+
+    def preempt(self, rid: int, mode: Optional[str] = None) -> bool:
+        """Force-preempt a decode-resident request (ops/test hook):
+        ``swap`` parks its KV off-device, ``sacrifice`` drops it for
+        re-prefill.  ``mode`` defaults to the scheduler's configured
+        policy.  False when ``rid`` is not decode-resident."""
+        if mode is None and self.scheduler is not None:
+            mode = self.scheduler.preemption
+        if mode not in ("swap", "sacrifice"):
+            raise ValueError(f"unknown preemption mode {mode!r}")
+        for u in self.decode_units():
+            for slot, r in enumerate(u.slots):
+                if r is not None and r.rid == rid:
+                    if mode == "swap":
+                        self._swap_out(u, slot)
+                    else:
+                        self._sacrifice(u, slot)
+                    self._dispatch()
+                    return True
+        return False
 
     def _kick_decode(self, unit) -> None:
         """Schedule one continuous-batching iteration for ``unit`` if it
@@ -518,6 +687,9 @@ class Orchestrator(BackendBase):
             m.busy = False
         for req, st, logits in done:
             self._reserved -= 1
+            if req.rid in self._resume_of:
+                self._finish_resume(req, st)   # a sacrifice clone landed
+                continue
             if req.outcome is not None:
                 continue       # aborted mid-prefill: its KV is dropped here
             req.advance(Phase.TRANSFER)
@@ -568,12 +740,13 @@ class Orchestrator(BackendBase):
                 req.t_tokens.append(max(now, last))
         for req in finished:
             req.t_done = req.t_tokens[-1] if req.t_tokens else now
+            self._sched_done(req)
             self.metrics.record(req)
         m.tokens_decoded += unit.tokens_decoded - before_tok
         if unit.active:
             self._kick_decode(unit)
         if finished:
-            self._kick_prefills()          # freed slots -> admit more
+            self._dispatch()               # freed slots -> admit more
         return finished
 
     def _on_control(self) -> None:
@@ -819,6 +992,10 @@ class Orchestrator(BackendBase):
         s["handoffs"] = self.n_handoffs
         s["handoff_serial_s"] = self.handoff_serial_s
         s["handoff_overlap_s"] = self.handoff_overlap_s
+        if self.scheduler is not None:
+            s["scheduler"] = self.scheduler.cfg.policy
+            s["sched_rejections"] = dict(self.scheduler.rejections)
+            s["swap_io_s"] = self.swap_io_s
         s["store_fetch_s"] = sum(m.fetch_latency_s for m in self.members)
         # routing-imbalance metric (Fig. 2a): only members that held the
         # prefill role for the whole run — re-rolled members' counters

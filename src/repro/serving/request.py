@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -55,6 +55,7 @@ class Request:
     max_new_tokens: int
     prefix_id: Optional[int] = None   # shared-prefix group (workload metadata)
     prefix_len: int = 0               # tokens shared with the group
+    tenant: str = "default"           # fair-share accounting/scheduling key
 
     # runtime state
     phase: Phase = Phase.QUEUED
@@ -143,6 +144,46 @@ def _pct(xs: List[float], q: float) -> float:
 
 
 @dataclasses.dataclass
+class TenantStats:
+    """Per-tenant slice of ``Metrics`` — same accounting rules (rejected
+    counts as an SLO miss, aborted excluded), plus the preemption record
+    the fair-share scheduler's swap/sacrifice policies write."""
+    n_requests: int = 0
+    n_rejected: int = 0
+    n_aborted: int = 0
+    n_slo_ok: int = 0
+    tokens_out: int = 0
+    goodput_tokens: int = 0
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    n_preempted_swap: int = 0
+    n_preempted_sacrifice: int = 0
+    pages_swapped: int = 0            # KV pages demoted to the host tier
+
+    def summary(self, slo: Optional["SLO"], dur: float) -> dict:
+        # undefined stats are None, never NaN: these dicts nest inside the
+        # backend summary, and NaN breaks dict equality (the streaming-
+        # vs-batch pins) and JSON round-trips (the bench artifacts)
+        n_accountable = self.n_requests + self.n_rejected
+        return {
+            "n_requests": self.n_requests,
+            "n_rejected": self.n_rejected,
+            "n_aborted": self.n_aborted,
+            "tokens_out": self.tokens_out,
+            "throughput_tok_s": self.tokens_out / dur,
+            "mean_ttft_s": _mean(self.ttfts) if self.ttfts else None,
+            "p99_ttft_s": _pct(self.ttfts, 99) if self.ttfts else None,
+            "slo_attainment": (self.n_slo_ok / n_accountable
+                               if slo is not None and n_accountable
+                               else None),
+            "goodput_tok_s": (self.goodput_tokens / dur
+                              if slo is not None else None),
+            "n_preempted_swap": self.n_preempted_swap,
+            "n_preempted_sacrifice": self.n_preempted_sacrifice,
+            "pages_swapped": self.pages_swapped,
+        }
+
+
+@dataclasses.dataclass
 class Metrics:
     """Aggregates over terminal requests — one schema for both the
     simulator and the live orchestrator.
@@ -167,14 +208,30 @@ class Metrics:
     goodput_tokens: int = 0
     t_start: float = 0.0
     t_end: float = 0.0
+    # fair-share dimension: per-tenant slices plus global preemption totals
+    per_tenant: Dict[str, TenantStats] = dataclasses.field(
+        default_factory=dict)
+    n_preempted_swap: int = 0
+    n_preempted_sacrifice: int = 0
+    pages_swapped: int = 0
+
+    def tenant(self, name: str) -> TenantStats:
+        ts = self.per_tenant.get(name)
+        if ts is None:
+            ts = self.per_tenant[name] = TenantStats()
+        return ts
 
     def record(self, r: Request):
         r.outcome = Outcome.COMPLETED
         self.n_requests += 1
         self.tokens_out += len(r.generated)
         self.arrivals.append(r.arrival)
+        ts = self.tenant(r.tenant)
+        ts.n_requests += 1
+        ts.tokens_out += len(r.generated)
         if r.ttft is not None:
             self.ttfts.append(r.ttft)
+            ts.ttfts.append(r.ttft)
         if r.tpot is not None:
             self.tpots.append(r.tpot)
         self.tbts.extend(r.tbts)
@@ -183,18 +240,38 @@ class Metrics:
         if self.slo is not None and self.slo.attained(r):
             self.n_slo_ok += 1
             self.goodput_tokens += len(r.generated)
+            ts.n_slo_ok += 1
+            ts.goodput_tokens += len(r.generated)
         self.t_end = max(self.t_end, r.t_done or 0.0)
 
     def record_rejected(self, r: Request):
-        """Admission refused the request (bounded central queue)."""
+        """Admission refused the request (bounded central queue or a
+        per-tenant budget)."""
         r.outcome = Outcome.REJECTED
         self.n_rejected += 1
+        self.tenant(r.tenant).n_rejected += 1
 
     def record_aborted(self, r: Request):
         """The client cancelled the request mid-flight."""
         r.outcome = Outcome.ABORTED
         self.n_aborted += 1
         self.aborted_tokens += len(r.generated)
+        self.tenant(r.tenant).n_aborted += 1
+
+    def record_preempted(self, r: Request, mode: str, pages: int = 0):
+        """A decode-resident request lost its slot to the fair-share
+        scheduler: ``mode`` is ``"swap"`` (pages demoted to the host tier,
+        resumed bit-identically later) or ``"sacrifice"`` (pages dropped,
+        KV recomputed by re-prefill)."""
+        ts = self.tenant(r.tenant)
+        if mode == "swap":
+            self.n_preempted_swap += 1
+            self.pages_swapped += pages
+            ts.n_preempted_swap += 1
+            ts.pages_swapped += pages
+        else:
+            self.n_preempted_sacrifice += 1
+            ts.n_preempted_sacrifice += 1
 
     def summary(self) -> dict:
         dur = max(self.t_end - self.t_start, 1e-9)
@@ -234,4 +311,9 @@ class Metrics:
         else:
             s["slo_attainment"] = float("nan")
             s["goodput_tok_s"] = float("nan")
+        s["n_preempted_swap"] = self.n_preempted_swap
+        s["n_preempted_sacrifice"] = self.n_preempted_sacrifice
+        s["pages_swapped"] = self.pages_swapped
+        s["tenants"] = {t: ts.summary(self.slo, dur)
+                        for t, ts in sorted(self.per_tenant.items())}
         return s

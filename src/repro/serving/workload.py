@@ -17,7 +17,7 @@ where prefix-cache-aware routing skews load (Fig. 2a).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,6 +39,11 @@ class WorkloadConfig:
     # synthetic-kind overrides
     prompt_len_lo: int = 16
     prompt_len_hi: int = 64
+    # multi-tenant tagging: every request carries ``tenant``, or draws one
+    # from ``tenant_mix`` — ((name, probability), ...) pairs — when set.
+    # Shapes that differ per tenant compose via ``merge_workloads``.
+    tenant: str = "default"
+    tenant_mix: Optional[Tuple[Tuple[str, float], ...]] = None
 
 
 def _prompt_len(cfg: WorkloadConfig, rng: np.random.Generator) -> int:
@@ -67,10 +72,20 @@ def _prefix_pool(cfg: WorkloadConfig, rng: np.random.Generator):
     return group_prefix_tokens, pop
 
 
+def _draw_tenant(cfg: WorkloadConfig, rng: np.random.Generator) -> str:
+    if cfg.tenant_mix is None:
+        return cfg.tenant
+    names = [t for t, _ in cfg.tenant_mix]
+    probs = np.asarray([p for _, p in cfg.tenant_mix], dtype=np.float64)
+    probs /= probs.sum()
+    return names[int(rng.choice(len(names), p=probs))]
+
+
 def _make_request(cfg: WorkloadConfig, rng: np.random.Generator, rid: int,
                   t: float, group_prefix_tokens, pop) -> Request:
     """One request of the configured shape, arriving at ``t``."""
     plen = _prompt_len(cfg, rng)
+    tenant = _draw_tenant(cfg, rng)
     if rng.random() < cfg.prefix_share and cfg.n_prefix_groups > 0:
         gid = int(rng.choice(cfg.n_prefix_groups, p=pop))
         pfx_len = min(plen // 2, 4096)
@@ -80,10 +95,10 @@ def _make_request(cfg: WorkloadConfig, rng: np.random.Generator, rid: int,
                          dtype=np.int32)])
         return Request(rid=rid, arrival=t, prompt=prompt,
                        max_new_tokens=_out_len(cfg, rng),
-                       prefix_id=gid, prefix_len=pfx_len)
+                       prefix_id=gid, prefix_len=pfx_len, tenant=tenant)
     prompt = rng.integers(0, cfg.vocab_size, size=(plen,), dtype=np.int32)
     return Request(rid=rid, arrival=t, max_new_tokens=_out_len(cfg, rng),
-                   prompt=prompt)
+                   prompt=prompt, tenant=tenant)
 
 
 def generate(cfg: WorkloadConfig) -> List[Request]:
@@ -98,6 +113,17 @@ def generate(cfg: WorkloadConfig) -> List[Request]:
         reqs.append(_make_request(cfg, rng, rid, t, group_prefix_tokens,
                                   pop))
     return reqs
+
+
+def merge_workloads(*streams: Sequence[Request]) -> List[Request]:
+    """Interleave independently-generated request streams (e.g. one per
+    tenant, each with its own shape/rate) into one arrival-ordered
+    workload with globally unique rids."""
+    merged = sorted((r for s in streams for r in s),
+                    key=lambda r: (r.arrival, r.tenant, r.rid))
+    for rid, r in enumerate(merged):
+        r.rid = rid
+    return merged
 
 
 class ClosedLoopClients:
@@ -118,7 +144,10 @@ class ClosedLoopClients:
         self.cfg = cfg
         self.n_clients = n_clients
         self.think_time_s = float(think_time_s)
-        self._rng = np.random.default_rng(cfg.seed)
+        # an independent stream derived from the same seed: a closed-loop
+        # run over one config must NOT replay generate()'s exact prompts
+        # (same-seed duplication), but must stay deterministic per seed
+        self._rng = np.random.default_rng([cfg.seed, 1])
         self._pool, self._pop = _prefix_pool(cfg, self._rng)
         self.issued = 0
 

@@ -191,6 +191,35 @@ def test_contract_admission_backpressure(make_backend):
             assert h.events()[-1].kind == "rejected"
 
 
+def test_contract_late_cancel_is_noop_on_terminal_handles(make_backend):
+    """cancel() on a handle that already reached a terminal state —
+    REJECTED at admission or COMPLETED after decode — must refuse (return
+    False) and record nothing: metrics counters are unchanged and no
+    aborted event ever appears on the stream."""
+    reqs = _wl(8, rps=1e9, max_new=4)
+    server = Server(make_backend(), admission_limit=3)
+    handles = [server.submit(r, at=r.arrival) for r in reqs]
+    server.drain()
+    s0 = server.summary()
+    assert s0["n_rejected"] >= 1 and s0["n_aborted"] == 0
+    rejected = [h for h in handles if h.outcome == Outcome.REJECTED]
+    completed = [h for h in handles if h.outcome == Outcome.COMPLETED]
+    assert rejected and completed
+    for h in rejected + completed:
+        h.events()                           # drain the terminal event
+        assert not h.cancel()                # refused, not double-counted
+        assert not server.abort(h.rid)       # backend path agrees
+        assert h.events() == []              # nothing new on the stream
+    s1 = server.summary()
+    for k in ("n_requests", "n_rejected", "n_aborted", "n_submitted"):
+        assert s1[k] == s0[k], k
+    assert all(h.outcome == Outcome.REJECTED for h in rejected)
+    assert all(h.outcome == Outcome.COMPLETED for h in completed)
+    # tokens survive a refused cancel bit-unchanged
+    for h in completed:
+        assert h.tokens == list(h.request.generated)
+
+
 def test_contract_open_loop_submit_mid_run(make_backend):
     """``submit`` after the run has started: the request is routed on the
     next dispatch and completes like any other."""

@@ -1,0 +1,141 @@
+"""Unit suite for the multi-tenant fair-share scheduler
+(serving/fairshare.py): WFQ proportional service, SRPT bias, aging,
+per-tenant budget rejections, idempotent release, and victim selection.
+All pure — no engines, no clock."""
+import numpy as np
+import pytest
+
+from repro.serving.fairshare import (FairShareScheduler, SchedulerConfig,
+                                     TenantPolicy)
+from repro.serving.request import Request
+
+
+def _req(rid, tenant="default", plen=32, max_new=32, arrival=0.0):
+    return Request(rid=rid, arrival=arrival,
+                   prompt=np.zeros(plen, dtype=np.int32),
+                   max_new_tokens=max_new, tenant=tenant)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        SchedulerConfig(policy="lifo")
+    with pytest.raises(ValueError):
+        SchedulerConfig(preemption="migrate")
+
+
+def test_fifo_policy_is_passthrough():
+    """FIFO must behave exactly like no scheduler: select releases the
+    whole queue in arrival order regardless of budget."""
+    s = FairShareScheduler(SchedulerConfig(policy="fifo"))
+    q = [_req(i, tenant=("a" if i % 2 else "b")) for i in range(6)]
+    assert s.select(q, now=0.0, budget=1) == q
+
+
+def test_wfq_service_proportional_to_weight():
+    """Draining a backlog one-at-a-time: a weight-3 tenant gets ~3x the
+    dispatches of a weight-1 tenant over any window."""
+    s = FairShareScheduler(SchedulerConfig(
+        policy="wfq", srpt_bias=0.0,
+        tenants={"heavy": TenantPolicy(weight=3.0),
+                 "light": TenantPolicy(weight=1.0)}))
+    q = ([_req(i, tenant="heavy") for i in range(40)]
+         + [_req(100 + i, tenant="light") for i in range(40)])
+    first16 = [q.pop(s.pick(q, now=0.0)) for _ in range(16)]
+    heavy = sum(r.tenant == "heavy" for r in first16)
+    assert 10 <= heavy <= 14     # ~12 of 16 at weight ratio 3:1
+
+
+def test_srpt_bias_prefers_short_requests():
+    s = FairShareScheduler(SchedulerConfig(policy="wfq", srpt_bias=1.0))
+    long_r = _req(0, plen=512, max_new=256)
+    short_r = _req(1, plen=16, max_new=16)
+    assert s.pick([long_r, short_r], now=0.0) == 1
+
+
+def test_aging_rescues_starved_request():
+    """With aging on, enough accumulated wait outranks a fresher,
+    better-weighted competitor."""
+    s = FairShareScheduler(SchedulerConfig(
+        policy="wfq", srpt_bias=0.0, aging_rate=10.0,
+        tenants={"vip": TenantPolicy(weight=100.0),
+                 "pleb": TenantPolicy(weight=1.0)}))
+    # charge the pleb tenant heavily so its next start tag is far out
+    for i in range(10):
+        s._charge(_req(i, tenant="pleb"))
+    old = _req(50, tenant="pleb", arrival=0.0)
+    fresh = _req(51, tenant="vip", arrival=99.9)
+    assert s.pick([old, fresh], now=100.0) == 0
+
+
+def test_budget_concurrency_and_release_idempotent():
+    s = FairShareScheduler(SchedulerConfig(
+        tenants={"t": TenantPolicy(max_inflight_requests=2)}))
+    a, b, c = (_req(i, tenant="t") for i in range(3))
+    assert s.admit(a, 0.0) is None
+    assert s.admit(b, 0.0) is None
+    assert s.admit(c, 0.0) == "concurrency"
+    assert s.rejections == {"concurrency": 1}
+    s.release(a)
+    s.release(a)                           # double-report must not leak
+    assert s.inflight("t") == 1
+    assert s.admit(c, 0.0) is None
+
+
+def test_budget_tokens_in_flight():
+    s = FairShareScheduler(SchedulerConfig(
+        tenants={"t": TenantPolicy(max_inflight_tokens=100)}))
+    a = _req(1, tenant="t", plen=40, max_new=40)       # size 80
+    b = _req(2, tenant="t", plen=40, max_new=40)
+    assert s.admit(a, 0.0) is None
+    assert s.admit(b, 0.0) == "tokens"
+    s.release(a)
+    assert s.admit(b, 0.0) is None
+
+
+def test_budget_rate_limit_token_bucket():
+    s = FairShareScheduler(SchedulerConfig(
+        tenants={"t": TenantPolicy(rate_rps=1.0, burst=2)}))
+    reqs = [_req(i, tenant="t") for i in range(4)]
+    assert s.admit(reqs[0], 0.0) is None               # burst
+    assert s.admit(reqs[1], 0.0) is None               # burst
+    assert s.admit(reqs[2], 0.0) == "rate"             # bucket dry
+    assert s.admit(reqs[3], 1.5) is None               # refilled
+    assert s.rejections["rate"] == 1
+
+
+def test_unknown_tenant_gets_default_policy():
+    s = FairShareScheduler(SchedulerConfig(
+        default=TenantPolicy(max_inflight_requests=1)))
+    assert s.admit(_req(1, tenant="mystery"), 0.0) is None
+    assert s.admit(_req(2, tenant="mystery"), 0.0) == "concurrency"
+
+
+def test_pick_victim_priority_and_remaining():
+    """Only strictly-lower-priority tenants are eligible; among them the
+    lowest priority with the most remaining tokens goes first."""
+    s = FairShareScheduler(SchedulerConfig(
+        preemption="swap",
+        tenants={"hi": TenantPolicy(priority=2),
+                 "mid": TenantPolicy(priority=1),
+                 "lo": TenantPolicy(priority=0)}))
+    running = [(_req(1, tenant="mid"), 100),
+               (_req(2, tenant="lo"), 10),
+               (_req(3, tenant="lo"), 50)]
+    v = s.pick_victim(_req(9, tenant="hi"), running)
+    assert v is not None and v.rid == 3    # lowest prio, most remaining
+    # an equal-priority waiter finds no victim among its own tier
+    assert s.pick_victim(_req(9, tenant="lo"), running[1:]) is None
+    # preemption disabled -> never a victim
+    s2 = FairShareScheduler(SchedulerConfig(
+        tenants={"hi": TenantPolicy(priority=2)}))
+    assert s2.pick_victim(_req(9, tenant="hi"), running) is None
+
+
+def test_select_respects_budget_and_peek_does_not_charge():
+    s = FairShareScheduler(SchedulerConfig(policy="wfq", srpt_bias=0.0))
+    q = [_req(i) for i in range(5)]
+    head = s.peek(q, now=0.0)
+    assert s._finish == {}                  # peek charged nobody
+    chosen = s.select(q, now=0.0, budget=2)
+    assert len(chosen) == 2 and chosen[0] is head
+    assert s.select(q, now=0.0, budget=0) == []

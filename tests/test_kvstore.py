@@ -197,6 +197,80 @@ def test_reclaim_pool_frees_lru_first_after_release():
     fp.pool.check()
 
 
+# -- capacity invariants: no tier ever over-fills ---------------------------
+
+def _assert_within_capacity(st):
+    for i, spec in enumerate(st.tiers):
+        assert st.used_bytes(i) <= spec.capacity_bytes, \
+            f"tier {i} ({spec.name}) over-filled"
+
+
+def test_make_room_demotes_residents_before_overfilling():
+    """A tier 0 holding only pool-resident entries has no payload victims.
+    An insert that cannot fit must shed the page holds (demote residents
+    to the backing tier) before giving up — and then drop the block
+    rather than silently exceeding the byte budget (the historical
+    over-fill bug)."""
+    st = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", 250, 100.0), TierSpec("host", 10_000, 1.0)])
+    toks = list(range(8))
+    keys = chain_hashes(toks, 4)
+    st.insert(toks, ["a", "b"], nbytes_per_block=100)
+    fp = _FakePool()
+    st.attach_pool("d0", fp)
+    slot = fp.pool.alloc(2)
+    assert st.register_pages(keys, "d0", slot) == 2
+    assert st.used_bytes(0) == 0            # page-resident, no tier bytes
+    fp.pool.unref(slot)                     # store holds only
+    # a 300 B block exceeds hbm capacity: no payload victims exist, so
+    # _make_room demotes both residents (page holds released), then
+    # reports no-room and the block is dropped — never over-filled
+    st.insert(list(range(20, 24)), ["x"], nbytes_per_block=300)
+    _assert_within_capacity(st)
+    assert st.stats.demotions == 2          # residents were shed, not ignored
+    assert st.match(list(range(20, 24)), record_stats=False)[0] == 0
+    # the demoted residents survive in payload form on the host tier
+    assert all(e.pool is None and e.tier == 1 for e in st._entries.values())
+    assert st.match(toks, record_stats=False)[0] == 8
+    fp.pool.check(holders=[])               # every page hold released
+
+
+def test_insert_never_exceeds_capacity_under_churn():
+    """Randomized churn over tiny tiers: the per-tier byte ledger must
+    never exceed capacity after any insert, and inserts too large even
+    for an empty tier are dropped, not jammed in."""
+    rng = np.random.default_rng(0)
+    st = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", 300, 100.0), TierSpec("host", 500, 1.0)])
+    for it in range(60):
+        n_blocks = int(rng.integers(1, 5))
+        toks = [int(t) for t in
+                rng.integers(0, 50, size=(n_blocks * 4,))]
+        st.insert(toks, [f"v{it}-{j}" for j in range(n_blocks)],
+                  nbytes_per_block=int(rng.integers(50, 200)))
+        _assert_within_capacity(st)
+    assert st.stats.evictions > 0           # churn really overflowed
+
+
+def test_oversized_insert_dropped_not_overfilled():
+    st = GlobalKVStore(block_size=4, tiers=[TierSpec("hbm", 100, 100.0)])
+    st.insert(list(range(4)), ["big"], nbytes_per_block=1000)
+    _assert_within_capacity(st)
+    assert st.match(list(range(4)), record_stats=False)[0] == 0
+
+
+def test_swap_billing_counts_bytes_and_latency():
+    st = GlobalKVStore(block_size=4, tiers=[
+        TierSpec("hbm", 1000, 100.0), TierSpec("host", 10_000, 1.0)])
+    t_out = st.swap_out(1_000_000)
+    t_in = st.swap_in(1_000_000)
+    assert t_out == pytest.approx(1_000_000 / 1e9)  # host-tier bw (1 GB/s)
+    assert t_in == t_out
+    assert st.stats.swaps_out == 1 and st.stats.swaps_in == 1
+    assert st.stats.bytes_swapped == 1_000_000
+    assert st.swap_latency_s == pytest.approx(t_out + t_in)
+
+
 def test_detach_pool_demotes_everything():
     st, fp, keys, slot, _ = _resident_store()
     fp.pool.unref(slot)

@@ -1,0 +1,84 @@
+"""Workload generator suite: tenant tagging/mixing, stream merging, and
+the closed-loop client pool's seed discipline (serving/workload.py).
+
+The seed-collision regression pinned here: ClosedLoopClients used to
+seed its generator with ``cfg.seed`` directly, replaying generate()'s
+exact prompt sequence — a closed-loop run would duplicate the open-loop
+workload token-for-token.  It now derives an independent stream via
+``default_rng([seed, 1])``: deterministic per seed, disjoint from the
+open-loop draw.
+"""
+import numpy as np
+
+from repro.serving.workload import (ClosedLoopClients, WorkloadConfig,
+                                    generate, merge_workloads)
+
+
+def _cfg(**kw):
+    base = dict(kind="synthetic", rps=100.0, n_requests=40, seed=7,
+                max_new_tokens=32, prompt_len_lo=8, prompt_len_hi=24,
+                prefix_share=0.25)
+    base.update(kw)
+    return WorkloadConfig(**base)
+
+
+def test_single_tenant_stamped_on_every_request():
+    reqs = generate(_cfg(tenant="acme"))
+    assert all(r.tenant == "acme" for r in reqs)
+
+
+def test_tenant_mix_draw_is_deterministic_and_roughly_proportional():
+    cfg = _cfg(n_requests=400,
+               tenant_mix=(("a", 0.75), ("b", 0.25)))
+    a_share = np.mean([r.tenant == "a" for r in generate(cfg)])
+    assert 0.65 <= a_share <= 0.85
+    # same seed -> identical tenant sequence
+    t1 = [r.tenant for r in generate(cfg)]
+    t2 = [r.tenant for r in generate(cfg)]
+    assert t1 == t2
+
+
+def test_merge_workloads_orders_arrivals_and_reassigns_rids():
+    s1 = generate(_cfg(tenant="interactive", seed=1))
+    s2 = generate(_cfg(tenant="flood", seed=2, rps=50.0))
+    merged = merge_workloads(s1, s2)
+    assert len(merged) == len(s1) + len(s2)
+    arrivals = [r.arrival for r in merged]
+    assert arrivals == sorted(arrivals)
+    assert [r.rid for r in merged] == list(range(len(merged)))
+    assert {r.tenant for r in merged} == {"interactive", "flood"}
+
+
+def test_closed_loop_deterministic_per_seed():
+    cfg = _cfg()
+    runs = []
+    for _ in range(2):
+        cl = ClosedLoopClients(cfg, n_clients=4, think_time_s=0.5)
+        reqs = cl.initial(0.0)
+        t = 1.0
+        while True:
+            nxt = cl.on_complete(reqs[-1], t)
+            if nxt is None:
+                break
+            reqs.append(nxt)
+            t += 1.0
+        runs.append(reqs)
+    assert len(runs[0]) == cfg.n_requests == len(runs[1])
+    for a, b in zip(*runs):
+        assert a.rid == b.rid and a.tenant == b.tenant
+        assert a.max_new_tokens == b.max_new_tokens
+        assert np.array_equal(a.prompt, b.prompt)
+
+
+def test_closed_loop_does_not_replay_open_loop_prompts():
+    """The seed-collision fix: a closed-loop pool over the same config
+    must NOT issue generate()'s exact prompts."""
+    cfg = _cfg(prefix_share=0.0)            # no shared prefixes: any
+    open_loop = generate(cfg)               # collision is a true replay
+    cl = ClosedLoopClients(cfg, n_clients=cfg.n_requests)
+    closed = cl.initial(0.0)
+    replayed = sum(
+        a.prompt.shape == b.prompt.shape and np.array_equal(a.prompt,
+                                                            b.prompt)
+        for a, b in zip(open_loop, closed))
+    assert replayed == 0
