@@ -95,6 +95,16 @@ def kernel_rows(hw=None):
                             ("int8+scale", 2 * (d + 4))):
             bytes_ = b * ctx * kv * kv_b + b * ctx * 4 + q_io  # KV+pos+q/o
             add(f"paged_decode_b{b}_ctx{ctx}", dtype, flops, bytes_)
+    for b, ctx, s in ((8, 2048, 5), (32, 8192, 5)):
+        # speculative verify: s = spec_len+1 queries per row score against
+        # the SAME paged KV one plain decode step reads — ~s x the FLOPs
+        # over nearly identical bytes, so arithmetic intensity rises ~s x
+        # and the memory-bound decode regime absorbs verification almost
+        # for free (the whole speculation win in one row)
+        flops = 4 * b * s * h * d * ctx
+        q_io = b * s * h * d * 2 * 2
+        bytes_ = b * ctx * kv * 2 * d * 2 + b * ctx * 4 + q_io
+        add(f"paged_verify_b{b}_ctx{ctx}_s{s}", "bf16", flops, bytes_)
     for b, s, prefix in ((4, 512, 2048), (4, 512, 8192)):
         # chunked prefill resume wave: full attention over the paged
         # prefix + causal (~half) over the in-flight suffix

@@ -22,7 +22,7 @@ from . import (bench_attention, bench_chunked_prefill,
                bench_decode_attention, bench_layer_span, bench_migration,
                bench_orchestrator, bench_paged_handoff, bench_pipeline,
                bench_prefix_reuse, bench_quant_kv, bench_scheduler,
-               bench_throughput, bench_utilization)
+               bench_speculation, bench_throughput, bench_utilization)
 
 ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
@@ -37,6 +37,7 @@ ALL = {
     "decode_attention": bench_decode_attention,  # page-fused vs two-step
     "chunked_prefill": bench_chunked_prefill,    # paged vs dense resumes
     "quant_kv": bench_quant_kv,       # int8 KV pages
+    "speculation": bench_speculation,  # lookahead/draft verify A/B
     "throughput": bench_throughput,   # Fig. 8-11
 }
 

@@ -20,7 +20,10 @@ chunked prefill, migration and *streaming consumption* change when and
 where work runs, never what is computed.
 
     PYTHONPATH=src python examples/serve_disaggregated.py
+    PYTHONPATH=src python examples/serve_disaggregated.py --speculation ngram
 """
+import argparse
+import dataclasses
 import pathlib
 import sys
 
@@ -40,11 +43,23 @@ from repro.serving.workload import WorkloadConfig, generate
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--speculation", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="speculative decoding on decode units; the exact "
+                         "verify keeps the streamed outputs token-identical "
+                         "to the plain reference either way")
+    args = ap.parse_args()
+
     cfg = configs.get("gemma-7b").smoke()
     params = T.init(cfg, jax.random.PRNGKey(0))
     print(f"arch={cfg.name} ({cfg.param_count():,} params)")
 
-    ecfg = EngineConfig(max_len=160, max_batch=4, block_size=16)
+    ecfg = EngineConfig(max_len=160, max_batch=4, block_size=16,
+                        speculation=args.speculation)
+    # 'draft' here is a self-draft (the target's own params) — a degenerate
+    # but deterministic draft model that demonstrates the accept-all path
+    draft = (cfg, params) if args.speculation == "draft" else None
     hw = A.TPU_V5E
     # saturating Poisson arrivals + SLO targets derived from the model's
     # own analytical costs, so the demo is meaningful at any model size
@@ -53,7 +68,7 @@ def main():
     slo = SLO(ttft_s=8 * t_pref + 4 * t_iter, tpot_s=1.5 * t_iter)
     ocfg = OrchestratorConfig(n_prefill=3, n_decode=1, router="load_aware",
                               engine=ecfg, chunk_tokens=32, slo=slo, hw=hw)
-    orch = Orchestrator(cfg, params, ocfg)
+    orch = Orchestrator(cfg, params, ocfg, draft=draft)
     server = Server(orch)
     print(f"fleet: {server.fleet}")
     print(f"control interval: {orch.control_interval * 1e6:.2f} us "
@@ -124,10 +139,22 @@ def main():
     print(f"store hit rate: {s['store_hit_rate']:.2f} "
           f"({s['store_entries']} blocks resident), "
           f"prefill token skew {s['prefill_token_skew']:.2f}")
+    if args.speculation != "off":
+        acc = s.get("acceptance_rate")
+        tpi = s.get("tokens_per_decode_iter")
+        print(f"speculation={args.speculation}: "
+              f"tokens/decode-iter={'n/a' if tpi is None else f'{tpi:.2f}'} "
+              f"acceptance={'n/a' if acc is None else f'{acc:.2f}'} "
+              f"(router chose speculate on {s.get('spec_iters', 0)} "
+              f"iterations, plain on {s.get('spec_plain_iters', 0)})")
+        assert tpi is not None and tpi >= 1.0
 
     # --- exactness: streamed output == single-engine reference ------------
-    ref_pe = PrefillEngine(cfg, params, ecfg, None, name="ref_p")
-    ref_de = DecodeEngine(cfg, params, ecfg, name="ref_d")
+    # the reference rollout is ALWAYS plain greedy decode: when speculation
+    # is on, this is the bit-identity guarantee, not a tautology
+    ref_ecfg = dataclasses.replace(ecfg, speculation="off")
+    ref_pe = PrefillEngine(cfg, params, ref_ecfg, None, name="ref_p")
+    ref_de = DecodeEngine(cfg, params, ref_ecfg, name="ref_d")
     checked = reqs + [late]
     for r in checked:
         ref = Request(rid=10_000 + r.rid, arrival=0.0, prompt=r.prompt,

@@ -129,6 +129,41 @@ def decode_iter_time(cfg: ModelConfig, context: int, hw: HardwareProfile,
                                  n_chips=n_chips, efficiency=efficiency)
 
 
+def speculative_tokens_per_iter(k: int, accept_rate: float) -> float:
+    """Expected committed tokens per speculative decode iteration: the
+    longest-accepted-prefix scheme always commits the bonus token plus
+    however many of the ``k`` proposals matched greedy (linear model of
+    the geometric acceptance process — adequate for routing decisions)."""
+    return 1.0 + max(0.0, min(1.0, accept_rate)) * max(k, 0)
+
+
+def speculative_decode_iter_time(cfg: ModelConfig, context: int,
+                                 hw: HardwareProfile, batch: int = 1,
+                                 k: int = 4,
+                                 draft_cfg: Optional[ModelConfig] = None,
+                                 n_chips: int = 1,
+                                 efficiency: float = 0.8) -> float:
+    """One speculative decode iteration: verification scores ``k + 1``
+    positions per slot in a single pass over the paged KV, so compute
+    scales ~(k+1)x while bytes stay where plain decode left them (weights
+    stream once, the KV read is the same pages plus k fresh entries) —
+    higher arithmetic intensity, and on a memory-bound roofline often
+    barely slower than a plain step.  ``draft_cfg`` adds k single-token
+    draft-model iterations (the two-model path); the n-gram proposer is
+    free.  Divide by ``speculative_tokens_per_iter`` for per-token cost."""
+    s = max(k, 0) + 1
+    t_comp = decode_flops_per_token(cfg, context, batch) * s / (
+        hw.peak_flops * n_chips)
+    t_mem = decode_bytes_per_token(cfg, context, batch) / (
+        hw.hbm_bw * n_chips * efficiency)
+    t = max(t_comp, t_mem)
+    if draft_cfg is not None:
+        t += max(k, 0) * decode_time_per_token(
+            draft_cfg, context, hw, batch=batch, n_chips=n_chips,
+            efficiency=efficiency)
+    return t
+
+
 def kv_transfer_time(cfg: ModelConfig, n_tokens: int, hw: HardwareProfile,
                      dtype_bytes: Optional[int] = None) -> float:
     """T_x of Eq. 21: move a request's KV prefill→decode over the fabric

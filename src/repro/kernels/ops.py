@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from ..core.attention_offload import combine_partials
 from .flash_prefill import flash_prefill, paged_prefix_partials
-from .split_kv_decode import paged_decode_partials, split_kv_decode_partials
+from .split_kv_decode import (paged_decode_partials, paged_verify_partials,
+                              split_kv_decode_partials)
 
 
 def _on_tpu() -> bool:
@@ -109,6 +110,42 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     if interpret is None:
         interpret = not _on_tpu()
     o, l, m = paged_decode_partials(
+        q, k_pages, v_pages, pos_pages, block_tables, pos_q,
+        window=window, scale=scale, soft_cap=soft_cap,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        interpret=interpret)
+    nb = o.shape[1]
+    out = combine_partials([o[:, j] for j in range(nb)],
+                           [l[:, j] for j in range(nb)],
+                           [m[:, j] for j in range(nb)])
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "soft_cap",
+                                             "interpret"))
+def paged_verify_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pos_pages: jax.Array,
+                           block_tables: jax.Array, pos_q: jax.Array, *,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           soft_cap: Optional[float] = None,
+                           k_scale_pages: Optional[jax.Array] = None,
+                           v_scale_pages: Optional[jax.Array] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Speculative verification: S queries per slot in one page-fused pass.
+
+    Identical page streaming to ``paged_decode_attention`` — the grid and
+    the bytes read are the same; only the per-page arithmetic grows by the
+    verify length, which is exactly why verification sits higher on the
+    roofline than single-token decode.  Per-query positions ``pos_q``
+    (B, S) carry both the history horizon and the causal order among the
+    in-flight speculative tokens.
+
+    q: (B, S, H, D); k/v_pages: (P, bs, KV, D); pos_pages: (P, bs);
+    block_tables: (B, nb); pos_q: (B, S).  Returns (B, S, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, l, m = paged_verify_partials(
         q, k_pages, v_pages, pos_pages, block_tables, pos_q,
         window=window, scale=scale, soft_cap=soft_cap,
         k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,

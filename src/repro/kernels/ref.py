@@ -125,6 +125,29 @@ def paged_decode_attention_reference(q: jax.Array, k_pages: jax.Array,
     return o.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_verify_attention_reference(q: jax.Array, k_pages: jax.Array,
+                                     v_pages: jax.Array,
+                                     pos_pages: jax.Array,
+                                     block_tables: jax.Array,
+                                     pos_q: jax.Array, *,
+                                     window: Optional[int] = None,
+                                     scale: Optional[float] = None,
+                                     soft_cap: Optional[float] = None,
+                                     k_scale_pages=None, v_scale_pages=None
+                                     ) -> jax.Array:
+    """Ground truth for the multi-query verify kernel: each of the S
+    speculative queries is exactly one independent single-token decode at
+    its own position (q: (B, S, H, D), pos_q: (B, S) → (B, S, H, D))."""
+
+    def one(qs, pqs):
+        return paged_decode_attention_reference(
+            qs, k_pages, v_pages, pos_pages, block_tables, pqs,
+            window=window, scale=scale, soft_cap=soft_cap,
+            k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages)
+
+    return jax.vmap(one, in_axes=(1, 1), out_axes=1)(q, pos_q)
+
+
 def paged_prefill_attention_reference(q: jax.Array, k: jax.Array,
                                       v: jax.Array, k_pages: jax.Array,
                                       v_pages: jax.Array,

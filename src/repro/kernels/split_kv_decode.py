@@ -165,6 +165,142 @@ def _paged_decode_kernel(tbl_ref, pq_ref, q_ref, k_ref, v_ref, pos_ref,
     m_ref[0, 0] = m.reshape(h)
 
 
+def _paged_verify_kernel(tbl_ref, pq_ref, q_ref, k_ref, v_ref, pos_ref,
+                         *rest, scale: float, kv_heads: int, group: int,
+                         window: Optional[int], soft_cap: Optional[float],
+                         quant: bool):
+    """Multi-query-per-slot variant of ``_paged_decode_kernel``: each grid
+    step scores S speculative queries of one row against ONE physical page.
+
+    Same page-fused layout — the block table rides in as a scalar-prefetch
+    operand and the index_map steers this step's k/v/pos blocks, so the S
+    verify queries reuse a single in-place read of the page (the extra
+    arithmetic is nearly free: the page's bytes are the bottleneck).  Each
+    query carries its own absolute position pq[s], so the causal mask among
+    the in-flight speculative tokens (query s must not see keys written at
+    pq[s'] > pq[s]) falls out of the same ``pos <= pq`` comparison that
+    masks history."""
+    if quant:
+        ks_ref, vs_ref, o_ref, l_ref, m_ref = rest
+    else:
+        o_ref, l_ref, m_ref = rest
+    b_ = pl.program_id(0)
+    j = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                     # (S, H, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bs, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    pos = pos_ref[0]                                     # (bs,)
+    pq = pq_ref[b_]                                      # (S,)
+    s_len, h, d = q.shape
+    bs = k.shape[0]
+    # (S, bs) mask: per-query causal horizon over one shared page read
+    valid = (tbl_ref[b_, j] >= 0) & (pos >= 0)[None, :] \
+        & (pos[None, :] <= pq[:, None])
+    if window is not None:
+        valid &= pos[None, :] > pq[:, None] - window
+    qg = q.reshape(s_len, kv_heads, group, d) \
+        .transpose(1, 0, 2, 3).reshape(kv_heads, s_len * group, d)
+    # scores: (KV, S*G, bs)
+    sc = jax.lax.dot_general(
+        qg, k.transpose(1, 2, 0),                        # (KV,SG,D)x(KV,D,bs)
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    if quant:
+        sc = sc * ks_ref[0].astype(jnp.float32).T[:, None, :]
+    if soft_cap is not None:
+        sc = jnp.tanh(sc / soft_cap) * soft_cap
+    sc = sc.reshape(kv_heads, s_len, group, bs)
+    vmask = valid[None, :, None, :]
+    sc = jnp.where(vmask, sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)                             # (KV, S, G)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(vmask, p, 0.0)
+    l = jnp.sum(p, axis=-1)                              # (KV, S, G)
+    p = p.reshape(kv_heads, s_len * group, bs)
+    if quant:
+        p = p * vs_ref[0].astype(jnp.float32).T[:, None, :]
+    o = jax.lax.dot_general(
+        p, v.transpose(1, 0, 2),                         # (KV,SG,bs)x(KV,bs,D)
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (KV, S*G, D)
+    o = o.reshape(kv_heads, s_len, group, d)
+    o_ref[0, 0] = o.transpose(1, 0, 2, 3).reshape(s_len, h, d)
+    l_ref[0, 0] = l.transpose(1, 0, 2).reshape(s_len, h)
+    m_ref[0, 0] = m.transpose(1, 0, 2).reshape(s_len, h)
+
+
+def paged_verify_partials(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, pos_pages: jax.Array,
+                          block_tables: jax.Array, pos_q: jax.Array, *,
+                          window: Optional[int] = None,
+                          scale: Optional[float] = None,
+                          soft_cap: Optional[float] = None,
+                          k_scale_pages: Optional[jax.Array] = None,
+                          v_scale_pages: Optional[jax.Array] = None,
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Page-fused speculative verification: S queries per slot, one pass.
+
+    q: (B, S, H, D) — the pending token plus S-1 proposed tokens, already
+    written into their pages; pos_q: (B, S) consecutive absolute positions
+    per query (slots with fewer live proposals still carry S consecutive
+    positions — the engine discards the surplus logits and rolls the
+    surplus pages back).  Everything else matches
+    ``paged_decode_partials``.  Returns per-page partials
+    o (B, nb, S, H, D), l/m (B, nb, S, H) f32 for ``combine_partials``."""
+    b, s_len, h, d = q.shape
+    bs, kv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    group = h // kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    quant = k_scale_pages is not None
+    kernel = functools.partial(
+        _paged_verify_kernel, scale=scale, kv_heads=kv, group=group,
+        window=window, soft_cap=soft_cap, quant=quant)
+
+    def page(idx_fn):
+        return lambda b_, j, tbl, pq: idx_fn(jnp.maximum(tbl[b_, j], 0))
+
+    in_specs = [
+        pl.BlockSpec((1, s_len, h, d), lambda b_, j, tbl, pq: (b_, 0, 0, 0)),
+        pl.BlockSpec((1, bs, kv, d), page(lambda p_: (p_, 0, 0, 0))),
+        pl.BlockSpec((1, bs, kv, d), page(lambda p_: (p_, 0, 0, 0))),
+        pl.BlockSpec((1, bs), page(lambda p_: (p_, 0))),
+    ]
+    operands = [q, k_pages, v_pages, pos_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, kv), page(lambda p_: (p_, 0, 0))),
+                     pl.BlockSpec((1, bs, kv), page(lambda p_: (p_, 0, 0)))]
+        operands += [k_scale_pages, v_scale_pages]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, s_len, h, d),
+                         lambda b_, j, tbl, pq: (b_, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, s_len, h),
+                         lambda b_, j, tbl, pq: (b_, j, 0, 0)),
+            pl.BlockSpec((1, 1, s_len, h),
+                         lambda b_, j, tbl, pq: (b_, j, 0, 0)),
+        ],
+    )
+    o, l, m = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, s_len, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, s_len, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, s_len, h), jnp.float32),
+        ],
+        compiler_params=None if interpret else tpu_compiler_params(
+            ("parallel", "parallel")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos_q.astype(jnp.int32), *operands)
+    return o, l, m
+
+
 def paged_decode_partials(q: jax.Array, k_pages: jax.Array,
                           v_pages: jax.Array, pos_pages: jax.Array,
                           block_tables: jax.Array, pos_q: jax.Array, *,

@@ -40,7 +40,17 @@ def _build_live(args):
     print(f"live backend: arch={cfg.name} params={cfg.param_count():,}")
     params = T.init(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(max_len=args.max_len, max_batch=args.max_batch,
-                        block_size=16)
+                        block_size=16, speculation=args.speculation)
+    draft = None
+    if args.speculation == "draft":
+        # reuse the arch's smoke shrink as the small draft stack — same
+        # tokenizer space, fraction of the layers/width
+        dcfg = configs.get(args.arch).smoke()
+        if dcfg == cfg:     # already smoke-sized: self-draft
+            dcfg = cfg
+        draft = (dcfg, params if dcfg == cfg
+                 else T.init(dcfg, jax.random.PRNGKey(1)))
+        print(f"draft model: {dcfg.name} params={dcfg.param_count():,}")
     hw = A.TPU_V5E
     # --rps is in arrivals per decode-iteration time, so the offered load
     # is meaningful at any model scale on the virtual clock
@@ -53,11 +63,13 @@ def _build_live(args):
                         prompt_len_hi=min(64, args.max_len // 2))
     orch = Orchestrator(cfg, params, OrchestratorConfig(
         n_prefill=args.prefill, n_decode=args.decode, engine=ecfg, hw=hw,
-        chunk_tokens=32))
+        chunk_tokens=32), draft=draft)
     return orch, wl, 1e6  # report in virtual microseconds
 
 
 def _build_sim(args):
+    import dataclasses
+
     from ..serving.cluster import ClusterSim, SimConfig
 
     model = configs.get(args.arch)
@@ -67,8 +79,13 @@ def _build_sim(args):
     wl = WorkloadConfig(kind=args.workload, rps=args.rps,
                         n_requests=n, max_new_tokens=args.max_new,
                         prefix_share=args.prefix_share)
-    sim = ClusterSim(SimConfig.preset(model, args.system,
-                                      n_instances=args.instances))
+    scfg = SimConfig.preset(model, args.system, n_instances=args.instances)
+    if args.speculation != "off":
+        scfg = dataclasses.replace(
+            scfg, speculation=args.speculation,
+            draft_model=(model.smoke() if args.speculation == "draft"
+                         else None))
+    sim = ClusterSim(scfg)
     return sim, wl, 1.0    # report in seconds
 
 
@@ -98,6 +115,12 @@ def main() -> None:
                          "open-loop Poisson arrivals")
     ap.add_argument("--admission-limit", type=int, default=None,
                     help="max requests in flight; overflow is REJECTED")
+    ap.add_argument("--speculation", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="multi-token speculative decoding on decode units "
+                         "(live: exact verify on the paged KV; sim: "
+                         "analytical twin); 'draft' uses the arch's smoke "
+                         "shrink as the draft model")
     args = ap.parse_args()
 
     backend, wl, tscale = (_build_live if args.backend == "live"
@@ -140,6 +163,14 @@ def main() -> None:
           f"mean_ttft={s['mean_ttft_s'] * tscale:.2f}{unit}  "
           f"p99_ttft={s['p99_ttft_s'] * tscale:.2f}{unit}  "
           f"mean_tpot={s['mean_tpot_s'] * tscale:.3f}{unit}")
+    if s.get("speculation", "off") != "off":
+        acc = s.get("acceptance_rate")
+        tpi = s.get("tokens_per_decode_iter")
+        print(f"speculation={s['speculation']}  "
+              f"tokens/iter={'n/a' if tpi is None else f'{tpi:.2f}'}  "
+              f"acceptance={'n/a' if acc is None else f'{acc:.2f}'}  "
+              f"spec_iters={s.get('spec_iters', 0)} "
+              f"plain_iters={s.get('spec_plain_iters', 0)}")
     print(f"fleet now: {server.fleet}")
 
 

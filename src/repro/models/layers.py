@@ -337,42 +337,53 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                     k_sc = state["k_scale"].at[b_idx, write_pos].set(ks_w)
                     v_sc = state["v_scale"].at[b_idx, write_pos].set(vs_w)
         elif block_tables is not None and cache_k.shape[0] != b:
-            # paged decode: S == 1, state leaves are block pools.  Scatter
-            # the new token into its page, then attend over the row's
-            # pages.  Default (paged_kernel=True): the split-KV Pallas
-            # kernel reads pages IN PLACE — the block table is fused into
-            # its index_map, so no dense KV gather exists in the step.
-            # The explicit opt-out (decode_kernel=False) keeps the
-            # gather-then-attend formulation as the bit-level reference.
+            # paged decode: state leaves are block pools.  S == 1 is the
+            # plain decode step; S > 1 is the speculative verify step (the
+            # pending token plus S-1 proposed tokens scored in one pass —
+            # the engine rolls rejected tokens' pages back afterwards).
+            # Scatter the new token(s) into their pages, then attend over
+            # the row's pages.  Default (paged_kernel=True): the split-KV
+            # Pallas kernel reads pages IN PLACE — the block table is
+            # fused into its index_map, so no dense KV gather exists in
+            # the step.  The explicit opt-out (decode_kernel=False) keeps
+            # the gather-then-attend formulation as the bit-level
+            # reference.
             assert head_offload == 0, "head offload + paged not combined"
             bs_pg = cache_k.shape[1]
             nb = block_tables.shape[1]
             plen = nb * bs_pg
-            pos0 = positions[:, 0]
-            slot_off = pos0 % plen
-            rows = jnp.arange(b)
+            slot_off = positions % plen                      # (B, S)
+            rows = jnp.arange(b)[:, None]
             phys = block_tables[rows, slot_off // bs_pg]
             # unassigned rows (-1) land on the reserved scratch block 0,
             # which no live table entry references
             wblk = jnp.maximum(phys, 0)
             off = slot_off % bs_pg
             if quant:
-                cache_k = cache_k.at[wblk, off].set(k_q[:, 0])
-                cache_v = cache_v.at[wblk, off].set(v_q[:, 0])
-                k_sc = state["k_scale"].at[wblk, off].set(k_s[:, 0])
-                v_sc = state["v_scale"].at[wblk, off].set(v_s[:, 0])
+                cache_k = cache_k.at[wblk, off].set(k_q)
+                cache_v = cache_v.at[wblk, off].set(v_q)
+                k_sc = state["k_scale"].at[wblk, off].set(k_s)
+                v_sc = state["v_scale"].at[wblk, off].set(v_s)
             else:
-                cache_k = cache_k.at[wblk, off].set(k[:, 0])
-                cache_v = cache_v.at[wblk, off].set(v[:, 0])
-            slot_pos = slot_pos.at[wblk, off].set(pos0)
-            if paged_kernel:
+                cache_k = cache_k.at[wblk, off].set(k)
+                cache_v = cache_v.at[wblk, off].set(v)
+            slot_pos = slot_pos.at[wblk, off].set(positions)
+            if paged_kernel and s == 1:
                 from ..kernels.ops import paged_decode_attention
                 o = paged_decode_attention(
                     q[:, 0], cache_k, cache_v, slot_pos, block_tables,
-                    pos0, window=window, scale=scale,
+                    positions[:, 0], window=window, scale=scale,
                     soft_cap=cfg.logit_soft_cap,
                     k_scale_pages=k_sc if quant else None,
                     v_scale_pages=v_sc if quant else None)[:, None]
+            elif paged_kernel:
+                from ..kernels.ops import paged_verify_attention
+                o = paged_verify_attention(
+                    q, cache_k, cache_v, slot_pos, block_tables,
+                    positions, window=window, scale=scale,
+                    soft_cap=cfg.logit_soft_cap,
+                    k_scale_pages=k_sc if quant else None,
+                    v_scale_pages=v_sc if quant else None)
             else:
                 safe = jnp.maximum(block_tables, 0)
                 kvh, hd = cache_k.shape[-2], cache_k.shape[-1]

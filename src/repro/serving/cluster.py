@@ -61,6 +61,15 @@ class SimConfig:
     local_cache_groups: int = 2        # per-instance prefix cache capacity
     util_window: float = 1.0           # utilization EMA window (s)
     slo: Optional[SLO] = None          # TTFT/TPOT targets (goodput/attain)
+    # speculative decoding (analytical twin of EngineConfig.speculation):
+    # the sim has no real tokens, so acceptance is an assumed rate and
+    # iterations commit the expected token count.  The same load-aware
+    # flip as the live orchestrator decides per iteration whether the
+    # speculative cost-per-committed-token beats a plain step.
+    speculation: str = "off"           # off | ngram | draft
+    spec_len: int = 4                  # proposed tokens per iteration (k)
+    spec_accept: float = 0.7           # assumed per-proposal acceptance
+    draft_model: Optional[ModelConfig] = None   # billed when "draft"
 
     @staticmethod
     def preset(model: ModelConfig, system: str, n_instances: int = 4,
@@ -85,6 +94,9 @@ class _DecodeSlot:
     req: Request
     remaining: int
     context: int
+    # fractional committed-token carry under speculation: each iteration
+    # adds E[tokens/iter]; whole tokens commit, the remainder accumulates
+    credit: float = 0.0
 
 
 class _Instance:
@@ -96,6 +108,7 @@ class _Instance:
         self.busy_until = 0.0
         self.decode_slots: List[_DecodeSlot] = []
         self.decode_iter_scheduled = False
+        self.spec_pending = False      # the in-flight iteration speculates
         self.kv_tokens = 0
         self.busy: float = 0.0            # cumulative compute-busy seconds
         self.util_ema = 0.0
@@ -194,6 +207,9 @@ class ClusterSim(BackendBase):
         # way back; sacrifice bills a full re-prefill of the context.
         self._preempted: List[tuple] = []
         self.swap_io_s = 0.0    # modelled preemption swap traffic
+        # load-aware speculation routing counters (mirrors Orchestrator)
+        self.spec_iters = 0
+        self.plain_iters = 0
         self._init_backend()    # _by_rid registry + admission_limit
 
     # ------------------------------------------------------------------
@@ -302,16 +318,42 @@ class ClusterSim(BackendBase):
             t += pm.residual_stall()
         return t
 
-    def _decode_iter_time(self, inst: _Instance) -> float:
+    def _decode_iter_time(self, inst: _Instance,
+                          speculate: bool = False) -> float:
         if not inst.decode_slots:
             return 0.0
         batch = len(inst.decode_slots)
         ctx = int(np.mean([s.context for s in inst.decode_slots]))
-        t = A.decode_time_per_token(self.model, ctx, self.cfg.hw, batch=batch)
+        if speculate:
+            t = A.speculative_decode_iter_time(
+                self.model, ctx, self.cfg.hw, batch=batch,
+                k=max(self.cfg.spec_len, 1),
+                draft_cfg=(self.cfg.draft_model
+                           if self.cfg.speculation == "draft" else None))
+        else:
+            t = A.decode_time_per_token(self.model, ctx, self.cfg.hw,
+                                        batch=batch)
         t = t / max(inst.decode_cap, 0.05)
         if self.cfg.mode == "colocated":
             t += 1.5e-3        # monolithic scheduler overhead per iteration
         return t
+
+    def _spec_decide(self, inst: _Instance) -> bool:
+        """The orchestrator's load-aware speculation flip, analytically:
+        speculate iff the (k+1)-wide verify iteration's cost per expected
+        committed token undercuts a plain step at this batch/context."""
+        if self.cfg.speculation == "off" or not inst.decode_slots:
+            return False
+        plain = self._decode_iter_time(inst, speculate=False)
+        spec = self._decode_iter_time(inst, speculate=True)
+        e_tok = A.speculative_tokens_per_iter(max(self.cfg.spec_len, 1),
+                                              self.cfg.spec_accept)
+        speculate = spec / e_tok < plain
+        if speculate:
+            self.spec_iters += 1
+        else:
+            self.plain_iters += 1
+        return speculate
 
     # -- migration plumbing ------------------------------------------------
     def _layer_quantum(self, amount: int) -> float:
@@ -732,7 +774,8 @@ class ClusterSim(BackendBase):
             # exclusive compute: decode waits for any running prefill and
             # occupies the timeline (the §2.2 interference)
             start = max(start, inst.busy_until)
-        dur = self._decode_iter_time(inst)
+        inst.spec_pending = self._spec_decide(inst)
+        dur = self._decode_iter_time(inst, speculate=inst.spec_pending)
         fill = len(inst.decode_slots) / max(self.cfg.decode_batch_max, 1)
         inst.work_d += dur * max(inst.decode_cap, 0.05) * fill
         if self.cfg.mode == "colocated":
@@ -744,14 +787,26 @@ class ClusterSim(BackendBase):
 
     def _on_decode_done(self, inst: _Instance) -> List[Request]:
         inst.decode_iter_scheduled = False
+        self.metrics.decode_iters += 1
+        # a speculative iteration commits E[tokens/iter] per slot (whole
+        # tokens now, the fraction carries); a plain one commits exactly 1
+        e_tok = (A.speculative_tokens_per_iter(max(self.cfg.spec_len, 1),
+                                               self.cfg.spec_accept)
+                 if inst.spec_pending else 1.0)
+        inst.spec_pending = False
         finished = []
         for slot in inst.decode_slots:
-            slot.req.generated.append(0)
-            last = slot.req.t_tokens[-1] if slot.req.t_tokens else self.now
-            slot.req.t_tokens.append(max(self.now, last))
-            slot.remaining -= 1
-            slot.context += 1
-            inst.kv_tokens += 1
+            slot.credit += e_tok
+            n = min(int(slot.credit), slot.remaining)
+            slot.credit -= n
+            for _ in range(n):
+                slot.req.generated.append(0)
+                last = slot.req.t_tokens[-1] if slot.req.t_tokens \
+                    else self.now
+                slot.req.t_tokens.append(max(self.now, last))
+            slot.remaining -= n
+            slot.context += n
+            inst.kv_tokens += n
             if slot.remaining <= 0:
                 finished.append(slot)
         for slot in finished:
@@ -840,6 +895,10 @@ class ClusterSim(BackendBase):
         summary = self.metrics.summary()
         summary["migrations"] = len(self.migration_log)
         summary["mode"] = self.cfg.mode
+        summary["speculation"] = self.cfg.speculation
+        if self.cfg.speculation != "off":
+            summary["spec_iters"] = self.spec_iters
+            summary["spec_plain_iters"] = self.plain_iters
         if self.store is not None:
             summary["store_entries"] = len(self.store)
         loads = [i.busy for i in self.instances]

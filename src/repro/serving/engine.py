@@ -65,6 +65,16 @@ class EngineConfig:
     # transmission against this hardware's per-layer prefill compute
     hw: Optional[A.HardwareProfile] = None
     efficiency: float = 0.5       # prefill MFU for the analytical billings
+    # speculative decoding on the decode step: "off" = one token per jitted
+    # iteration; "ngram" = draft-free lookahead (per-slot suffix match over
+    # prompt+output proposes up to spec_len tokens); "draft" = a second,
+    # smaller model drafts the proposals (DecodeEngine's ``draft`` arg
+    # carries its config+params).  Proposals are verified EXACTLY in one
+    # multi-query pass — the committed stream is bit-identical to plain
+    # greedy decode; rejected tokens' pages roll back through the pool.
+    speculation: str = "off"
+    spec_len: int = 4             # max proposed tokens per iteration
+    spec_adaptive: bool = True    # adapt per-slot depth to acceptance rate
 
 
 def _pow2_ceil(n: int) -> int:
@@ -102,7 +112,7 @@ def _paged_page_len(cfg: ModelConfig, ecfg: EngineConfig) -> Optional[int]:
 @functools.lru_cache(maxsize=None)
 def _jit_apply(cfg: ModelConfig, mode: str, prefix_aware: bool,
                paged_kernel: bool = False, hidden_in: bool = False,
-               hidden_out: bool = False):
+               hidden_out: bool = False, logits_slice: str = "last"):
     """Jitted forward shared across engine instances.
 
     Keyed on the (hashable, frozen) ModelConfig so re-rolling an instance
@@ -114,7 +124,7 @@ def _jit_apply(cfg: ModelConfig, mode: str, prefix_aware: bool,
     instead of copying them every step (callers never reuse the cache they
     pass in)."""
     return jax.jit(functools.partial(T.apply, cfg, mode=mode,
-                                     logits_slice="last",
+                                     logits_slice=logits_slice,
                                      prefix_aware=prefix_aware,
                                      paged_kernel=paged_kernel,
                                      hidden_in=hidden_in,
@@ -143,6 +153,98 @@ _page_reset = jax.jit(KC.reset_page_positions,
                       static_argnames=("block_size",), donate_argnums=(0,))
 _page_copy = jax.jit(KC.copy_pages, static_argnames=("block_size",),
                      donate_argnums=(0,))
+
+
+def ngram_propose(ctx: List[int], k: int, max_n: int = 3) -> List[int]:
+    """Draft-free lookahead proposal: suffix-match the last ``n``-gram of
+    ``ctx`` (prompt + generated, pending token last) against its own
+    earlier occurrences, longest ``n`` first, most recent match wins, and
+    propose the up-to-``k`` tokens that followed it.  Purely host-side and
+    rebuilt from the Request every call, so it survives extract/adopt,
+    preemption and ``move_span`` with no extra wire state."""
+    L = len(ctx)
+    for n in range(min(max_n, L - 1), 0, -1):
+        pat = ctx[L - n:]
+        for s in range(L - n - 1, -1, -1):
+            if ctx[s:s + n] == pat:
+                return ctx[s + n:s + n + k]
+    return []
+
+
+class _Draft:
+    """The two-model speculation path's draft side: a small model with its
+    own dense per-slot KV cache, advanced one token at a time to propose
+    continuations the target then verifies in one batched pass.  The dense
+    layout makes draft rollback free — stale rows past a slot's valid
+    length are position-masked and overwritten in place on the next pass —
+    so rejected proposals just truncate the host length mirror."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        assert cfg.uses_kv_cache and not cfg.uses_recurrent_state \
+            and cfg.sliding_window is None, \
+            "draft model must have rollback-safe (full-attention) KV"
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.cache = T.init_cache(cfg, ecfg.max_batch, ecfg.max_len,
+                                  dtype=params["embed"].dtype)
+        # valid resident tokens per slot (committed-stream prefix length)
+        self.len = np.zeros((ecfg.max_batch,), np.int64)
+        self._step = _jit_apply(cfg, "decode", False)
+        self._prefill = _jit_apply(cfg, "prefill", False)
+
+    def reset_slot(self, slot: int) -> None:
+        self.len[slot] = 0
+
+    def prefill_slot(self, slot: int, resident: List[int]) -> None:
+        """(Re)build one slot's draft KV from the committed stream —
+        adopt/migration receive path, and the resync fallback when the
+        draft fell too far behind (e.g. plain-decode interludes)."""
+        n = len(resident)
+        if n == 0:
+            self.len[slot] = 0
+            return
+        padded = min(_pow2_ceil(n), self.ecfg.max_len)
+        buf = np.zeros((1, padded), np.int32)
+        buf[0, :n] = np.asarray(resident, np.int32)
+        cache = T.init_cache(self.cfg, 1, self.ecfg.max_len,
+                             dtype=self.params["embed"].dtype)
+        _, cache, _ = self._prefill(self.params, jnp.asarray(buf),
+                                    cache=cache,
+                                    logits_at=jnp.asarray([n - 1]))
+        st = KC.extract_request_state(cache, 0)
+        st["length"] = jnp.asarray(n, jnp.int32)
+        self.cache = KC.insert_request_state(self.cache, slot, st)
+        self.len[slot] = n
+
+    def run(self, schedules: Dict[int, List[int]], n_out: int,
+            greedy_from: Dict[int, int]
+            ) -> Tuple[Dict[int, List[int]], int]:
+        """Batched draft micro-steps.  ``schedules[i]`` is slot i's forced
+        input sequence (catch-up tokens then the pending token); once a
+        slot's schedule is exhausted its own greedy output feeds back in.
+        Returns (per-slot proposals, total micro-steps run): the first
+        ``n_out`` greedy outputs per slot starting at the step that
+        consumed its pending token (``greedy_from[i]``)."""
+        if not schedules:
+            return {}, 0
+        bsz = self.ecfg.max_batch
+        n_steps = max(greedy_from[i] + n_out for i in schedules)
+        self.cache["lengths"] = jnp.asarray(self.len.astype(np.int32))
+        col = np.zeros((bsz,), np.int32)
+        prev = np.zeros((bsz,), np.int32)
+        outs: Dict[int, List[int]] = {i: [] for i in schedules}
+        for t in range(n_steps):
+            for i, sched in schedules.items():
+                col[i] = sched[t] if t < len(sched) else prev[i]
+            logits, self.cache, _ = self._step(
+                self.params, jnp.asarray(col[:, None]), cache=self.cache)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for i in schedules:
+                prev[i] = nxt[i]
+                if t >= greedy_from[i] and len(outs[i]) < n_out:
+                    outs[i].append(int(nxt[i]))
+        return outs, n_steps
 
 
 class PrefillEngine:
@@ -636,7 +738,8 @@ class DecodeEngine:
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  name: str = "decode0",
-                 layer_span: Optional[Tuple[int, int]] = None):
+                 layer_span: Optional[Tuple[int, int]] = None,
+                 draft: Optional[Tuple[ModelConfig, Any]] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -647,9 +750,25 @@ class DecodeEngine:
         # hand-off/control paths free of device syncs
         self._slot_len = np.zeros((ecfg.max_batch,), np.int64)
         self.tokens_decoded = 0
+        self.decode_iters = 0     # jitted decode/verify iterations run
+        self.spec_proposed = 0    # speculative tokens scored for acceptance
+        self.spec_accepted = 0    # of those, committed (bonus not counted)
         self._store: Optional[GlobalKVStore] = None
         self.cow_forks = 0        # shared pages forked copy-on-write
         self.pages_shared = 0     # pages bound by reference (no copy)
+        # speculation: mode from the config, a runtime switch the
+        # orchestrator flips per load (high batch -> verification compute
+        # competes with throughput -> plain decode wins), and per-slot
+        # adaptive depth driven by the measured acceptance rate
+        self.spec_on = ecfg.speculation != "off"
+        self._spec_k = np.full((ecfg.max_batch,), max(ecfg.spec_len, 1),
+                               np.int64)
+        self._spec_ema = np.ones((ecfg.max_batch,), np.float64)
+        self._draft: Optional[_Draft] = None
+        if ecfg.speculation == "draft":
+            assert draft is not None, \
+                "speculation='draft' needs draft=(draft_cfg, draft_params)"
+            self._draft = _Draft(draft[0], draft[1], ecfg)
         self._set_span(layer_span)
 
     def _set_span(self, layer_span: Optional[Tuple[int, int]]) -> None:
@@ -681,6 +800,20 @@ class DecodeEngine:
         # reference path for bit-level A/B runs
         self.use_kernel = self.paged and ecfg.decode_kernel is not False
         self._step = _jit_apply(self.scfg, "decode", False, self.use_kernel)
+        # speculation needs rollback-safe KV: attention state (recurrent
+        # state integrates every token and cannot rewind) with no sliding
+        # window (a ring at window capacity would overwrite live in-window
+        # keys when several tokens scatter in one pass), on a full-stack
+        # engine (span pipelines commit through their lead's plain step)
+        self._spec_ok = (ecfg.speculation != "off"
+                         and self.layer_span == (0, self.cfg.n_layers)
+                         and self.scfg.uses_kv_cache
+                         and not self.scfg.uses_recurrent_state
+                         and self.scfg.sliding_window is None
+                         and not self.scfg.cross_attention)
+        self._verify = _jit_apply(self.scfg, "decode", False,
+                                  self.use_kernel, logits_slice="all") \
+            if self._spec_ok else None
 
     def rebase_span(self, layer_span: Tuple[int, int]) -> None:
         """Re-slice this stage to a different contiguous span (layer-level
@@ -834,6 +967,12 @@ class DecodeEngine:
         self.slots[slot] = req
         self.next_token[slot] = int(next_token)
         self._slot_len[slot] = int(state["length"])
+        # speculation state starts optimistic; the draft cache rebuilds
+        # lazily from the committed stream on the first verify iteration
+        self._spec_ema[slot] = 1.0
+        self._spec_k[slot] = max(self.ecfg.spec_len, 1)
+        if self._draft is not None:
+            self._draft.reset_slot(slot)
         req.decode_instance = self.name
         return slot
 
@@ -865,6 +1004,8 @@ class DecodeEngine:
         tok = int(self.next_token[slot])
         self.slots[slot] = None
         self._slot_len[slot] = 0
+        if self._draft is not None:
+            self._draft.reset_slot(slot)
         return req, state, tok
 
     def drain(self) -> List[Tuple[Request, Dict[str, Any], int]]:
@@ -883,46 +1024,54 @@ class DecodeEngine:
         self.slots[slot] = None
         self._slot_len[slot] = 0
         self.next_token[slot] = 0
+        if self._draft is not None:
+            self._draft.reset_slot(slot)
         return req
 
     # -- decode ----------------------------------------------------------
-    def _prepare_pages(self) -> None:
+    def _prepare_pages(self, n_tokens: int = 1) -> Dict[int, List[Tuple[int,
+                                                                        int]]]:
         """Pre-forward page bookkeeping: make sure every active slot
-        EXCLUSIVELY owns the block its next token lands in and the device
-        block table is fresh.  Three cases per active slot's write block:
+        EXCLUSIVELY owns the block(s) its next ``n_tokens`` tokens land in
+        and the device block table is fresh.  Three cases per write block:
         unassigned (fresh allocation — appends past the boundary, ring
         wraps), shared (refcount > 1: fork it copy-on-write via the free
         list before the jitted step touches it — the writer gets a private
         copy, every other holder keeps the original in place), or already
-        exclusive (write through)."""
+        exclusive (write through).  Returns the freshly allocated blocks
+        per slot as ``{slot: [(table_index, block)]}`` — the speculative
+        verify step rolls back the ones no committed token reached."""
         if not self.paged:
-            return
+            return {}
         fresh: List[int] = []
+        fresh_by: Dict[int, List[Tuple[int, int]]] = {}
         cow_src: List[int] = []
         cow_dst: List[int] = []
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
-            j = (int(self._slot_len[i]) % self.page_len) \
-                // self.ecfg.block_size
-            pb = int(self._bt[i, j])
-            if pb < 0:
-                self._ensure_free(1)
-                nb = self.pool.alloc(1)[0]
-                self._bt[i, j] = nb
-                self._slot_blocks[i].append(nb)
-                fresh.append(nb)
-            elif self.pool.refcount[pb] > 1:
-                # copy-on-write fork: this slot's next token lands in a
-                # page other holders can still read — divergence point
-                self._ensure_free(1)
-                nb = self.pool.alloc(1)[0]
-                self._bt[i, j] = nb
-                self._slot_blocks[i][self._slot_blocks[i].index(pb)] = nb
-                self.pool.unref([pb])
-                cow_src.append(pb)
-                cow_dst.append(nb)
-                self.cow_forks += 1
+            for t in range(n_tokens):
+                j = ((int(self._slot_len[i]) + t) % self.page_len) \
+                    // self.ecfg.block_size
+                pb = int(self._bt[i, j])
+                if pb < 0:
+                    self._ensure_free(1)
+                    nb = self.pool.alloc(1)[0]
+                    self._bt[i, j] = nb
+                    self._slot_blocks[i].append(nb)
+                    fresh.append(nb)
+                    fresh_by.setdefault(i, []).append((j, nb))
+                elif self.pool.refcount[pb] > 1:
+                    # copy-on-write fork: this slot's next token lands in a
+                    # page other holders can still read — divergence point
+                    self._ensure_free(1)
+                    nb = self.pool.alloc(1)[0]
+                    self._bt[i, j] = nb
+                    self._slot_blocks[i][self._slot_blocks[i].index(pb)] = nb
+                    self.pool.unref([pb])
+                    cow_src.append(pb)
+                    cow_dst.append(nb)
+                    self.cow_forks += 1
         if cow_src:
             # duplicate the forked pages (in place, donated) — only the
             # destinations are written, so concurrent readers of the
@@ -941,6 +1090,7 @@ class DecodeEngine:
         if fresh or cow_src or self._bt_dirty:
             self.cache["block_tables"] = jnp.asarray(self._bt)
             self._bt_dirty = False
+        return fresh_by
 
     def _forward_step(self, x: jax.Array, *, hidden_in: bool = False,
                       hidden_out: bool = False) -> jax.Array:
@@ -1007,10 +1157,182 @@ class DecodeEngine:
             self._slot_len[i] += 1
 
     def step(self) -> List[Tuple[Request, int]]:
-        """One decode iteration for all active slots.  Returns finished."""
+        """One decode iteration for all active slots.  Returns finished.
+
+        With speculation enabled (and the arch rollback-safe), each
+        iteration verifies up to ``spec_len`` proposed tokens in ONE jitted
+        multi-query pass and commits the longest greedy-identical prefix
+        plus the verifier's own bonus token — between 1 and spec_len+1
+        tokens per iteration, bit-identical to plain greedy decode."""
         if self.active == 0:
             return []
+        if self.spec_on and self._spec_ok:
+            out = self._spec_step()
+            if out is not None:
+                return out
+        self.decode_iters += 1
         self._prepare_pages()
         logits = self._forward_step(jnp.asarray(self.next_token[:, None]))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         return self.commit(nxt)
+
+    # -- speculative decoding -------------------------------------------
+    def _commit_slot(self, i: int, toks: List[int]) -> bool:
+        """Append committed tokens under the plain-step finish rules (one
+        at a time, stopping at the budget/capacity boundary so surplus
+        speculation is dropped, never emitted).  True when finished."""
+        req = self.slots[i]
+        for tok in toks:
+            req.generated.append(int(tok))
+            self.next_token[i] = int(tok)
+            self._slot_len[i] += 1
+            self.tokens_decoded += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or int(self._slot_len[i]) >= self.ecfg.max_len - 1):
+                return True
+        return False
+
+    def _rollback_pages(self, slot: int,
+                        fresh_blocks: List[Tuple[int, int]]) -> None:
+        """Return freshly speculated blocks no committed token reached to
+        the free list.  Only blocks allocated by THIS step's
+        ``_prepare_pages`` window are candidates — they are exclusively
+        owned by construction (refcount 1), so shared/COW prefix pages are
+        never touched; and with speculation gated to full-attention stacks
+        the page space never wraps, so a block's table index times
+        block_size IS its logical start position.  Rejected tokens left in
+        kept boundary blocks sit at positions beyond every future query's
+        horizon (masked) until the same offsets are overwritten."""
+        bs = self.ecfg.block_size
+        new_len = int(self._slot_len[slot])
+        for j, blk in fresh_blocks:
+            if j * bs >= new_len:
+                self._bt[slot, j] = -1
+                self._slot_blocks[slot].remove(blk)
+                self.pool.unref([blk])
+                self._bt_dirty = True
+
+    def _retire_slot(self, i: int) -> None:
+        self.slots[i] = None
+        self._slot_len[i] = 0
+        if self.paged:
+            self._release_blocks(i)
+        if self._draft is not None:
+            self._draft.reset_slot(i)
+
+    def _spec_step(self) -> Optional[List[Tuple[Request, int]]]:
+        """One speculative iteration: propose per slot (n-gram table or
+        draft model), score the pending token plus all proposals in one
+        multi-query verify pass, commit the longest prefix bit-identical
+        to greedy plus the bonus token, and roll rejected tokens' pages
+        back through the pool.  Returns None when no slot can usefully
+        speculate this iteration (the caller falls back to a plain step —
+        same committed stream either way)."""
+        ecfg = self.ecfg
+        bsz = ecfg.max_batch
+        # the verify width is a static jit shape: one executable per
+        # s_len, and s_len only ranges over 2..spec_len+1.  Every row is
+        # written s_len tokens deep, so the width is capped by the
+        # tightest slot's remaining capacity (no wrap, see rollback).
+        room = min(ecfg.max_len - int(self._slot_len[i])
+                   for i, r in enumerate(self.slots) if r is not None)
+        s_len = min(ecfg.spec_len + 1, room)
+        if s_len < 2:
+            return None
+        kis: Dict[int, int] = {}
+        streams: Dict[int, List[int]] = {}
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            emit_budget = req.max_new_tokens - len(req.generated)
+            ki = min(s_len - 1, emit_budget - 1)
+            if ecfg.spec_adaptive:
+                ki = min(ki, int(self._spec_k[i]))
+            if ki <= 0:
+                continue
+            kis[i] = ki
+            streams[i] = [int(t) for t in req.prompt] \
+                + [int(t) for t in req.generated]
+        props: Dict[int, List[int]] = {}
+        g_from: Dict[int, int] = {}
+        n_steps = 0
+        if self._draft is not None:
+            scheds: Dict[int, List[int]] = {}
+            for i, stream in streams.items():
+                need = len(stream) - 1
+                deficit = need - int(self._draft.len[i])
+                if (deficit < 0 or deficit > 2 * ecfg.spec_len
+                        or self._draft.len[i] == 0):
+                    # fell too far behind (plain-decode interludes,
+                    # adopt/migration) — rebuild from the committed stream
+                    self._draft.prefill_slot(i, stream[:-1])
+                    deficit = 0
+                scheds[i] = stream[need - deficit:]   # catch-up + pending
+                g_from[i] = deficit
+            outs, n_steps = self._draft.run(scheds, s_len - 1, g_from)
+            props = {i: p[:kis[i]] for i, p in outs.items() if p[:kis[i]]}
+        else:
+            for i, stream in streams.items():
+                p = ngram_propose(stream, kis[i])
+                if p:
+                    props[i] = p
+        if not props:
+            return None
+        toks = np.zeros((bsz, s_len), np.int32)
+        toks[:, 0] = self.next_token
+        for i, p in props.items():
+            toks[i, 1:1 + len(p)] = p
+        fresh_by = self._prepare_pages(s_len)
+        # verify positions derive from the device lengths; re-pin them to
+        # the host mirror (a previous verify advanced them by its full
+        # width, committed or not)
+        self.cache["lengths"] = jnp.asarray(self._slot_len.astype(np.int32))
+        self.decode_iters += 1
+        logits, self.cache, _ = self._verify(
+            self.sparams, jnp.asarray(toks), cache=self.cache)
+        g = np.asarray(jnp.argmax(logits, axis=-1), np.int32)   # (B, s_len)
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if len(req.generated) >= req.max_new_tokens:
+                # budget already met at insert time: finish w/o emitting
+                req.advance(Phase.DONE)
+                finished.append((req, i))
+                self._retire_slot(i)
+                continue
+            p = props.get(i, [])
+            ki = len(p)
+            # longest proposal prefix bit-identical to greedy; g[i, a] is
+            # the verifier's own next token after the accepted prefix —
+            # the "bonus" every iteration commits (so min 1 token/iter)
+            a = 0
+            while a < ki and int(toks[i, 1 + a]) == int(g[i, a]):
+                a += 1
+            self.spec_proposed += ki
+            self.spec_accepted += a
+            req.spec_proposed += ki
+            req.spec_accepted += a
+            if ki and ecfg.spec_adaptive:
+                self._spec_ema[i] = 0.5 * self._spec_ema[i] + 0.5 * (a / ki)
+                self._spec_k[i] = 1 + int(round(
+                    self._spec_ema[i] * (ecfg.spec_len - 1)))
+            done = self._commit_slot(i, [int(t) for t in g[i, :a + 1]])
+            if done:
+                req.advance(Phase.DONE)
+                finished.append((req, i))
+                self._retire_slot(i)
+                continue
+            if self.paged:
+                self._rollback_pages(i, fresh_by.get(i, []))
+            if self._draft is not None and i in streams:
+                # resident draft prefix that matches the committed stream:
+                # everything it was force-fed plus the accepted proposals
+                # it consumed while drafting
+                fed = n_steps - g_from[i] - 1
+                self._draft.len[i] = len(streams[i]) + min(a, max(fed, 0))
+        # the verify advanced every row's device length by s_len; re-pin
+        # to the committed host lengths so the next step's positions and
+        # write offsets are exact
+        self.cache["lengths"] = jnp.asarray(self._slot_len.astype(np.int32))
+        return finished

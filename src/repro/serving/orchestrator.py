@@ -163,7 +163,8 @@ class Orchestrator(BackendBase):
     the same surface (and code) the simulator serves."""
 
     def __init__(self, cfg: ModelConfig, params,
-                 ocfg: OrchestratorConfig = OrchestratorConfig()):
+                 ocfg: OrchestratorConfig = OrchestratorConfig(),
+                 draft=None):
         if ocfg.n_prefill < 1 or ocfg.n_decode < 1:
             raise ValueError("fleet needs >=1 prefill and >=1 decode "
                              f"instance, got {ocfg.n_prefill}p/"
@@ -171,6 +172,9 @@ class Orchestrator(BackendBase):
         self.cfg = cfg
         self.params = params
         self.ocfg = ocfg
+        # two-model speculation: (draft ModelConfig, draft params), handed
+        # to every decode engine when engine.speculation == "draft"
+        self.draft = draft
         # engines bill Global-KV-Store fetches and queue-delay reports on
         # the fleet's hardware profile + prefill MFU (one scale with the
         # router's est_time_s bumps); an explicitly hw-configured engine
@@ -193,7 +197,8 @@ class Orchestrator(BackendBase):
         for i in range(ocfg.n_decode):
             if ocfg.decode_split == 1:
                 m = _Member(f"decode{i}", ROLE_DECODE)
-                m.decode = DecodeEngine(cfg, params, self.ecfg, name=m.name)
+                m.decode = DecodeEngine(cfg, params, self.ecfg, name=m.name,
+                                        draft=draft)
                 self.members.append(m)
                 continue
             # one pipeline of decode_split span stages, one member each
@@ -202,7 +207,8 @@ class Orchestrator(BackendBase):
             for j, span in enumerate(bounds):
                 m = _Member(f"decode{i}.{j}", ROLE_DECODE)
                 m.decode = DecodeEngine(cfg, params, self.ecfg,
-                                        name=m.name, layer_span=span)
+                                        name=m.name, layer_span=span,
+                                        draft=draft)
                 m.stage = j
                 stages.append(m)
                 self.members.append(m)
@@ -264,6 +270,10 @@ class Orchestrator(BackendBase):
         self._resume_of: Dict[int, tuple] = {}
         self._clone_rid = -1           # clones use negative rids
         self.swap_io_s = 0.0           # modelled host-tier swap traffic
+        # load-aware speculation routing: decode iterations billed at the
+        # speculative verification cost vs forced back to plain decode
+        self.spec_iters = 0
+        self.plain_iters = 0
         self._init_backend()     # _by_rid registry + admission_limit
 
     # -- fleet views -----------------------------------------------------
@@ -601,15 +611,54 @@ class Orchestrator(BackendBase):
                     return True
         return False
 
+    def _spec_capable(self, unit) -> bool:
+        """Can this unit run the speculative verify step at all?  Only
+        full-stack paged engines with speculation configured — span
+        pipelines and gated architectures decode plain regardless."""
+        return (self.ecfg.speculation != "off"
+                and isinstance(unit, DecodeEngine)
+                and getattr(unit, "_spec_ok", False))
+
+    def _accept_estimate(self, unit) -> float:
+        """Measured acceptance rate for the unit's proposer, optimistic
+        (0.8) until it has evidence — speculation gets tried at low load
+        and the observed rate then governs the routing decision."""
+        if unit.spec_proposed > 0:
+            return unit.spec_accepted / unit.spec_proposed
+        return 0.8
+
     def _kick_decode(self, unit) -> None:
         """Schedule one continuous-batching iteration for ``unit`` if it
         has work and none is in flight; cost = the analytical iteration
-        time for the real batch shape (Eq. 22)."""
+        time for the real batch shape (Eq. 22).
+
+        Load-aware speculation routing: when the unit can speculate, the
+        per-committed-token cost of a speculative iteration (verification
+        compute scales ~(k+1)x, bytes barely move) is compared against a
+        plain step at the unit's live batch and context.  Memory-bound
+        shapes (low batch) favour speculation; once the batch grows deep
+        enough that verification turns compute-bound, the unit is flipped
+        back to plain decode.  The flip is per-iteration and the engine's
+        ``spec_on`` gate makes the next ``step()`` obey it."""
         if unit is None or unit.name in self._unit_busy or unit.active == 0:
             return
         ctx = unit.kv_tokens // max(unit.active, 1)
         cost = A.decode_iter_time(self.cfg, max(ctx, 1), self.ocfg.hw,
                                   batch=unit.active)
+        if self._spec_capable(unit):
+            k = max(self.ecfg.spec_len, 1)
+            spec_cost = A.speculative_decode_iter_time(
+                self.cfg, max(ctx, 1), self.ocfg.hw, batch=unit.active,
+                k=k, draft_cfg=self.draft[0] if self.draft else None)
+            e_tok = A.speculative_tokens_per_iter(
+                k, self._accept_estimate(unit))
+            speculate = spec_cost / e_tok < cost
+            unit.spec_on = speculate
+            if speculate:
+                cost = spec_cost
+                self.spec_iters += 1
+            else:
+                self.plain_iters += 1
         self._unit_busy.add(unit.name)
         self.clock.push_in(cost, "decode_done",
                            (unit.name, self._epoch.get(unit.name, 0)))
@@ -732,10 +781,13 @@ class Orchestrator(BackendBase):
                     for r in unit.slots if r is not None]
         finished = [req for req, _slot in unit.step()]
         now = self.clock.now
+        self.metrics.decode_iters += 1
         for req, n0 in snapshot:
-            if len(req.generated) > n0:
-                # per-token stamp, kept monotonic per request (a hand-off's
-                # transfer latency may overlap this iteration)
+            # one stamp PER committed token (a speculative iteration can
+            # land several at once — they all become visible when the
+            # verify step's event completes), kept monotonic per request
+            # (a hand-off's transfer latency may overlap this iteration)
+            for _ in range(len(req.generated) - n0):
                 last = req.t_tokens[-1] if req.t_tokens else now
                 req.t_tokens.append(max(now, last))
         for req in finished:
@@ -921,7 +973,7 @@ class Orchestrator(BackendBase):
             member.prefill.queue.clear()
             member.prefill = None
             member.decode = DecodeEngine(self.cfg, self.params, self.ecfg,
-                                         name=member.name)
+                                         name=member.name, draft=self.draft)
             if self.prefix_sharing and member.decode.paged:
                 member.decode.attach_store(self.store)
         else:
@@ -989,6 +1041,10 @@ class Orchestrator(BackendBase):
             s["util_gap_after"] = float(
                 sum(g for _, g in self.control_trace)
                 / len(self.control_trace))
+        s["speculation"] = self.ecfg.speculation
+        if self.ecfg.speculation != "off":
+            s["spec_iters"] = self.spec_iters
+            s["spec_plain_iters"] = self.plain_iters
         s["handoffs"] = self.n_handoffs
         s["handoff_serial_s"] = self.handoff_serial_s
         s["handoff_overlap_s"] = self.handoff_overlap_s

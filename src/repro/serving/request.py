@@ -64,6 +64,11 @@ class Request:
     prefill_instance: Optional[str] = None
     decode_instance: Optional[str] = None
     cached_tokens: int = 0            # prefix tokens served from the store
+    # speculative decoding: proposals scored / accepted for THIS request
+    # (the verifier's bonus token is not counted — acceptance rate is the
+    # proposer's hit rate, not tokens-per-iteration)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     # timestamps
     t_prefill_start: Optional[float] = None
@@ -158,6 +163,8 @@ class TenantStats:
     n_preempted_swap: int = 0
     n_preempted_sacrifice: int = 0
     pages_swapped: int = 0            # KV pages demoted to the host tier
+    spec_proposed: int = 0            # speculative proposals scored
+    spec_accepted: int = 0            # of those, committed
 
     def summary(self, slo: Optional["SLO"], dur: float) -> dict:
         # undefined stats are None, never NaN: these dicts nest inside the
@@ -180,6 +187,10 @@ class TenantStats:
             "n_preempted_swap": self.n_preempted_swap,
             "n_preempted_sacrifice": self.n_preempted_sacrifice,
             "pages_swapped": self.pages_swapped,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "acceptance_rate": (self.spec_accepted / self.spec_proposed
+                                if self.spec_proposed else None),
         }
 
 
@@ -214,6 +225,12 @@ class Metrics:
     n_preempted_swap: int = 0
     n_preempted_sacrifice: int = 0
     pages_swapped: int = 0
+    # speculative decoding: jitted decode/verify iterations the backend
+    # ran (set by the backend from its engines/sim) and the global
+    # proposal/acceptance totals (folded in per terminal request)
+    decode_iters: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     def tenant(self, name: str) -> TenantStats:
         ts = self.per_tenant.get(name)
@@ -229,6 +246,7 @@ class Metrics:
         ts = self.tenant(r.tenant)
         ts.n_requests += 1
         ts.tokens_out += len(r.generated)
+        self._fold_spec(r, ts)
         if r.ttft is not None:
             self.ttfts.append(r.ttft)
             ts.ttfts.append(r.ttft)
@@ -256,7 +274,18 @@ class Metrics:
         r.outcome = Outcome.ABORTED
         self.n_aborted += 1
         self.aborted_tokens += len(r.generated)
-        self.tenant(r.tenant).n_aborted += 1
+        ts = self.tenant(r.tenant)
+        ts.n_aborted += 1
+        self._fold_spec(r, ts)
+
+    def _fold_spec(self, r: Request, ts: TenantStats):
+        """Fold a terminal request's speculation counters into the global
+        and per-tenant acceptance totals (tokens were committed either
+        way, so aborted requests count too)."""
+        self.spec_proposed += r.spec_proposed
+        self.spec_accepted += r.spec_accepted
+        ts.spec_proposed += r.spec_proposed
+        ts.spec_accepted += r.spec_accepted
 
     def record_preempted(self, r: Request, mode: str, pages: int = 0):
         """A decode-resident request lost its slot to the fair-share
@@ -314,6 +343,18 @@ class Metrics:
         s["n_preempted_swap"] = self.n_preempted_swap
         s["n_preempted_sacrifice"] = self.n_preempted_sacrifice
         s["pages_swapped"] = self.pages_swapped
+        # speculation visibility: tokens committed per jitted decode
+        # iteration (1.0 = plain decode; > 1 = speculation paying off) and
+        # the proposer's acceptance rate.  None (never NaN) when the
+        # backend ran no decode iterations / proposed nothing.
+        s["decode_iters"] = self.decode_iters
+        s["tokens_per_decode_iter"] = (
+            (self.tokens_out + self.aborted_tokens) / self.decode_iters
+            if self.decode_iters else None)
+        s["spec_proposed"] = self.spec_proposed
+        s["spec_accepted"] = self.spec_accepted
+        s["acceptance_rate"] = (self.spec_accepted / self.spec_proposed
+                                if self.spec_proposed else None)
         s["tenants"] = {t: ts.summary(self.slo, dur)
                         for t, ts in sorted(self.per_tenant.items())}
         return s

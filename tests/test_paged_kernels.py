@@ -30,7 +30,8 @@ from repro.kernels import ops
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.ref import (flash_prefill_reference,
                                paged_decode_attention_reference,
-                               paged_prefill_attention_reference)
+                               paged_prefill_attention_reference,
+                               paged_verify_attention_reference)
 from repro.models import transformer as T
 from repro.models.config import Family, ModelConfig
 from repro.models.quant import (dequantize_kv_page, quantize_kv_page,
@@ -145,6 +146,102 @@ def test_paged_decode_dead_entries_and_scratch_junk():
                                rtol=2e-5, atol=2e-5)
     # the all-masked row's partials must not poison the combine with NaNs
     assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# Multi-query verify kernel (speculative decoding's batched scorer)
+# ---------------------------------------------------------------------------
+
+def _verify_case(seed, b, h, kv, d, bs, nb_slot, s_len, quant=False):
+    """Like ``_paged_case`` but with S speculative queries per row at the
+    row's last S consecutive positions (lengths drawn >= S so every query
+    has real keys beneath it)."""
+    rng = np.random.default_rng(seed)
+    c = _paged_case(seed, b, h, kv, d, bs, nb_slot, quant=quant)
+    lengths = rng.integers(s_len, bs * nb_slot + 1, b)
+    tables = np.full((b, nb_slot), -1, np.int32)
+    pos_pages = np.asarray(rng.integers(0, bs * nb_slot,
+                                        (1 + b * nb_slot, bs)), np.int32)
+    nxt = 1
+    for row, n_tok in enumerate(lengths):
+        n_used = -(-int(n_tok) // bs)
+        for j in range(n_used):
+            tables[row, j] = nxt
+            page_pos = np.arange(j * bs, (j + 1) * bs)
+            page_pos[page_pos >= n_tok] = -1
+            pos_pages[nxt] = page_pos
+            nxt += 1
+    c["q"] = jnp.asarray(rng.normal(size=(b, s_len, h, d)), jnp.float32)
+    c["block_tables"] = jnp.asarray(tables)
+    c["pos_pages"] = jnp.asarray(pos_pages)
+    c["pos_q"] = jnp.asarray(lengths[:, None] - s_len
+                             + np.arange(s_len)[None, :], jnp.int32)
+    return c
+
+
+VERIFY_CASES = [
+    # b, h, kv, d, bs, nb, s_len, window, soft_cap, quant
+    (2, 4, 2, 32, 8, 6, 3, None, None, False),
+    (3, 8, 8, 64, 16, 4, 5, None, None, False),   # MHA-as-GQA
+    (2, 4, 1, 32, 8, 8, 4, None, None, False),    # MQA
+    (2, 4, 2, 32, 8, 6, 3, 12, None, False),      # sliding window
+    (2, 8, 2, 64, 16, 4, 4, None, 30.0, False),   # soft cap
+    (2, 4, 2, 32, 8, 6, 3, None, None, True),     # int8 pages
+]
+
+
+@pytest.mark.parametrize("b,h,kv,d,bs,nb,s,win,cap,quant", VERIFY_CASES)
+def test_paged_verify_vs_oracle(b, h, kv, d, bs, nb, s, win, cap, quant):
+    """Each of the S queries must equal an independent single-token decode
+    at its own position — the exactness the accept-longest-prefix rule
+    rests on."""
+    c = _verify_case(10, b, h, kv, d, bs, nb, s, quant=quant)
+    scales = ({"k_scale_pages": c["k_scale_pages"],
+               "v_scale_pages": c["v_scale_pages"]} if quant else {})
+    out = ops.paged_verify_attention(c["q"], c["k_pages"], c["v_pages"],
+                                     c["pos_pages"], c["block_tables"],
+                                     c["pos_q"], window=win, soft_cap=cap,
+                                     interpret=True, **scales)
+    ref = paged_verify_attention_reference(
+        c["q"], c["k_pages"], c["v_pages"], c["pos_pages"],
+        c["block_tables"], c["pos_q"], window=win, soft_cap=cap, **scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_verify_dead_entries_finite():
+    """A row with an all-dead table (clamped to the poisoned scratch page)
+    must stay finite through the per-query combines."""
+    b, h, kv, d, bs, nb, s = 2, 4, 2, 32, 8, 4, 3
+    c = _verify_case(11, b, h, kv, d, bs, nb, s)
+    tables = np.asarray(c["block_tables"]).copy()
+    tables[1] = -1
+    out = ops.paged_verify_attention(c["q"], c["k_pages"], c["v_pages"],
+                                     c["pos_pages"], jnp.asarray(tables),
+                                     c["pos_q"], interpret=True)
+    ref = paged_verify_attention_reference(
+        c["q"], c["k_pages"], c["v_pages"], c["pos_pages"],
+        jnp.asarray(tables), c["pos_q"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_paged_verify_width_one_matches_decode():
+    """S=1 verify degenerates to the single-query decode kernel (same
+    partials, same combine) — the fallback equivalence the engine's
+    dispatch relies on."""
+    b, h, kv, d, bs, nb = 2, 4, 2, 32, 8, 6
+    c = _verify_case(12, b, h, kv, d, bs, nb, 1)
+    out = ops.paged_verify_attention(c["q"], c["k_pages"], c["v_pages"],
+                                     c["pos_pages"], c["block_tables"],
+                                     c["pos_q"], interpret=True)
+    one = ops.paged_decode_attention(c["q"][:, 0], c["k_pages"],
+                                     c["v_pages"], c["pos_pages"],
+                                     c["block_tables"], c["pos_q"][:, 0],
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(one),
+                               rtol=2e-6, atol=2e-6)
 
 
 PREFILL_CASES = [
