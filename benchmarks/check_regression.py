@@ -6,11 +6,16 @@ tolerance (default 10%) prints a GitHub Actions ``::warning::``
 annotation.  Structural keys (``wall_seconds``, ``smoke``, ``bench``)
 and counter-style exact metrics are still compared — a changed page
 count or token total is exactly the kind of silent behaviour drift the
-baselines exist to catch.  The checker always exits 0: smoke timings on
-shared CI runners are noisy, so regressions warn rather than gate.
+baselines exist to catch.  By default the checker always exits 0: smoke
+timings on shared CI runners are noisy, so regressions warn rather than
+gate.  ``--fail-on`` names artifacts whose metrics are *deterministic*
+(pure virtual-clock simulations — no wall-clock noise): drift beyond
+tolerance there is a real behaviour change and hard-fails CI, as does a
+missing fresh artifact for a gated name.
 
     python benchmarks/check_regression.py --current bench-artifacts \
-        [--baselines benchmarks/baselines] [--tolerance 0.10]
+        [--baselines benchmarks/baselines] [--tolerance 0.10] \
+        [--fail-on scheduler,autoscale]
 """
 import argparse
 import json
@@ -54,32 +59,45 @@ def main() -> int:
     ap.add_argument("--baselines",
                     default=str(pathlib.Path(__file__).parent / "baselines"))
     ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--fail-on", default="", metavar="NAMES",
+                    help="comma-separated artifact stems (scheduler,"
+                         "autoscale,...) whose drift — or missing fresh "
+                         "artifact — exits 1 instead of warning")
     args = ap.parse_args()
+    gated = {s.strip() for s in args.fail_on.split(",") if s.strip()}
 
-    n_checked = n_drift = 0
+    n_checked = n_drift = n_fail = 0
     for base_path in sorted(pathlib.Path(args.baselines).glob("BENCH_*.json")):
+        stem = base_path.name[len("BENCH_"):-len(".json")]
+        hard = stem in gated
+        sev = "error" if hard else "warning"
         cur_path = pathlib.Path(args.current) / base_path.name
         if not cur_path.exists():
-            print(f"::warning::{base_path.name}: no fresh artifact to "
+            print(f"::{sev}::{base_path.name}: no fresh artifact to "
                   f"compare (looked in {args.current})")
+            n_fail += hard
             continue
         baseline = json.loads(base_path.read_text())
         current = json.loads(cur_path.read_text())
         drifted = list(compare(baseline, current, args.tolerance))
         n_checked += 1
         n_drift += len(drifted)
+        n_fail += len(drifted) if hard else 0
         for path, b, c, rel in drifted:
-            print(f"::warning file=benchmarks/baselines/{base_path.name}::"
+            print(f"::{sev} file=benchmarks/baselines/{base_path.name}::"
                   f"{base_path.name}:{path} moved {rel:+.1%} "
                   f"(baseline {b:.6g} -> current {c:.6g})")
         status = f"{len(drifted)} drifted" if drifted else "ok"
         print(f"{base_path.name}: {status} "
-              f"(tolerance {args.tolerance:.0%})")
+              f"(tolerance {args.tolerance:.0%}"
+              f"{', gating' if hard else ''})")
     if n_checked == 0:
         print("::warning::no baselines compared — check paths")
     print(f"checked {n_checked} artifact(s), {n_drift} metric(s) "
-          f"beyond tolerance")
-    return 0          # warn-only: smoke timings on CI runners are noisy
+          f"beyond tolerance, {n_fail} gating")
+    # warn-only by default (smoke timings on CI runners are noisy);
+    # deterministic artifacts named in --fail-on gate the build
+    return 1 if n_fail else 0
 
 
 if __name__ == "__main__":

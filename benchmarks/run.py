@@ -18,7 +18,7 @@ import pathlib
 import sys
 import time
 
-from . import (bench_attention, bench_chunked_prefill,
+from . import (bench_attention, bench_autoscale, bench_chunked_prefill,
                bench_decode_attention, bench_layer_span, bench_migration,
                bench_orchestrator, bench_paged_handoff, bench_pipeline,
                bench_prefix_reuse, bench_quant_kv, bench_scheduler,
@@ -28,6 +28,7 @@ ALL = {
     "pipeline": bench_pipeline,       # Fig. 6 / Eq. 12-17
     "migration": bench_migration,     # Eq. 4 / Eq. 11
     "scheduler": bench_scheduler,     # FIFO vs WFQ flood-vs-interactive A/B
+    "autoscale": bench_autoscale,     # elastic vs static diurnal A/B
     "orchestrator": bench_orchestrator,  # Fig. 2a live, time-domain + SLOs
     "paged_handoff": bench_paged_handoff,  # block moves vs row surgery
     "prefix_reuse": bench_prefix_reuse,  # shared vs copy vs recompute

@@ -8,7 +8,8 @@ benefit/cost evaluation, and (c) the roofline report's MODEL_FLOPS terms.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+import functools
+from typing import Dict, Optional, Sequence, Tuple
 
 from ..models.config import ModelConfig
 
@@ -22,6 +23,17 @@ class HardwareProfile:
     net_bw: float                # inter-device bytes/s (NVLink/ICI)
     host_bw: float               # device<->host bytes/s (PCIe/DMA)
 
+    def __post_init__(self):
+        # profiles key every lru-cached cost function; precompute the hash
+        # instead of re-tupling six fields per cache lookup (hot in
+        # 10^5-event simulation runs)
+        object.__setattr__(self, "_hash", hash(
+            (self.name, self.peak_flops, self.hbm_bw, self.hbm_bytes,
+             self.net_bw, self.host_bw)))
+
+    def __hash__(self) -> int:
+        return self._hash
+
     @property
     def ridge_intensity(self) -> float:
         return self.peak_flops / self.hbm_bw
@@ -30,6 +42,41 @@ class HardwareProfile:
 # TPU v5e per the task hardware constants; A100 for paper-setting sanity.
 TPU_V5E = HardwareProfile("tpu_v5e", 197e12, 819e9, 16 << 30, 50e9, 25e9)
 A100_80G = HardwareProfile("a100_80g", 312e12, 2039e9, 80 << 30, 300e9, 25e9)
+# Heterogeneous-fleet parts: v5p is absolutely faster at everything but
+# *comparatively* strongest at memory-bound decode (3.4x the HBM bandwidth
+# of v5e vs 2.3x the FLOPs), v4 sits between — so a co-optimizing router /
+# autoscaler lands decode on v5p and prefill per FLOP-per-dollar.
+TPU_V5P = HardwareProfile("tpu_v5p", 459e12, 2765e9, 95 << 30, 100e9, 32e9)
+TPU_V4 = HardwareProfile("tpu_v4", 275e12, 1228e9, 32 << 30, 50e9, 16e9)
+
+PROFILES: Dict[str, HardwareProfile] = {
+    p.name: p for p in (TPU_V5E, TPU_V5P, TPU_V4, A100_80G)}
+
+
+@functools.lru_cache(maxsize=None)
+def model_consts(cfg: ModelConfig) -> Tuple[float, int, float]:
+    """Memoized per-config constants for the hot cost paths:
+    ``(active_params, n_attention_blocks, total_params)``.
+
+    ``ModelConfig`` is frozen/hashable; the block scan and parameter sums
+    are pure in it, and the event-driven simulator calls the cost model
+    per event — at 10^5 requests the uncached scans dominate the sim's
+    own runtime, so they are computed once per config here."""
+    n_attn = sum(1 for b in cfg.blocks()
+                 if b.value in ("attention", "local_attn"))
+    return cfg.active_param_count(), n_attn, cfg.param_count()
+
+
+def instance_warmup_time(cfg: ModelConfig, hw: HardwareProfile,
+                         jit_compile_s: float = 2.0,
+                         dtype_bytes: Optional[int] = None) -> float:
+    """Virtual-clock cost of bringing a fresh instance into service:
+    stream the full weight set host->device at the part's DMA bandwidth,
+    then pay the jit-compile/tracing cost before the first real batch.
+    The autoscaler bills this on scale-up — a new instance takes no
+    traffic until ``now + instance_warmup_time(...)``."""
+    weight_bytes = model_consts(cfg)[2] * (dtype_bytes or 2)
+    return weight_bytes / hw.host_bw + max(jit_compile_s, 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -38,11 +85,10 @@ A100_80G = HardwareProfile("a100_80g", 312e12, 2039e9, 80 << 30, 300e9, 25e9)
 
 def prefill_flops(cfg: ModelConfig, seq_len: int, batch: int = 1) -> float:
     """~2·N_active FLOPs/token for matmuls + attention quadratic term."""
-    n = cfg.active_param_count()
+    n, n_attn, _ = model_consts(cfg)
     flops = 2.0 * n * seq_len * batch
     # attention score/value FLOPs: 2 * 2 * S^2 * H * Dh per layer (causal /2)
     kv_len = cfg.kv_cache_len(seq_len)
-    n_attn = sum(1 for b in cfg.blocks() if b.value in ("attention", "local_attn"))
     flops += batch * n_attn * 2 * 2 * seq_len * min(seq_len, kv_len) \
         * cfg.n_heads * cfg.head_dim * 0.5
     return flops
@@ -55,11 +101,9 @@ def suffix_prefill_flops(cfg: ModelConfig, prompt_len: int,
     attention term with suffix x full context."""
     cached = max(min(cached_tokens, prompt_len), 0)
     s = prompt_len - cached
-    n = cfg.active_param_count()
+    n, n_attn, _ = model_consts(cfg)
     flops = 2.0 * n * s * batch
     kv_len = cfg.kv_cache_len(prompt_len)
-    n_attn = sum(1 for b in cfg.blocks()
-                 if b.value in ("attention", "local_attn"))
     flops += batch * n_attn * 2 * 2 * s * min(prompt_len, kv_len) \
         * cfg.n_heads * cfg.head_dim * 0.5
     return flops
@@ -77,10 +121,9 @@ def prefix_reuse_flops_saved(cfg: ModelConfig, prompt_len: int,
 
 
 def decode_flops_per_token(cfg: ModelConfig, context: int, batch: int = 1) -> float:
-    n = cfg.active_param_count()
+    n, n_attn, _ = model_consts(cfg)
     flops = 2.0 * n * batch
     kv_len = cfg.kv_cache_len(context)
-    n_attn = sum(1 for b in cfg.blocks() if b.value in ("attention", "local_attn"))
     flops += batch * n_attn * 2 * 2 * kv_len * cfg.n_heads * cfg.head_dim
     return flops
 
@@ -93,7 +136,7 @@ def decode_bytes_per_token(cfg: ModelConfig, context: int, batch: int = 1,
     format — int8 caches (``kv_quant``) read ~half the bytes — while
     weights stay bf16.  An explicit value overrides both (what-if sweeps).
     """
-    weight_bytes = cfg.active_param_count() * (dtype_bytes or 2)
+    weight_bytes = model_consts(cfg)[0] * (dtype_bytes or 2)
     kv = cfg.kv_bytes_per_token(dtype_bytes) * cfg.kv_cache_len(context) * batch
     return weight_bytes + kv
 

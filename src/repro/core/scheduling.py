@@ -24,6 +24,9 @@ class InstanceLoad:
     # modelled seconds until this instance's queue drains — the virtual-
     # clock queue-delay signal TTFT-aware routing keys on
     queue_delay_s: float = 0.0
+    # probability-like score in [0, 1] that placing one more request here
+    # evicts a resident (decode slots full / scheduler would pick_victim)
+    preempt_risk: float = 0.0
     # baseline-router signal only:
     cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
         default_factory=dict)
@@ -58,11 +61,15 @@ class LoadReport:
     fractions are already scaled by the span's share of the stack, so span
     stages and full instances compare on one utilization axis (§4.1).
     ``queue_delay_s`` is the engine's modelled backlog-drain time (virtual
-    seconds) — the TTFT term queue-delay-aware routing minimizes."""
+    seconds) — the TTFT term queue-delay-aware routing minimizes.
+    ``preempt_risk`` in [0, 1] flags targets where accepting one more
+    request would evict a resident (PR 8 frontier: preemption-aware
+    routing steers work away from such instances when peers have room)."""
     compute_frac: float
     memory_frac: float
     queue_len: int
     queue_delay_s: float = 0.0
+    preempt_risk: float = 0.0
     cached_prefix_tokens: Dict[bytes, int] = dataclasses.field(
         default_factory=dict)
     layer_span: Optional[Tuple[int, int]] = None
@@ -90,7 +97,7 @@ def live_instance_loads(engines: Sequence[ReportsLoad]) -> List[InstanceLoad]:
         r = e.load_report()
         out.append(InstanceLoad(
             name=e.name, load=r.load, queue_len=r.queue_len,
-            queue_delay_s=r.queue_delay_s,
+            queue_delay_s=r.queue_delay_s, preempt_risk=r.preempt_risk,
             cached_prefix_tokens=dict(r.cached_prefix_tokens)))
     return out
 
@@ -98,23 +105,48 @@ def live_instance_loads(engines: Sequence[ReportsLoad]) -> List[InstanceLoad]:
 class LoadAwareRouter:
     """Algorithm 2: least-loaded first; past δ_L, lowest queue delay.
 
-    Queue-delay awareness: ties in utilization break on the modelled
-    backlog-drain time (then queue length), and each dispatch bumps the
-    target's ``queue_delay_s`` by the request's modelled service time —
-    so a burst spreads by *expected TTFT*, not just by request count."""
+    Queue-delay awareness: utilization is ranked in coarse bands (a
+    float EMA never ties exactly, which would starve the tie-break), and
+    within a band the modelled backlog-drain time decides (then queue
+    length).  Each dispatch bumps the target's ``queue_delay_s`` by the
+    request's modelled service time — so a burst spreads by *expected
+    TTFT*, not just by request count.  Because the backlog is priced on
+    each instance's own roofline, this is where a heterogeneous fleet's
+    fast parts attract more than an equal share of work.
 
-    def __init__(self, load_threshold: float = 1.6):
+    Preemption awareness: ``preempt_penalty`` adds a rank penalty of
+    ``penalty * preempt_risk`` utilization points to instances where
+    placing the request would evict a resident, so work lands on peers
+    with free room first and only falls back to eviction when the whole
+    fleet is at risk (penalty shifts rank uniformly, so the saturated
+    tie-break is unaffected)."""
+
+    def __init__(self, load_threshold: float = 1.6,
+                 preempt_penalty: float = 0.0):
         self.delta_l = load_threshold
+        self.preempt_penalty = preempt_penalty
+
+    # utilization band width: differences smaller than this are EMA
+    # noise, not signal — defer to the modelled queue delay instead
+    LOAD_BAND = 0.25
+
+    def _rank(self, p: InstanceLoad) -> Tuple[int, float, int, float]:
+        load = p.load + self.preempt_penalty * p.preempt_risk
+        # raw load last: when delay and queue length both tie (an idle
+        # fleet, where they are all zero), fine-grained utilization must
+        # still spread work or every request lands on the first instance
+        return (int(load / self.LOAD_BAND), p.queue_delay_s, p.queue_len,
+                load)
 
     def dispatch(self, reqs: Sequence[RequestInfo],
                  instances: List[InstanceLoad]) -> Dict[int, str]:
         plan: Dict[int, str] = {}
-        # Step 2: sort by (load, queue delay, queue)
-        cands = sorted(instances,
-                       key=lambda p: (p.load, p.queue_delay_s, p.queue_len))
+        # Step 2/3: least by (load + preempt penalty, queue delay, queue)
+        # per request — min() is stable like the sort it replaces, and the
+        # single-request case (every simulator arrival) stays O(|P|)
+        cands = list(instances)
         for req in reqs:                      # Step 3: dispatch loop
-            cands.sort(key=lambda p: (p.load, p.queue_delay_s, p.queue_len))
-            target = cands[0]
+            target = min(cands, key=self._rank)
             if target.load >= self.delta_l:
                 # every candidate saturated: minimize added queueing delay
                 target = min(cands,

@@ -121,11 +121,28 @@ def main() -> None:
                          "(live: exact verify on the paged KV; sim: "
                          "analytical twin); 'draft' uses the arch's smoke "
                          "shrink as the draft model")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="SLO-driven elastic prefill/decode tiers: scale-up "
+                         "bills warm-up on the virtual clock, scale-down "
+                         "drains in-flight requests before retiring")
+    ap.add_argument("--profiles", default=None, metavar="P1,P2",
+                    help="hardware menu for autoscaled instances, e.g. "
+                         "tpu_v5e,tpu_v5p (see core.analytical.PROFILES); "
+                         "decode orders land on the highest-HBM-bw part, "
+                         "prefill on the highest-FLOPs part")
     args = ap.parse_args()
 
     backend, wl, tscale = (_build_live if args.backend == "live"
                            else _build_sim)(args)
-    server = Server(backend, admission_limit=args.admission_limit)
+    autoscaler = None
+    if args.autoscale:
+        from ..core import analytical as A
+        from ..serving.autoscale import AutoscaleConfig
+        menu = (tuple(A.PROFILES[p] for p in args.profiles.split(","))
+                if args.profiles else None)
+        autoscaler = AutoscaleConfig(profiles=menu)
+    server = Server(backend, admission_limit=args.admission_limit,
+                    autoscaler=autoscaler)
     print(f"fleet: {server.fleet}")
 
     def pump() -> None:
@@ -171,6 +188,9 @@ def main() -> None:
               f"acceptance={'n/a' if acc is None else f'{acc:.2f}'}  "
               f"spec_iters={s.get('spec_iters', 0)} "
               f"plain_iters={s.get('spec_plain_iters', 0)}")
+    if args.autoscale:
+        print(f"autoscale: {s.get('autoscale_decisions', 0)} decisions, "
+              f"{s.get('n_retired', 0)} instances retired")
     print(f"fleet now: {server.fleet}")
 
 

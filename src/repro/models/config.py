@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -82,14 +83,27 @@ class ModelConfig:
         assert self.n_heads % max(self.n_kv_heads, 1) == 0, (
             f"{self.name}: n_heads {self.n_heads} not divisible by "
             f"n_kv_heads {self.n_kv_heads}")
+        # the config keys every lru-cached cost function in core/analytical;
+        # recomputing the generated field-tuple hash per lookup shows up in
+        # 10^5-event simulation profiles, so compute it once
+        object.__setattr__(self, "_hash", hash(tuple(
+            getattr(self, f.name) for f in dataclasses.fields(self))))
+
+    def __hash__(self) -> int:
+        return self._hash
 
     # -- derived -------------------------------------------------------
     @property
     def q_per_kv(self) -> int:
         return self.n_heads // max(self.n_kv_heads, 1)
 
+    @functools.lru_cache(maxsize=None)
     def blocks(self) -> Tuple[BlockKind, ...]:
-        """The per-layer block kinds, pattern tiled out to n_layers."""
+        """The per-layer block kinds, pattern tiled out to n_layers.
+
+        Memoized (the config is frozen/hashable): the analytical cost
+        model calls this per simulator event, and at 10^5-request fleet
+        scale the repeated tuple tiling dominates the sim's own runtime."""
         pat = self.block_pattern
         reps = math.ceil(self.n_layers / len(pat))
         return tuple((pat * reps)[: self.n_layers])
@@ -110,6 +124,7 @@ class ModelConfig:
         return all(b != BlockKind.ATTENTION for b in self.blocks()) or (
             self.sliding_window is not None)
 
+    @functools.lru_cache(maxsize=None)
     def kv_cache_len(self, seq_len: int) -> int:
         """Physical KV-cache length for attention blocks at context seq_len."""
         windows = [self.local_window] * any(
@@ -123,6 +138,7 @@ class ModelConfig:
         return seq_len
 
     # -- parameter counting (for roofline / migration cost models) ------
+    @functools.lru_cache(maxsize=None)
     def param_count(self) -> int:
         d, hd = self.d_model, self.head_dim
         n_q, n_kv = self.n_heads, self.n_kv_heads
@@ -159,6 +175,7 @@ class ModelConfig:
                 self.d_model * self.n_experts  # router
         return 3 * self.d_model * self.d_ff    # gated MLP (gate, up, down)
 
+    @functools.lru_cache(maxsize=None)
     def active_param_count(self) -> int:
         """Params touched per token (MoE: only top_k experts active)."""
         if self.n_experts == 0:
@@ -187,6 +204,7 @@ class ModelConfig:
             dtype_bytes = 2
         return self.n_kv_heads * self.head_dim * 2 * dtype_bytes
 
+    @functools.lru_cache(maxsize=None)
     def kv_bytes_per_token(self, dtype_bytes: Optional[int] = None) -> int:
         n_attn = sum(1 for b in self.blocks()
                      if b in (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION))

@@ -39,6 +39,7 @@ import dataclasses
 import math
 from typing import (Any, Dict, List, Optional, Protocol, Sequence, Set)
 
+from .autoscale import (AutoscaleConfig, FleetSignals, SLOAutoscaler)
 from .clock import VirtualClock
 from .fairshare import FairShareScheduler, SchedulerConfig
 from .request import Metrics, Outcome, Phase, Request
@@ -159,6 +160,11 @@ class BackendBase:
         # ``Server(scheduler=...)``): orders the central queue, enforces
         # per-tenant budgets, and selects preemption victims
         self.scheduler: Optional[FairShareScheduler] = None
+        # SLO-driven autoscaler (set via ``set_autoscaler`` /
+        # ``Server(autoscaler=...)``): ticked from the backend's control
+        # loop, scales the prefill/decode tiers via the subclass hooks
+        self.autoscaler: Optional[SLOAutoscaler] = None
+        self._slo_window = (0, 0)        # (n_slo_ok, n_accountable) mark
 
     def set_scheduler(self, sched) -> None:
         """Install a fair-share scheduler (a ``SchedulerConfig`` or a
@@ -166,6 +172,73 @@ class BackendBase:
         if isinstance(sched, SchedulerConfig):
             sched = FairShareScheduler(sched)
         self.scheduler = sched
+
+    def set_autoscaler(self, policy) -> None:
+        """Install an SLO-driven autoscaler (an ``AutoscaleConfig`` or a
+        prebuilt ``SLOAutoscaler``); None removes it.  The policy is
+        ticked at the backend's control cadence and acts through the
+        backend's scale-up (billed warm-up) / scale-down (drain via
+        extract-adopt) hooks."""
+        if isinstance(policy, AutoscaleConfig):
+            policy = SLOAutoscaler(policy)
+        self.autoscaler = policy
+        if policy is not None:
+            self._record_fleet()
+
+    # -- autoscaling: policy above, mechanism in the subclass --------------
+    def _autoscale_signals(self) -> FleetSignals:
+        """Subclass hook: the tier load snapshot the policy plans from."""
+        raise NotImplementedError
+
+    def _scale_up(self, role: str, profile=None) -> Optional[str]:
+        """Subclass hook: order one ``role`` instance (optionally on a
+        specific ``HardwareProfile``).  Bills warm-up on the virtual
+        clock; returns the new instance's name (None = refused)."""
+        raise NotImplementedError
+
+    def _scale_down(self, role: str) -> bool:
+        """Subclass hook: start draining one ``role`` instance (in-flight
+        work migrates token-identically; the instance retires once
+        empty).  Returns False when no instance is eligible."""
+        raise NotImplementedError
+
+    def _fleet_counts(self) -> Dict[str, int]:
+        """Subclass hook: provisioned-instance composition for the fleet
+        timeline, e.g. {"prefill": 3, "decode": 5, "warming": 1,
+        "draining": 0}."""
+        raise NotImplementedError
+
+    def _record_fleet(self) -> None:
+        self.metrics.record_fleet(self.clock.now, self._fleet_counts())
+
+    def _recent_attainment(self) -> Optional[float]:
+        """SLO attainment since the last autoscale decision round (None
+        when no SLO is configured or nothing turned terminal)."""
+        if self.metrics.slo is None:
+            return None
+        ok = self.metrics.n_slo_ok
+        n = self.metrics.n_requests + self.metrics.n_rejected
+        ok0, n0 = self._slo_window
+        self._slo_window = (ok, n)
+        return (ok - ok0) / (n - n0) if n > n0 else None
+
+    def _autoscale_tick(self) -> None:
+        """Run one policy round (subclasses call this from their control
+        event).  Rate-limited by the policy's own interval/cooldowns."""
+        pol = self.autoscaler
+        if pol is None or not pol.due(self.clock.now):
+            return
+        sig = self._autoscale_signals()
+        sig.slo_attainment = self._recent_attainment()
+        changed = False
+        for d in pol.plan(sig):
+            for _ in range(d.delta):
+                changed = (self._scale_up(d.role, d.profile)
+                           is not None) or changed
+            for _ in range(-d.delta):
+                changed = self._scale_down(d.role) or changed
+        if changed:
+            self._record_fleet()
 
     def _sched_done(self, req: Request) -> None:
         """Report a terminal request to the scheduler so the tenant's
@@ -288,6 +361,14 @@ class ServingBackend(Protocol):
         the central queue; ``None`` restores plain FIFO."""
         ...
 
+    def set_autoscaler(self, policy) -> None:
+        """Install an SLO-driven autoscaler (an
+        ``autoscale.SLOAutoscaler`` or ``AutoscaleConfig``) that scales
+        the prefill/decode tiers at control-tick cadence — scale-up
+        bills warm-up on the virtual clock, scale-down drains
+        token-identically; ``None`` pins the fleet static."""
+        ...
+
     def submit(self, req: Request, at: Optional[float] = None
                ) -> StreamHandle:
         """Admit ``req`` as an arrival event at virtual time ``at``
@@ -339,16 +420,26 @@ class Server:
     one): weighted-fair queue ordering ahead of the central queue,
     per-tenant budget rejections, and optional swap/sacrifice decode
     preemption.  ``None`` (the default) keeps plain FIFO behaviour.
+
+    ``autoscaler`` installs an SLO-driven fleet autoscaler
+    (``autoscale.SLOAutoscaler`` or an ``AutoscaleConfig`` to build
+    one): the prefill/decode tiers grow on queue-delay pressure (new
+    instances pay billed warm-up before taking traffic) and shrink by
+    token-identical drains when idle and attaining.  ``None`` (the
+    default) keeps the fleet static.
     """
 
     def __init__(self, backend: ServingBackend,
                  admission_limit: Optional[int] = None,
-                 scheduler: Optional[object] = None):
+                 scheduler: Optional[object] = None,
+                 autoscaler: Optional[object] = None):
         self.backend = backend
         if admission_limit is not None:
             backend.admission_limit = admission_limit
         if scheduler is not None:
             backend.set_scheduler(scheduler)
+        if autoscaler is not None:
+            backend.set_autoscaler(autoscaler)
         self.handles: Dict[int, StreamHandle] = {}
         self._open: Set[int] = set()     # admitted, not yet terminal
         backend.start()

@@ -98,6 +98,13 @@ class OrchestratorConfig:
     controller: ControllerConfig = ControllerConfig(
         delta_up=0.5, delta_down=0.25, rho=0.5, max_actions_per_cycle=2)
     hw: A.HardwareProfile = A.TPU_V5E
+    # heterogeneous fleets: per-member profiles cycled over the initial
+    # fleet (prefill members first, then decode).  None = homogeneous
+    # ``hw``.  Each member's event costs, store-fetch overlap and
+    # queue-delay reports are billed on its OWN part, so the router and
+    # the autoscaler see (and exploit) the speed difference.  Span
+    # pipelines stay on the fleet default (one pipeline = one part).
+    hw_profiles: Optional[tuple] = None
     prefill_chunk: int = 4         # max requests per prefill batch
     # chunked prefill: max prompt tokens one row computes per wave (None =
     # one-shot).  Smaller chunks -> decode interleaves sooner behind long
@@ -125,9 +132,13 @@ class _Member:
     Token counters live here (not on the engine) so they survive re-rolls.
     """
 
-    def __init__(self, name: str, role: str):
+    def __init__(self, name: str, role: str,
+                 hw: Optional[A.HardwareProfile] = None):
         self.name = name
         self.role = role
+        self.hw = hw                   # this part's roofline (None = fleet)
+        self.warming_until = 0.0       # autoscaled: no traffic before
+        self.draining = False          # autoscaled: no NEW work; retires
         self.prefill: Optional[PrefillEngine] = None
         self.decode: Optional[DecodeEngine] = None
         self.pipe: Optional[DecodePipeline] = None
@@ -189,16 +200,17 @@ class Orchestrator(BackendBase):
             raise ValueError(f"decode_split {ocfg.decode_split} must be in "
                              f"[1, {cfg.n_layers}]")
         self.members: List[_Member] = []
+        self._hw_seq = 0
         for i in range(ocfg.n_prefill):
-            m = _Member(f"prefill{i}", ROLE_PREFILL)
-            m.prefill = self._new_prefill(m.name)
+            m = _Member(f"prefill{i}", ROLE_PREFILL, hw=self._next_hw())
+            m.prefill = self._new_prefill(m.name, m.hw)
             self.members.append(m)
         self.decode_pipes: List[DecodePipeline] = []
         for i in range(ocfg.n_decode):
             if ocfg.decode_split == 1:
-                m = _Member(f"decode{i}", ROLE_DECODE)
-                m.decode = DecodeEngine(cfg, params, self.ecfg, name=m.name,
-                                        draft=draft)
+                m = _Member(f"decode{i}", ROLE_DECODE, hw=self._next_hw())
+                m.decode = DecodeEngine(cfg, params, self._ecfg_for(m.hw),
+                                        name=m.name, draft=draft)
                 self.members.append(m)
                 continue
             # one pipeline of decode_split span stages, one member each
@@ -274,14 +286,38 @@ class Orchestrator(BackendBase):
         # speculative verification cost vs forced back to plain decode
         self.spec_iters = 0
         self.plain_iters = 0
+        self.retired: List[_Member] = []    # drained-down members
+        self._scale_seq = 0                 # autoscaled-member naming
         self._init_backend()     # _by_rid registry + admission_limit
 
     # -- fleet views -----------------------------------------------------
-    def _new_prefill(self, name: str) -> PrefillEngine:
+    def _next_hw(self) -> A.HardwareProfile:
+        hw = (self.ocfg.hw_profiles[self._hw_seq % len(self.ocfg.hw_profiles)]
+              if self.ocfg.hw_profiles else self.ocfg.hw)
+        self._hw_seq += 1
+        return hw
+
+    def _member_hw(self, m: Optional[_Member]) -> A.HardwareProfile:
+        return m.hw if m is not None and m.hw is not None else self.ocfg.hw
+
+    def _ecfg_for(self, hw: Optional[A.HardwareProfile]) -> EngineConfig:
+        """The fleet engine config rebased onto one member's part, so the
+        engine's store-fetch overlap and queue-delay reports price its
+        own roofline."""
+        if hw is None or hw is self.ecfg.hw:
+            return self.ecfg
+        return dataclasses.replace(self.ecfg, hw=hw)
+
+    def _new_prefill(self, name: str,
+                     hw: Optional[A.HardwareProfile] = None) -> PrefillEngine:
         store = self.store if self.store is not None else \
             GlobalKVStore(block_size=self.ecfg.block_size)
-        return PrefillEngine(self.cfg, self.params, self.ecfg, store,
-                             name=name)
+        return PrefillEngine(self.cfg, self.params, self._ecfg_for(hw),
+                             store, name=name)
+
+    def _serving_member(self, m: _Member) -> bool:
+        """Eligible for NEW work: warmed up and not draining."""
+        return m.warming_until <= self.clock.now and not m.draining
 
     def prefill_members(self) -> List[_Member]:
         return [m for m in self.members if m.role == ROLE_PREFILL]
@@ -308,6 +344,13 @@ class Orchestrator(BackendBase):
             else unit.name
         return self._by_name[name]
 
+    def _placeable_units(self) -> List:
+        """Decode units that may take NEW residents: their member is
+        warmed up and not draining.  Warming/draining units still run
+        the iterations for whatever they already hold."""
+        return [u for u in self.decode_units()
+                if self._serving_member(self._unit_member(u))]
+
     def _unit_by_name(self, name: str):
         for u in self.decode_units():
             if u.name == name:
@@ -316,7 +359,15 @@ class Orchestrator(BackendBase):
 
     @property
     def fleet(self) -> Dict[str, str]:
-        return {m.name: m.role for m in self.members}
+        out = {}
+        for m in self.members:
+            role = m.role
+            if m.warming_until > self.clock.now:
+                role += ":warming"
+            elif m.draining:
+                role += ":draining"
+            out[m.name] = role
+        return out
 
     def in_flight(self) -> int:
         return (len(self.pending)
@@ -327,7 +378,7 @@ class Orchestrator(BackendBase):
 
     def _free_capacity(self) -> int:
         """Decode slots available for NEW prefill admissions."""
-        return sum(u.free_slots for u in self.decode_units()) \
+        return sum(u.free_slots for u in self._placeable_units()) \
             - self._reserved
 
     # -- submission / routing (the ServingBackend surface) ----------------
@@ -450,10 +501,13 @@ class Orchestrator(BackendBase):
         request (or, with a fair-share scheduler, the WFQ-ordered slice
         capacity can serve) onto a prefill member's queue using live load
         snapshots (queue-delay-aware), then kick idle members."""
+        members = [m for m in self.prefill_members()
+                   if self._serving_member(m)]
+        if not members:
+            return                   # whole tier warming/draining: wait
         release = (self._sched_release() if self.scheduler is not None
                    else list(self.pending))
         if release:
-            members = self.prefill_members()
             loads = live_instance_loads([m.prefill for m in members])
             budget = max(self.ecfg.max_batch * self.ecfg.max_len, 1)
             infos = [RequestInfo(
@@ -497,6 +551,8 @@ class Orchestrator(BackendBase):
     def _kick_prefills(self) -> None:
         self._resume_swapped()
         for m in self.prefill_members():
+            if m.warming_until > self.clock.now:
+                continue       # wakes via its "warmed" event
             if not m.busy and (m._wavegen is not None or m.prefill.queue):
                 self.clock.push(self.clock.now, "prefill", m.name)
 
@@ -562,7 +618,7 @@ class Orchestrator(BackendBase):
         _, orig = self._resume_of.pop(clone.rid)
         if orig.outcome is not None:
             return                     # aborted while recomputing
-        tgt = min((u for u in self.decode_units() if u.free_slots > 0),
+        tgt = min((u for u in self._placeable_units() if u.free_slots > 0),
                   key=lambda u: (u.active, u.kv_tokens, u.name))
         t_ov = self._account_handoff(orig, st)
         tgt.adopt(orig, st, int(orig.generated[-1]))
@@ -585,7 +641,7 @@ class Orchestrator(BackendBase):
             t_in = (self.store.swap_in(nbytes) if self.store is not None
                     else nbytes / self.ocfg.hw.host_bw)
             self.swap_io_s += t_in
-            tgt = min((u for u in self.decode_units()
+            tgt = min((u for u in self._placeable_units()
                        if u.free_slots > 0),
                       key=lambda u: (u.active, u.kv_tokens, u.name))
             tgt.adopt(req, st, tok)
@@ -642,13 +698,14 @@ class Orchestrator(BackendBase):
         ``spec_on`` gate makes the next ``step()`` obey it."""
         if unit is None or unit.name in self._unit_busy or unit.active == 0:
             return
+        hw = self._member_hw(self._unit_member(unit))
         ctx = unit.kv_tokens // max(unit.active, 1)
-        cost = A.decode_iter_time(self.cfg, max(ctx, 1), self.ocfg.hw,
+        cost = A.decode_iter_time(self.cfg, max(ctx, 1), hw,
                                   batch=unit.active)
         if self._spec_capable(unit):
             k = max(self.ecfg.spec_len, 1)
             spec_cost = A.speculative_decode_iter_time(
-                self.cfg, max(ctx, 1), self.ocfg.hw, batch=unit.active,
+                self.cfg, max(ctx, 1), hw, batch=unit.active,
                 k=k, draft_cfg=self.draft[0] if self.draft else None)
             e_tok = A.speculative_tokens_per_iter(
                 k, self._accept_estimate(unit))
@@ -664,7 +721,8 @@ class Orchestrator(BackendBase):
                            (unit.name, self._epoch.get(unit.name, 0)))
 
     def _arm_control(self) -> None:
-        if self.controller is not None and not self._control_armed:
+        if (self.controller is not None or self.autoscaler is not None) \
+                and not self._control_armed:
             self.clock.push_in(self.control_interval, "control")
             self._control_armed = True
 
@@ -684,6 +742,8 @@ class Orchestrator(BackendBase):
             return self._on_decode_done(*ev.payload)
         elif ev.kind == "control":
             self._on_control()
+        elif ev.kind == "warmed":
+            self._on_warmed(ev.payload)
         else:
             raise ValueError(f"unknown event kind {ev.kind!r}")
         return []
@@ -695,6 +755,11 @@ class Orchestrator(BackendBase):
         if m is None or m.role != ROLE_PREFILL or m.busy:
             return
         if m._wavegen is None:
+            if m.draining:
+                # a draining member finishes its in-flight wave but never
+                # starts another; retires once idle
+                self._try_retire_member(m)
+                return
             n = min(self.ocfg.prefill_chunk, len(m.prefill.queue),
                     self._free_capacity())
             if n <= 0:
@@ -724,8 +789,8 @@ class Orchestrator(BackendBase):
         if m._wave_left <= 0:
             m._wavegen = None
             m._batch = []
-        cost = A.prefill_time(self.cfg, wave["padded_len"], self.ocfg.hw,
-                              batch=wave["rows"],
+        cost = A.prefill_time(self.cfg, wave["padded_len"],
+                              self._member_hw(m), batch=wave["rows"],
                               efficiency=self.ocfg.efficiency)
         m.busy = True
         self.clock.push_in(cost, "prefill_done", (name, done))
@@ -744,7 +809,7 @@ class Orchestrator(BackendBase):
             req.advance(Phase.TRANSFER)
             # ties broken by unit name so target selection is
             # deterministic across re-rolls and fleet orderings
-            tgt = min((u for u in self.decode_units()
+            tgt = min((u for u in self._placeable_units()
                        if u.free_slots > 0),
                       key=lambda u: (u.active, u.kv_tokens, u.name))
             shared: List[int] = []
@@ -767,6 +832,8 @@ class Orchestrator(BackendBase):
         if m is not None and m.role == ROLE_PREFILL and \
                 (m._wavegen is not None or m.prefill.queue):
             self.clock.push(self.clock.now, "prefill", m.name)
+        if m is not None and m.draining:
+            self._try_retire_member(m)
 
     def _on_decode_done(self, name: str, epoch: int) -> List[Request]:
         self._unit_busy.discard(name)
@@ -805,8 +872,184 @@ class Orchestrator(BackendBase):
         self._control_armed = False
         if self.controller is not None:
             self._control()
+        self._autoscale_tick()
+        for m in [m for m in self.members if m.draining]:
+            self._try_retire_member(m)
+        if self.autoscaler is not None:
+            self.metrics.record_util(self.clock.now, {
+                d.device: d.utilization for d in self._device_loads()})
         if self.in_flight() > 0 or self.clock:
             self._arm_control()
+
+    # -- autoscaling hooks (api.BackendBase._autoscale_tick drives these) --
+    def set_autoscaler(self, policy) -> None:
+        if policy is not None and self.ocfg.decode_split != 1:
+            raise ValueError("autoscaling requires decode_split == 1 "
+                             "(span pipelines scale by re-slicing, not "
+                             "by spawn/retire)")
+        super().set_autoscaler(policy)
+
+    def _on_warmed(self, name: str) -> None:
+        """A spawned member finished its billed warm-up (weights streamed
+        host→device + jit) and starts taking traffic."""
+        if name not in self._by_name:
+            return
+        self._record_fleet()
+        self._dispatch()
+
+    def _fleet_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for m in self.members:
+            if m.warming_until > self.clock.now:
+                k = "warming"
+            elif m.draining:
+                k = "draining"
+            else:
+                k = m.role
+            out[k] = out.get(k, 0) + 1
+        return out
+
+    def _autoscale_signals(self):
+        from .autoscale import FleetSignals, TierSignals
+        now = self.clock.now
+        warm = {"prefill": 0, "decode": 0}
+        drain = {"prefill": 0, "decode": 0}
+        act_p: List[_Member] = []
+        act_d: List[_Member] = []
+        for m in self.members:
+            if m.warming_until > now:
+                warm[m.role] += 1
+            elif m.draining:
+                drain[m.role] += 1
+            elif m.role == ROLE_PREFILL:
+                act_p.append(m)
+            elif m.pipe is None or m.stage == 0:
+                act_d.append(m)        # pipelines count once (lead stage)
+        backlog_p = len(self.pending) + sum(
+            len(m.prefill.queue) for m in act_p)
+        qd_p = util_p = 0.0
+        if act_p:
+            reps = [m.load_report() for m in act_p]
+            qd_p = sum(r.queue_delay_s for r in reps) / len(act_p)
+            util_p = sum(min(r.compute_frac, 1.0)
+                         for r in reps) / len(act_p)
+        qd_p += sum(A.prefill_time(self.cfg, r.prompt_len, self.ocfg.hw,
+                                   efficiency=self.ocfg.efficiency)
+                    for r in self.pending) / max(len(act_p), 1)
+        prefill = TierSignals(
+            n_active=len(act_p), n_warming=warm["prefill"],
+            n_draining=drain["prefill"], util=util_p,
+            queue_delay_s=qd_p, backlog=backlog_p)
+        units = [m.unit for m in act_d]
+        active = sum(u.active for u in units)
+        total = sum(u.active + u.free_slots for u in units)
+        backlog_d = len(self._swapped)
+        qd_d = 0.0
+        if backlog_d and active:
+            ctx = sum(u.kv_tokens for u in units) / active
+            t_iter = A.decode_iter_time(
+                self.cfg, max(int(ctx), 1), self.ocfg.hw,
+                batch=max(active // max(len(units), 1), 1))
+            rem = sum(r.max_new_tokens - len(r.generated)
+                      for u in units for r in u.slots if r is not None)
+            qd_d = (rem / max(active, 1)) * t_iter * backlog_d \
+                / max(len(units), 1)
+        decode = TierSignals(
+            n_active=len(act_d), n_warming=warm["decode"],
+            n_draining=drain["decode"],
+            util=active / max(total, 1),
+            queue_delay_s=qd_d, backlog=backlog_d)
+        return FleetSignals(t=now, prefill=prefill, decode=decode)
+
+    def _scale_up(self, role: str, profile=None) -> Optional[str]:
+        """Spawn a live engine for ``role``.  The member exists (and
+        costs instance-seconds) immediately, but takes no traffic until
+        its warm-up — full weight set streamed at the part's DMA
+        bandwidth plus jit — elapses on the virtual clock."""
+        if role == ROLE_DECODE and self.ocfg.decode_split != 1:
+            return None
+        hw = profile or self.ocfg.hw
+        self._scale_seq += 1
+        name = f"{role}-s{self._scale_seq}"
+        m = _Member(name, role, hw=hw)
+        if role == ROLE_PREFILL:
+            m.prefill = self._new_prefill(name, hw)
+        else:
+            m.decode = DecodeEngine(self.cfg, self.params,
+                                    self._ecfg_for(hw), name=name,
+                                    draft=self.draft)
+            if self.prefix_sharing and m.decode.paged:
+                m.decode.attach_store(self.store)
+        jit_s = (self.autoscaler.cfg.jit_compile_s
+                 if self.autoscaler is not None else 2.0)
+        m.warming_until = self.clock.now + A.instance_warmup_time(
+            self.cfg, hw, jit_compile_s=jit_s)
+        self.members.append(m)
+        self._by_name[name] = m
+        self.clock.push(m.warming_until, "warmed", name)
+        return name
+
+    def _scale_down(self, role: str) -> bool:
+        """Start draining the least-loaded serving member of ``role``.
+        Prefill: queued requests re-route centrally, the in-flight wave
+        finishes, then the member retires.  Decode: residents move to
+        peers via extract/adopt (exact pytree surgery — token streams
+        bit-identical), then the member retires."""
+        if role == ROLE_PREFILL:
+            cands = [m for m in self.prefill_members()
+                     if self._serving_member(m)]
+            if len(cands) <= max(self.ocfg.min_prefill, 1):
+                return False
+            victim = min(cands, key=lambda m: (
+                len(m.prefill.queue), m.tokens_prefilled))
+            victim.draining = True
+            if victim.prefill.queue:
+                self.pending.extendleft(reversed(victim.prefill.queue))
+                victim.prefill.queue.clear()
+                self._dispatch()
+            self._try_retire_member(victim)
+            return True
+        cands = [m for m in self.decode_members()
+                 if self._serving_member(m) and m.pipe is None]
+        if len(cands) <= max(self.ocfg.min_decode, 1):
+            return False
+        victim = min(cands, key=lambda m: (m.decode.active,
+                                           m.decode.kv_tokens))
+        victim.draining = True
+        spare = sum(u.free_slots for u in self._placeable_units()) \
+            - self._reserved
+        if victim.decode.active > spare:
+            victim.draining = False
+            return False        # residents would not fit on the peers
+        self._epoch[victim.name] = self._epoch.get(victim.name, 0) + 1
+        self._unit_busy.discard(victim.name)
+        for req, st, tok in victim.decode.drain():
+            tgt = min((u for u in self._placeable_units()
+                       if u.free_slots > 0),
+                      key=lambda u: (u.active, u.kv_tokens, u.name))
+            t_ov = self._account_handoff(req, st)
+            tgt.adopt(req, st, tok)
+            self.clock.push_in(t_ov, "decode_kick", tgt.name)
+        if self.store is not None:
+            self.store.detach_pool(victim.name)
+        self._try_retire_member(victim)
+        return True
+
+    def _try_retire_member(self, m: _Member) -> bool:
+        """Remove a drained member once nothing references it."""
+        if not m.draining or m.name not in self._by_name:
+            return False
+        if m.role == ROLE_PREFILL:
+            if m.busy or m._wavegen is not None or m.prefill.queue:
+                return False
+        elif m.decode is not None and (m.decode.active > 0
+                                       or m.name in self._unit_busy):
+            return False
+        self.members.remove(m)
+        del self._by_name[m.name]
+        self.retired.append(m)
+        self._record_fleet()
+        return True
 
     # -- public drive ------------------------------------------------------
     def run(self, reqs: Sequence[Request],
@@ -827,6 +1070,8 @@ class Orchestrator(BackendBase):
     def _device_loads(self) -> List[DeviceLoad]:
         out = []
         for m in self.members:
+            if not self._serving_member(m):
+                continue   # the migration controller leaves them alone
             r = m.load_report()
             out.append(DeviceLoad(
                 device=m.name, compute_frac=r.compute_frac,
@@ -861,6 +1106,8 @@ class Orchestrator(BackendBase):
             return False       # pipeline stages re-slice spans, not roles
         if member.role == new_role:
             return False
+        if not self._serving_member(member):
+            return False       # autoscaler owns warming/draining members
         if member.role == ROLE_PREFILL:
             if len(self.prefill_members()) <= self.ocfg.min_prefill:
                 return False
@@ -871,7 +1118,7 @@ class Orchestrator(BackendBase):
                 return False
             # resident KV must fit on the remaining decode peers, net of
             # slots already reserved by in-flight prefill batches
-            spare = sum(u.free_slots for u in self.decode_units()
+            spare = sum(u.free_slots for u in self._placeable_units()
                         if u is not member.unit) - self._reserved
             if member.decode.active > spare:
                 return False
@@ -980,7 +1227,7 @@ class Orchestrator(BackendBase):
             # decode -> prefill: evacuate resident KV to decode peers first
             # (the migrated layers' serving state moves with them)
             for req, st, tok in member.decode.drain():
-                tgt = min((u for u in self.decode_units()
+                tgt = min((u for u in self._placeable_units()
                            if u is not member.unit and u.free_slots > 0),
                           key=lambda u: (u.active, u.name))
                 tgt.adopt(req, st, tok)
@@ -1048,6 +1295,9 @@ class Orchestrator(BackendBase):
         s["handoffs"] = self.n_handoffs
         s["handoff_serial_s"] = self.handoff_serial_s
         s["handoff_overlap_s"] = self.handoff_overlap_s
+        if self.autoscaler is not None:
+            s["autoscale_decisions"] = len(self.autoscaler.decisions)
+            s["n_retired"] = len(self.retired)
         if self.scheduler is not None:
             s["scheduler"] = self.scheduler.cfg.policy
             s["sched_rejections"] = dict(self.scheduler.rejections)

@@ -231,6 +231,15 @@ class Metrics:
     decode_iters: int = 0
     spec_proposed: int = 0
     spec_accepted: int = 0
+    # elasticity dimension: stepwise fleet-size timeline (autoscaler events
+    # append (t, {"prefill": n, "decode": n, "warming": n, "draining": n}))
+    # and per-instance utilization samples from control ticks.  Warming and
+    # draining instances are *provisioned* — they cost instance-seconds
+    # without serving, which is exactly how warm-up is billed.
+    fleet_timeline: List[Tuple[float, Dict[str, int]]] = dataclasses.field(
+        default_factory=list)
+    util_timeline: List[Tuple[float, Dict[str, float]]] = dataclasses.field(
+        default_factory=list)
 
     def tenant(self, name: str) -> TenantStats:
         ts = self.per_tenant.get(name)
@@ -286,6 +295,35 @@ class Metrics:
         self.spec_accepted += r.spec_accepted
         ts.spec_proposed += r.spec_proposed
         ts.spec_accepted += r.spec_accepted
+
+    def record_fleet(self, t: float, counts: Dict[str, int]):
+        """Log a fleet-composition change (scale-up ordered, instance
+        warmed, drain started, instance retired).  Consecutive identical
+        snapshots are dropped — they cannot change the integral."""
+        if self.fleet_timeline and self.fleet_timeline[-1][1] == counts:
+            return
+        self.fleet_timeline.append((t, dict(counts)))
+
+    def record_util(self, t: float, utils: Dict[str, float]):
+        """Sample per-instance utilization (control-tick cadence).  An
+        empty dict is a legal sample: it marks a zero-fleet window."""
+        self.util_timeline.append((t, dict(utils)))
+
+    def instance_seconds(self, until: Optional[float] = None) -> float:
+        """Stepwise integral of the provisioned-instance count over the
+        fleet timeline — the cost axis of the autoscaling A/B (an
+        instance bills from the moment it is *ordered*, through warm-up
+        and drain, until retired).  0.0 when nothing was ever recorded."""
+        if not self.fleet_timeline:
+            return 0.0
+        t_stop = max(until if until is not None else self.t_end,
+                     self.fleet_timeline[-1][0])
+        total = 0.0
+        for i, (t, counts) in enumerate(self.fleet_timeline):
+            t_next = (self.fleet_timeline[i + 1][0]
+                      if i + 1 < len(self.fleet_timeline) else t_stop)
+            total += sum(counts.values()) * max(t_next - t, 0.0)
+        return total
 
     def record_preempted(self, r: Request, mode: str, pages: int = 0):
         """A decode-resident request lost its slot to the fair-share
@@ -355,6 +393,21 @@ class Metrics:
         s["spec_accepted"] = self.spec_accepted
         s["acceptance_rate"] = (self.spec_accepted / self.spec_proposed
                                 if self.spec_proposed else None)
+        # elasticity: provisioned-fleet cost and size envelope.  All None
+        # (never NaN) when no fleet events were recorded — static fleets
+        # that predate the autoscaler keep their old summaries unchanged.
+        if self.fleet_timeline:
+            sizes = [sum(c.values()) for _, c in self.fleet_timeline]
+            secs = self.instance_seconds()
+            span = max(self.fleet_timeline[-1][0], self.t_end) \
+                - self.fleet_timeline[0][0]
+            s["instance_seconds"] = secs
+            s["fleet_peak"] = max(sizes)
+            s["fleet_min"] = min(sizes)
+            s["fleet_mean"] = secs / span if span > 0 else float(sizes[-1])
+            s["n_scale_events"] = len(self.fleet_timeline) - 1
+        utils = [u for _, us in self.util_timeline for u in us.values()]
+        s["mean_instance_util"] = _mean(utils) if utils else None
         s["tenants"] = {t: ts.summary(self.slo, dur)
                         for t, ts in sorted(self.per_tenant.items())}
         return s

@@ -17,6 +17,7 @@ where prefix-cache-aware routing skews load (Fig. 2a).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -29,6 +30,14 @@ class WorkloadConfig:
     kind: str = "alpaca"            # alpaca | longbench | synthetic
     rps: float = 5.0
     n_requests: int = 100
+    # time-varying arrival intensity: ((duration_s, rps), ...) segments
+    # cycled forever — a piecewise-constant λ(t) for diurnal / ramp
+    # scenarios.  None keeps the homogeneous-Poisson path (``rps``)
+    # byte-identical under seed.  Build sinusoidal days with
+    # ``diurnal_schedule``; arrivals come from Lewis-Shedler thinning
+    # against max λ, so the process stays an exact (inhomogeneous)
+    # Poisson process and deterministic per seed.
+    rate_schedule: Optional[Tuple[Tuple[float, float], ...]] = None
     vocab_size: int = 512
     seed: int = 0
     max_new_tokens: int = 512
@@ -101,15 +110,64 @@ def _make_request(cfg: WorkloadConfig, rng: np.random.Generator, rid: int,
                    prompt=prompt, tenant=tenant)
 
 
+def diurnal_schedule(period_s: float, lo_rps: float, hi_rps: float,
+                     n_segments: int = 24
+                     ) -> Tuple[Tuple[float, float], ...]:
+    """One sinusoidal 'day' as a piecewise-constant ``rate_schedule``:
+    λ(t) sweeps trough→peak→trough over ``period_s``, sampled at segment
+    midpoints.  Cycled forever by ``generate``, so one tuple describes
+    arbitrarily many days."""
+    assert n_segments >= 2 and period_s > 0 and 0 < lo_rps <= hi_rps
+    seg = period_s / n_segments
+    mid = lo_rps + (hi_rps - lo_rps) / 2.0
+    amp = (hi_rps - lo_rps) / 2.0
+    return tuple(
+        (seg, mid - amp * math.cos(2.0 * math.pi * (i + 0.5) / n_segments))
+        for i in range(n_segments))
+
+
+def rate_at(cfg: WorkloadConfig, t: float) -> float:
+    """Instantaneous arrival intensity λ(t) of the configured process."""
+    if cfg.rate_schedule is None:
+        return cfg.rps
+    total = sum(d for d, _ in cfg.rate_schedule)
+    t = t % total if total > 0 else 0.0
+    for dur, rps in cfg.rate_schedule:
+        if t < dur:
+            return rps
+        t -= dur
+    return cfg.rate_schedule[-1][1]
+
+
+def _next_arrival(cfg: WorkloadConfig, rng: np.random.Generator,
+                  t: float, rate_max: Optional[float]) -> float:
+    """The next arrival after ``t``: one exponential gap when the process
+    is homogeneous (``rate_max`` None — the historical draw order, so
+    seeded streams stay byte-identical), else Lewis-Shedler thinning —
+    candidate gaps at the peak rate, accepted w.p. λ(t)/λ_max, which
+    yields an exact inhomogeneous Poisson process."""
+    if rate_max is None:
+        return t + rng.exponential(1.0 / cfg.rps)
+    while True:
+        t += rng.exponential(1.0 / rate_max)
+        if rng.random() * rate_max <= rate_at(cfg, t):
+            return t
+
+
 def generate(cfg: WorkloadConfig) -> List[Request]:
-    """Open-loop client: Poisson arrival process with shared-prefix
-    groups — the arrival rate is fixed regardless of service speed."""
+    """Open-loop client: (inhomogeneous) Poisson arrival process with
+    shared-prefix groups — the arrival rate is fixed (or follows
+    ``rate_schedule``) regardless of service speed."""
     rng = np.random.default_rng(cfg.seed)
     group_prefix_tokens, pop = _prefix_pool(cfg, rng)
+    rate_max = (max(r for _, r in cfg.rate_schedule)
+                if cfg.rate_schedule is not None else None)
+    assert rate_max is None or rate_max > 0, \
+        "rate_schedule needs at least one positive rate"
     reqs: List[Request] = []
     t = 0.0
     for rid in range(cfg.n_requests):
-        t += rng.exponential(1.0 / cfg.rps)
+        t = _next_arrival(cfg, rng, t, rate_max)
         reqs.append(_make_request(cfg, rng, rid, t, group_prefix_tokens,
                                   pop))
     return reqs

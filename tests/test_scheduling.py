@@ -72,3 +72,29 @@ def test_round_robin_cycles():
     insts = _insts(3)
     plan = RoundRobinRouter().dispatch(_reqs(6), insts)
     assert [plan[i] for i in range(6)] == ["p0", "p1", "p2"] * 2
+
+
+def test_preempt_penalty_steers_away_from_risky_target():
+    """Preemption-aware routing: a lower-utilization instance that would
+    evict a resident loses to a busier one with free room once the rank
+    penalty covers the load gap; penalty 0 is risk-blind."""
+    def fleet():
+        return [InstanceLoad("risky", load=0.30, queue_len=0,
+                             preempt_risk=1.0),
+                InstanceLoad("safe", load=0.55, queue_len=0,
+                             preempt_risk=0.0)]
+    req = [RequestInfo(0, 100, est_load=0.1)]
+    blind = LoadAwareRouter(preempt_penalty=0.0).dispatch(req, fleet())
+    assert blind[0] == "risky"          # pure load ranking
+    aware = LoadAwareRouter(preempt_penalty=1.0).dispatch(req, fleet())
+    assert aware[0] == "safe"           # 0.30+1.0 ranks above 0.55
+
+
+def test_preempt_penalty_irrelevant_when_all_risky():
+    """When the whole fleet would evict, the penalty shifts every rank
+    uniformly — placement falls back to plain load order."""
+    insts = [InstanceLoad("a", load=0.6, queue_len=0, preempt_risk=1.0),
+             InstanceLoad("b", load=0.2, queue_len=0, preempt_risk=1.0)]
+    plan = LoadAwareRouter(preempt_penalty=1.0).dispatch(
+        [RequestInfo(0, 100, est_load=0.1)], insts)
+    assert plan[0] == "b"

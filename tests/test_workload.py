@@ -11,7 +11,8 @@ open-loop draw.
 import numpy as np
 
 from repro.serving.workload import (ClosedLoopClients, WorkloadConfig,
-                                    generate, merge_workloads)
+                                    diurnal_schedule, generate,
+                                    merge_workloads, rate_at)
 
 
 def _cfg(**kw):
@@ -82,3 +83,60 @@ def test_closed_loop_does_not_replay_open_loop_prompts():
                                                             b.prompt)
         for a, b in zip(open_loop, closed))
     assert replayed == 0
+
+
+# ---------------------------------------------------------------------------
+# time-varying arrival rates (rate_schedule / diurnal_schedule)
+# ---------------------------------------------------------------------------
+
+def test_rate_schedule_deterministic_per_seed():
+    cfg = _cfg(n_requests=200,
+               rate_schedule=diurnal_schedule(60.0, 5.0, 80.0))
+    a, b = generate(cfg), generate(cfg)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    for x, y in zip(a, b):
+        assert x.max_new_tokens == y.max_new_tokens
+        assert np.array_equal(x.prompt, y.prompt)
+
+
+def test_diurnal_schedule_concentrates_arrivals_at_peak():
+    """Thinning must actually modulate intensity: the peak half of each
+    period should receive far more arrivals than the trough half."""
+    period = 100.0
+    cfg = _cfg(n_requests=2000,
+               rate_schedule=diurnal_schedule(period, 2.0, 50.0))
+    # diurnal_schedule sweeps trough->peak->trough: the middle two
+    # quarters of every period are the high-rate half
+    peak = trough = 0
+    for r in generate(cfg):
+        phase = (r.arrival % period) / period
+        if 0.25 <= phase < 0.75:
+            peak += 1
+        else:
+            trough += 1
+    assert peak > 3 * trough, (peak, trough)
+
+
+def test_rate_at_piecewise_lookup_and_cycling():
+    cfg = _cfg(rate_schedule=((10.0, 4.0), (5.0, 20.0)))
+    assert rate_at(cfg, 0.0) == 4.0
+    assert rate_at(cfg, 9.99) == 4.0
+    assert rate_at(cfg, 10.0) == 20.0
+    assert rate_at(cfg, 14.9) == 20.0
+    assert rate_at(cfg, 15.0) == 4.0          # cycles forever
+    assert rate_at(cfg, 25.0) == 20.0
+    none_cfg = _cfg(rps=7.5)
+    assert rate_at(none_cfg, 123.0) == 7.5    # homogeneous fallback
+
+
+def test_none_schedule_keeps_historical_draw_order():
+    """rate_schedule=None must stay byte-identical to the pre-schedule
+    generator (one exponential gap per arrival, no thinning draws) —
+    golden-pinned so the contract can't silently drift."""
+    rs = generate(_cfg(n_requests=6))
+    golden_arrivals = [0.005872157386, 0.012940663483, 0.013070833667,
+                       0.029369151888, 0.032167113534, 0.040459424338]
+    for r, t in zip(rs, golden_arrivals):
+        assert abs(r.arrival - t) < 1e-10, (r.rid, r.arrival, t)
+    assert [len(r.prompt) for r in rs] == [15, 23, 14, 19, 8, 10]
+    assert [r.max_new_tokens for r in rs] == [21, 21, 27, 28, 16, 31]
